@@ -1,0 +1,121 @@
+"""Paper Figs. 1-2: MSE of similarity estimates vs compression length N,
+across similarity regimes, BinSketch vs all baselines.
+
+Reports -log(MSE) for Jaccard/Cosine (higher better, as in Fig. 2) and raw
+MSE for inner product (lower better, Fig. 1). Synthetic corpora matched to
+the paper's dataset statistics (DESIGN.md §7 note 4).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import BinSketchConfig, estimators, make_mapping, sketch_indices
+from repro.core.baselines import bcs, cbe, doph, minhash, oddsketch, simhash
+from repro.data.synthetic import DATASETS, generate_similar_pairs
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _pairs(dataset: str, jacc: float, n_pairs: int):
+    spec = DATASETS[dataset]
+    a, b, js = generate_similar_pairs(spec, jacc, n_pairs, seed=17)
+    sa = (a >= 0).sum(1)
+    sb = (b >= 0).sum(1)
+    ip = (js[0] * (sa + sb) / (1 + js[0])).round()
+    cos = ip / np.sqrt(sa * sb)
+    return spec, jnp.asarray(a), jnp.asarray(b), js, ip, cos
+
+
+def _mse(est: np.ndarray, true: np.ndarray) -> float:
+    return float(np.mean((np.asarray(est, np.float64) - true) ** 2))
+
+
+def run(dataset="kos", n_list=(256, 512, 1024, 2048), thresholds=(0.9, 0.5), n_pairs=64):
+    rows: List[Dict] = []
+    for jacc in thresholds:
+        spec, a, b, js, ip_t, cos_t = _pairs(dataset, jacc, n_pairs)
+        for n_bins in n_list:
+            # --- BinSketch: one sketch, all measures
+            cfg = BinSketchConfig(d=spec.d, n_bins=n_bins)
+            mapping = make_mapping(cfg, KEY)
+            ska = sketch_indices(cfg, mapping, a)
+            skb = sketch_indices(cfg, mapping, b)
+            na, nb, nab = (
+                estimators.pairwise_counts(ska, skb)[0],
+                estimators.pairwise_counts(skb, ska)[0],
+                None,
+            )
+            from repro.core import packed as pk
+
+            na = pk.row_popcount(ska)
+            nb = pk.row_popcount(skb)
+            nab = pk.row_popcount(ska & skb)
+            est = estimators.estimates_from_counts(na, nb, nab, n_bins)
+            rows.append(
+                dict(algo="binsketch", N=n_bins, J=jacc,
+                     mse_ip=_mse(est["ip"], ip_t),
+                     mse_js=_mse(est["jaccard"], js),
+                     mse_cos=_mse(est["cosine"], cos_t))
+            )
+            # --- BCS
+            m = bcs.make_mapping(spec.d, n_bins, KEY)
+            e = bcs.estimates(bcs.sketch_indices(m, n_bins, a), bcs.sketch_indices(m, n_bins, b), n_bins)
+            rows.append(dict(algo="bcs", N=n_bins, J=jacc, mse_ip=_mse(e["ip"], ip_t),
+                             mse_js=_mse(e["jaccard"], js), mse_cos=_mse(e["cosine"], cos_t)))
+            # --- MinHash (k = N minwise values; 32-bit each — the paper
+            # compares at equal N "compression length")
+            h = minhash.make_hashes(n_bins, KEY)
+            mha, sza = minhash.sketch_indices(h, a)
+            mhb, szb = minhash.sketch_indices(h, b)
+            e = minhash.estimates(mha, mhb, sza, szb)
+            rows.append(dict(algo="minhash", N=n_bins, J=jacc, mse_ip=_mse(e["ip"], ip_t),
+                             mse_js=_mse(e["jaccard"], js), mse_cos=_mse(e["cosine"], cos_t)))
+            # --- DOPH
+            dh = doph.make_hashes(KEY)
+            da, sza = doph.sketch_indices(dh, n_bins, a)
+            db_, szb = doph.sketch_indices(dh, n_bins, b)
+            e = doph.estimates(da, db_, sza, szb)
+            rows.append(dict(algo="doph", N=n_bins, J=jacc, mse_ip=_mse(e["ip"], ip_t),
+                             mse_js=_mse(e["jaccard"], js), mse_cos=_mse(e["cosine"], cos_t)))
+            # --- OddSketch
+            k = oddsketch.suggested_k(n_bins, jacc)
+            oh = oddsketch.make_hashes(k, KEY)
+            e = oddsketch.estimates(
+                oddsketch.sketch_indices(oh, n_bins, a),
+                oddsketch.sketch_indices(oh, n_bins, b), n_bins, k)
+            rows.append(dict(algo="oddsketch", N=n_bins, J=jacc, mse_ip=None,
+                             mse_js=_mse(e["jaccard"], js), mse_cos=None))
+            # --- SimHash
+            sh = simhash.make_hashes(n_bins, KEY)
+            e = simhash.estimates(simhash.sketch_indices(sh, a), simhash.sketch_indices(sh, b))
+            rows.append(dict(algo="simhash", N=n_bins, J=jacc, mse_ip=None, mse_js=None,
+                             mse_cos=_mse(e["cosine"], cos_t)))
+            # --- CBE
+            cp = cbe.make_params(spec.d, KEY)
+            e = cbe.estimates(cbe.sketch_indices(cp, n_bins, spec.d, a),
+                              cbe.sketch_indices(cp, n_bins, spec.d, b))
+            rows.append(dict(algo="cbe", N=n_bins, J=jacc, mse_ip=None, mse_js=None,
+                             mse_cos=_mse(e["cosine"], cos_t)))
+    return rows
+
+
+def main(argv=None):
+    t0 = time.time()
+    rows = run()
+    print("algo,N,J,mse_ip,neglog_mse_js,neglog_mse_cos")
+    for r in rows:
+        nl = lambda v: f"{-np.log(max(v, 1e-12)):.2f}" if v is not None else ""
+        ip = f"{r['mse_ip']:.3f}" if r["mse_ip"] is not None else ""
+        print(f"{r['algo']},{r['N']},{r['J']},{ip},{nl(r['mse_js'])},{nl(r['mse_cos'])}")
+    print(f"# bench_mse done in {time.time()-t0:.1f}s")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,107 @@
+"""Paper Fig. 4: ranking accuracy / F1 on the retrieval task.
+
+90/10 corpus/query split; ground truth = exact-similarity threshold sets;
+compressed-domain results compared via accuracy / precision / recall / F1
+(paper §IV-B definitions), BinSketch vs BCS vs MinHash at equal N.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import BinSketchConfig, estimators, make_mapping, sketch_indices
+from repro.core.baselines import bcs, minhash
+from repro.data.synthetic import DATASETS, generate_corpus, generate_similar_pairs
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _exact_jaccard_matrix(q_idx, c_idx):
+    qb = q_idx >= 0
+    cb = c_idx >= 0
+    sizes_q = qb.sum(1)
+    sizes_c = cb.sum(1)
+    inter = np.zeros((len(q_idx), len(c_idx)), np.int32)
+    c_sets = [set(r[r >= 0].tolist()) for r in c_idx]
+    for i, q in enumerate(q_idx):
+        qs = set(q[q >= 0].tolist())
+        inter[i] = [len(qs & cs) for cs in c_sets]
+    union = sizes_q[:, None] + sizes_c[None, :] - inter
+    return inter / np.maximum(union, 1)
+
+
+def _prf(truth: np.ndarray, pred: np.ndarray):
+    tp = (truth & pred).sum()
+    o = truth.sum()
+    o2 = pred.sum()
+    union = (truth | pred).sum()
+    acc = tp / max(union, 1)
+    prec = tp / max(o2, 1)
+    rec = tp / max(o, 1)
+    f1 = 2 * prec * rec / max(prec + rec, 1e-9)
+    return acc, prec, rec, f1
+
+
+def run(dataset="tiny", n_bins=512, thresholds=(0.8, 0.5, 0.2), seed=5):
+    spec = DATASETS[dataset]
+    idx, _ = generate_corpus(spec, seed=seed)
+    # plant similar pairs so high thresholds are populated (synthetic
+    # corpora lack natural near-duplicates; paper corpora have them)
+    a, b, _ = generate_similar_pairs(spec, 0.85, 24, seed=seed)
+    corpus = np.concatenate([idx[: spec.n_points - 24], a])
+    n = len(corpus)
+    q_rows = np.arange(n - 24, n)  # queries = the planted partners
+    queries = b[:24]
+    sims_true = _exact_jaccard_matrix(queries, corpus)
+
+    cfg = BinSketchConfig(d=spec.d, n_bins=n_bins)
+    mapping = make_mapping(cfg, KEY)
+    skc = sketch_indices(cfg, mapping, jnp.asarray(corpus))
+    skq = sketch_indices(cfg, mapping, jnp.asarray(queries))
+    sims_bin = np.asarray(estimators.pairwise_similarity(skq, skc, n_bins, "jaccard"))
+
+    bm = bcs.make_mapping(spec.d, n_bins, KEY)
+    skc_b = bcs.sketch_indices(bm, n_bins, jnp.asarray(corpus))
+    skq_b = bcs.sketch_indices(bm, n_bins, jnp.asarray(queries))
+    nq, nc = len(queries), n
+    sims_bcs = np.zeros((nq, nc), np.float32)
+    for i in range(nq):
+        e = bcs.estimates(jnp.broadcast_to(skq_b[i], skc_b.shape), skc_b, n_bins)
+        sims_bcs[i] = np.asarray(e["jaccard"])
+
+    mh = minhash.make_hashes(n_bins, KEY)
+    mhc, szc = minhash.sketch_indices(mh, jnp.asarray(corpus))
+    mhq, szq = minhash.sketch_indices(mh, jnp.asarray(queries))
+    sims_mh = np.zeros((nq, nc), np.float32)
+    for i in range(nq):
+        e = minhash.estimates(jnp.broadcast_to(mhq[i], mhc.shape), mhc,
+                              jnp.broadcast_to(szq[i], szc.shape), szc)
+        sims_mh[i] = np.asarray(e["jaccard"])
+
+    rows = []
+    for th in thresholds:
+        truth = sims_true >= th
+        for name, sims in (("binsketch", sims_bin), ("bcs", sims_bcs), ("minhash", sims_mh)):
+            acc, prec, rec, f1 = _prf(truth, sims >= th)
+            rows.append(dict(algo=name, N=n_bins, threshold=th, accuracy=acc,
+                             precision=prec, recall=rec, f1=f1))
+    return rows
+
+
+def main(argv=None):
+    t0 = time.time()
+    rows = run()
+    print("algo,N,threshold,accuracy,precision,recall,f1")
+    for r in rows:
+        print(f"{r['algo']},{r['N']},{r['threshold']},{r['accuracy']:.3f},"
+              f"{r['precision']:.3f},{r['recall']:.3f},{r['f1']:.3f}")
+    print(f"# bench_ranking done in {time.time()-t0:.1f}s")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,89 @@
+"""Render the §Roofline table from experiments/dryrun/*.json (deliverable g).
+
+    PYTHONPATH=src python -m benchmarks.bench_roofline [--mesh pod16x16] [--md]
+
+Per (arch x shape x mesh): the three roofline terms in seconds, the
+dominant term, MODEL_FLOPS/HLO_FLOPS (useful-compute ratio), and the
+per-device HBM bytes from memory_analysis.
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+HBM_PER_CHIP = 16e9  # v5e
+
+
+def load(dirname="experiments/dryrun"):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(dirname, "*.json"))):
+        with open(path) as f:
+            rows.append(json.load(f))
+    return rows
+
+
+def fmt_row(r):
+    t = dict(r["roofline_seconds"])
+    upper = t.pop("memory_upper", None)
+    dom = max(t, key=t.get)
+    ratio = r.get("useful_flops_ratio")
+    mem_gb = (r["memory"]["argument_bytes"] + r["memory"]["temp_bytes"]) / 1e9
+    return {
+        "arch": r["arch"],
+        "shape": r["shape"],
+        "mesh": r["mesh"],
+        "skip": "SKIP†" if r.get("skip_official") else "",
+        "compute_s": t["compute"],
+        "memory_s": t["memory"],
+        "memory_upper_s": upper,
+        "collective_s": t["collective"],
+        "dominant": dom,
+        "useful": f"{ratio:.2f}" if ratio else "-",
+        "mem_GB_dev": mem_gb,
+        "fits_hbm": "Y" if mem_gb < HBM_PER_CHIP / 1e9 else "OVER",
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default=None, help="pod16x16 | pod2x16x16 | None=both")
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--md", action="store_true", help="markdown table")
+    args = ap.parse_args(argv)
+
+    rows = [fmt_row(r) for r in load(args.dir)]
+    if args.mesh:
+        rows = [r for r in rows if r["mesh"] == args.mesh]
+    rows.sort(key=lambda r: (r["arch"], r["shape"], r["mesh"]))
+
+    def up(r):
+        return f"{r['memory_upper_s']:.3g}" if r.get("memory_upper_s") is not None else "-"
+
+    if args.md:
+        print("| arch | shape | mesh | compute s | memory s (floor) | mem upper | collective s | dominant | useful | GB/dev | fits |")
+        print("|---|---|---|---|---|---|---|---|---|---|---|")
+        for r in rows:
+            print(
+                f"| {r['arch']} | {r['shape']}{r['skip']} | {r['mesh']} "
+                f"| {r['compute_s']:.3g} | {r['memory_s']:.3g} | {up(r)} | {r['collective_s']:.3g} "
+                f"| **{r['dominant']}** | {r['useful']} | {r['mem_GB_dev']:.1f} | {r['fits_hbm']} |"
+            )
+    else:
+        hdr = (f"{'arch':24s} {'shape':14s} {'mesh':11s} {'comp_s':>9s} {'mem_s':>9s} "
+               f"{'mem_up_s':>9s} {'coll_s':>9s} {'dominant':>10s} {'useful':>7s} {'GB/dev':>8s}")
+        print(hdr)
+        print("-" * len(hdr))
+        for r in rows:
+            print(
+                f"{r['arch']:24s} {r['shape'] + r['skip']:14s} {r['mesh']:11s} "
+                f"{r['compute_s']:9.3g} {r['memory_s']:9.3g} {up(r):>9s} {r['collective_s']:9.3g} "
+                f"{r['dominant']:>10s} {r['useful']:>7s} {r['mem_GB_dev']:8.1f}"
+            )
+    return rows
+
+
+if __name__ == "__main__":
+    main()

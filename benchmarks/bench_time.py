@@ -1,0 +1,81 @@
+"""Paper Fig. 3 / Table I: compression (dimensionality-reduction) time vs N.
+
+All sketchers run jitted on the same corpus; we report per-datapoint
+wall time. The paper's claim to reproduce: BinSketch ~ BCS << DOPH <
+MinHash/SimHash/OddSketch; CBE flat in N but high.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import BinSketchConfig, make_mapping, sketch_indices
+from repro.core.baselines import bcs, cbe, doph, minhash, oddsketch, simhash
+from repro.data.synthetic import DATASETS, generate_corpus
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _timeit(fn, *args, repeats=3):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return min(ts)
+
+
+def run(dataset="kos", n_list=(256, 512, 1024, 2048), n_docs=512):
+    spec = DATASETS[dataset]
+    idx_np, _ = generate_corpus(spec, seed=3)
+    idx = jnp.asarray(idx_np[:n_docs])
+    rows = []
+    for n_bins in n_list:
+        cfg = BinSketchConfig(d=spec.d, n_bins=n_bins)
+        mapping = make_mapping(cfg, KEY)
+        f = jax.jit(lambda ix: sketch_indices(cfg, mapping, ix))
+        rows.append(("binsketch", n_bins, _timeit(f, idx)))
+
+        bm = bcs.make_mapping(spec.d, n_bins, KEY)
+        f = jax.jit(lambda ix: bcs.sketch_indices(bm, n_bins, ix))
+        rows.append(("bcs", n_bins, _timeit(f, idx)))
+
+        dh = doph.make_hashes(KEY)
+        f = jax.jit(lambda ix: doph.sketch_indices(dh, n_bins, ix))
+        rows.append(("doph", n_bins, _timeit(f, idx)))
+
+        mh = minhash.make_hashes(n_bins, KEY)
+        f = jax.jit(lambda ix: minhash.sketch_indices(mh, ix))
+        rows.append(("minhash", n_bins, _timeit(f, idx)))
+
+        sh = simhash.make_hashes(n_bins, KEY)
+        f = jax.jit(lambda ix: simhash.sketch_indices(sh, ix))
+        rows.append(("simhash", n_bins, _timeit(f, idx)))
+
+        k = oddsketch.suggested_k(n_bins, 0.9)
+        oh = oddsketch.make_hashes(k, KEY)
+        f = jax.jit(lambda ix: oddsketch.sketch_indices(oh, n_bins, ix))
+        rows.append(("oddsketch", n_bins, _timeit(f, idx)))
+
+        cp = cbe.make_params(spec.d, KEY)
+        f = jax.jit(lambda ix: cbe.sketch_indices(cp, n_bins, spec.d, ix))
+        rows.append(("cbe", n_bins, _timeit(f, idx)))
+    return rows, n_docs
+
+
+def main(argv=None):
+    rows, n_docs = run()
+    print("algo,N,us_per_doc")
+    for algo, n, t in rows:
+        print(f"{algo},{n},{t / n_docs * 1e6:.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""Benchmark entry point — one harness per paper table/figure + roofline.
+
+    PYTHONPATH=src python -m benchmarks.run            # all
+    PYTHONPATH=src python -m benchmarks.run mse time   # subset
+
+Prints ``name,us_per_call,derived`` CSV summaries per harness.
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    which = set(sys.argv[1:]) or {"mse", "time", "ranking", "kernels", "roofline"}
+
+    if "mse" in which:
+        print("=" * 70)
+        print("## bench_mse — paper Figs. 1-2 (MSE of estimates vs N)")
+        from benchmarks import bench_mse
+
+        bench_mse.main()
+
+    if "time" in which:
+        print("=" * 70)
+        print("## bench_time — paper Fig. 3 / Table I (compression time vs N)")
+        from benchmarks import bench_time
+
+        bench_time.main()
+
+    if "ranking" in which:
+        print("=" * 70)
+        print("## bench_ranking — paper Fig. 4 (ranking acc/F1)")
+        from benchmarks import bench_ranking
+
+        bench_ranking.main()
+
+    if "kernels" in which:
+        print("=" * 70)
+        print("## bench_kernels — Pallas kernel vs oracle wall time (CPU interpret)")
+        from benchmarks import bench_kernels
+
+        bench_kernels.main()
+
+    if "roofline" in which:
+        print("=" * 70)
+        print("## bench_roofline — §Roofline table from dry-run artifacts")
+        import os
+
+        if os.path.isdir("experiments/dryrun_v2"):
+            from benchmarks import bench_roofline
+
+            print("### optimized defaults (experiments/dryrun_v2)")
+            bench_roofline.main(["--mesh", "pod16x16", "--dir", "experiments/dryrun_v2"])
+            if os.path.isdir("experiments/dryrun"):
+                print("\n### paper-faithful baseline (experiments/dryrun)")
+                bench_roofline.main(["--mesh", "pod16x16", "--dir", "experiments/dryrun"])
+        elif os.path.isdir("experiments/dryrun"):
+            from benchmarks import bench_roofline
+
+            bench_roofline.main(["--mesh", "pod16x16"])
+        else:
+            print("(experiments/dryrun missing — run `python -m repro.launch.dryrun --all` first)")
+
+
+if __name__ == "__main__":
+    main()

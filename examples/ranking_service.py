@@ -1,0 +1,30 @@
+"""End-to-end driver: the paper's ranking/dedup workload as a service.
+
+    PYTHONPATH=src python examples/ranking_service.py [--dataset kos]
+
+Build: sketch the corpus once (single pass). Serve: batched queries scored
+in packed sketch space (Pallas kernel on TPU, oracle on CPU), top-k with
+recall against exact Jaccard. This is `repro.launch.serve` — the serving
+launcher — invoked as a library.
+"""
+
+import argparse
+
+from repro.launch import serve
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dataset", default="tiny", choices=["tiny", "kos", "bbc", "enron", "nytimes"])
+    ap.add_argument("--queries", type=int, default=64)
+    ap.add_argument("--topk", type=int, default=10)
+    args = ap.parse_args()
+    serve.main([
+        "--dataset", args.dataset,
+        "--queries", str(args.queries),
+        "--topk", str(args.topk),
+    ])
+
+
+if __name__ == "__main__":
+    main()

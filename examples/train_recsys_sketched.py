@@ -1,0 +1,132 @@
+"""Train a CTR model on BinSketch-compressed categorical features — the
+paper's §I.A categorical extension inside a real training loop.
+
+    PYTHONPATH=src python examples/train_recsys_sketched.py [--steps 300]
+
+A synthetic CTR task where the label depends on a few feature
+conjunctions. Two models train side by side:
+  raw      — xdeepfm-style embeds over the raw categorical ids
+  sketched — the same MLP over the BinSketch of the one-hot'd feature
+             vector (N = Theorem-1 bits), i.e. dimensionality reduction
+             done by the paper's algorithm before the model.
+Reports final loss/AUC of both. The point: the sketch preserves enough
+feature-interaction signal to train on, at a fraction of the input width.
+"""
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import BinSketchConfig, make_mapping, sketch_indices, theorem1_N
+from repro.core.packed import unpack_bits
+from repro.optim import adamw
+
+
+def make_data(n, fields, vocab, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.integers(0, vocab, (n, fields)).astype(np.int32)
+    # label: XOR-ish conjunction of two field parities + noise
+    logit = 2.0 * ((x[:, 0] % 2) ^ (x[:, 1] % 2)) - 1.0 + 0.5 * ((x[:, 2] % 3) == 0)
+    p = 1 / (1 + np.exp(-logit))
+    y = (rng.random(n) < p).astype(np.float32)
+    return x, y
+
+
+def auc(scores, labels):
+    order = np.argsort(scores)
+    ranks = np.empty_like(order, dtype=np.float64)
+    ranks[order] = np.arange(1, len(scores) + 1)
+    pos = labels > 0.5
+    n_pos, n_neg = pos.sum(), (~pos).sum()
+    if n_pos == 0 or n_neg == 0:
+        return 0.5
+    return (ranks[pos].sum() - n_pos * (n_pos + 1) / 2) / (n_pos * n_neg)
+
+
+def mlp_init(key, dims):
+    ks = jax.random.split(key, len(dims) - 1)
+    return [
+        {
+            "w": jax.random.normal(ks[i], (dims[i], dims[i + 1])) / np.sqrt(dims[i]),
+            "b": jnp.zeros((dims[i + 1],)),
+        }
+        for i in range(len(dims) - 1)
+    ]
+
+
+def mlp_apply(params, x):
+    h = x
+    for i, lyr in enumerate(params):
+        h = h @ lyr["w"] + lyr["b"]
+        if i < len(params) - 1:
+            h = jax.nn.relu(h)
+    return h[:, 0]
+
+
+def train(feats_fn, in_dim, x, y, steps, batch, seed=0):
+    params = mlp_init(jax.random.PRNGKey(seed), [in_dim, 64, 32, 1])
+    opt_cfg = adamw.AdamWConfig(lr=3e-3, weight_decay=0.0, warmup_steps=20)
+    opt = adamw.init(params)
+
+    def loss_fn(p, xb, yb):
+        z = mlp_apply(p, xb)
+        return jnp.mean(jnp.maximum(z, 0) - z * yb + jnp.log1p(jnp.exp(-jnp.abs(z))))
+
+    @jax.jit
+    def step(p, o, xb, yb):
+        l, g = jax.value_and_grad(loss_fn)(p, xb, yb)
+        p, o = adamw.update(opt_cfg, g, o, p)
+        return p, o, l
+
+    rng = np.random.default_rng(seed)
+    n = len(y)
+    for s in range(steps):
+        rows = rng.integers(0, n, batch)
+        params, opt, l = step(params, opt, feats_fn(x[rows]), jnp.asarray(y[rows]))
+    scores = np.asarray(mlp_apply(params, feats_fn(x[:4096])))
+    return float(l), auc(scores, y[:4096])
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=256)
+    args = ap.parse_args()
+
+    fields, vocab = 8, 50
+    x, y = make_data(20000, fields, vocab, seed=0)
+
+    # raw one-hot features: d = fields * vocab
+    d = fields * vocab
+    offsets = np.arange(fields) * vocab
+
+    def raw_feats(xb):
+        oh = np.zeros((len(xb), d), np.float32)
+        oh[np.arange(len(xb))[:, None], xb + offsets] = 1.0
+        return jnp.asarray(oh)
+
+    # BinSketch-compressed features (paper §I.A: label-encode -> one-hot ->
+    # sketch); psi = fields exactly
+    n_bins = theorem1_N(max(fields, 20), rho=0.1)
+    cfg = BinSketchConfig(d=d, n_bins=n_bins)
+    mapping = make_mapping(cfg, jax.random.PRNGKey(7))
+
+    def sk_feats(xb):
+        idx = (xb + offsets).astype(np.int32)
+        packed = sketch_indices(cfg, mapping, jnp.asarray(idx))
+        return unpack_bits(packed, n_bins).astype(jnp.float32)
+
+    print(f"raw input width: {d}; sketched width: {n_bins} "
+          f"({d / n_bins:.1f}x compression)")
+    l_raw, a_raw = train(raw_feats, d, x, y, args.steps, args.batch)
+    print(f"raw      : loss {l_raw:.4f}  AUC {a_raw:.3f}")
+    l_sk, a_sk = train(sk_feats, n_bins, x, y, args.steps, args.batch)
+    print(f"sketched : loss {l_sk:.4f}  AUC {a_sk:.3f}")
+    print("\nBinSketch input preserves the interaction signal "
+          f"(AUC gap {abs(a_raw - a_sk):.3f}) at {d / n_bins:.1f}x smaller width.")
+
+
+if __name__ == "__main__":
+    main()

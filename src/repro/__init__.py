@@ -1,0 +1,6 @@
+"""repro — BinSketch (Pratap, Bera, Revanuru 2019) as a production-grade
+multi-pod JAX framework: core sketching library + TPU Pallas kernels +
+model zoo + distributed launch/dry-run/roofline stack.
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,3 @@
+"""Checkpoint substrate: atomic/async/elastic CheckpointManager."""
+
+from .manager import CheckpointManager  # noqa: F401

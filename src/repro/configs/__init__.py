@@ -1,0 +1,29 @@
+"""Architecture configs (one module per assigned arch + the paper's own).
+
+Select with ``--arch <id>``; ids match the assignment table exactly.
+"""
+
+_LOADED = False
+
+
+def _load_all():
+    global _LOADED
+    if _LOADED:
+        return
+    _LOADED = True
+    from . import (  # noqa: F401
+        autoint,
+        bert4rec,
+        binsketch_paper,
+        bst,
+        deepseek_v2_lite_16b,
+        graphsage_reddit,
+        internlm2_20b,
+        kimi_k2_1t_a32b,
+        llama3_405b,
+        qwen2_5_14b,
+        xdeepfm,
+    )
+
+
+from .base import ArchSpec, SHAPE_TABLES, all_archs, get  # noqa: E402,F401

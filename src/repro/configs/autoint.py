@@ -1,0 +1,54 @@
+"""autoint [recsys] n_sparse=39 embed_dim=16 n_attn_layers=3 n_heads=2
+d_attn=32 interaction=self-attn. [arXiv:1810.11921; paper]"""
+
+from __future__ import annotations
+
+from ..models.recsys import RecsysConfig, criteo_like_vocabs
+from .base import ArchSpec, register
+from .recsys_common import make_recsys_bundle
+
+FULL = RecsysConfig(
+    name="autoint",
+    kind="autoint",
+    embed_dim=16,
+    field_vocabs=criteo_like_vocabs(39),
+    n_attn_layers=3,
+    d_attn=32,
+)
+
+SMOKE = RecsysConfig(
+    name="autoint-smoke",
+    kind="autoint",
+    embed_dim=16,
+    field_vocabs=tuple([50] * 8),
+    n_attn_layers=2,
+    d_attn=16,
+)
+
+SMOKE_SHAPES = {
+    "train_batch": dict(batch=64, kind="train"),
+    "serve_p99": dict(batch=16, kind="serve"),
+    "serve_bulk": dict(batch=128, kind="serve"),
+    "retrieval_cand": dict(batch=1, n_candidates=4096, kind="retrieval"),
+}
+
+
+def build(mesh, shape_name=None, rules=None, smoke=False):
+    return make_recsys_bundle(
+        SMOKE if smoke else FULL,
+        mesh,
+        shape_name=shape_name,
+        rules=rules,
+        smoke_shapes=SMOKE_SHAPES if smoke else None,
+    )
+
+
+register(
+    ArchSpec(
+        name="autoint",
+        family="recsys",
+        source="arXiv:1810.11921; paper",
+        build=build,
+        notes="BinSketch first-class: categorical one-hot sketch tower on retrieval_cand.",
+    )
+)

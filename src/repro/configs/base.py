@@ -1,0 +1,81 @@
+"""Arch registry plumbing: every config module registers an ArchSpec that
+knows how to build its model (full or smoke-reduced), its per-shape input
+specs (ShapeDtypeStructs — never allocated), and which step function each
+shape lowers.
+
+Shape cells follow the assignment:
+  LM:     train_4k / prefill_32k / decode_32k / long_500k
+  GNN:    full_graph_sm / minibatch_lg / ogb_products / molecule
+  recsys: train_batch / serve_p99 / serve_bulk / retrieval_cand
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Tuple
+
+__all__ = ["ArchSpec", "register", "get", "all_archs", "SHAPE_TABLES"]
+
+_REGISTRY: Dict[str, "ArchSpec"] = {}
+
+SHAPE_TABLES = {
+    "lm": {
+        "train_4k": dict(seq_len=4096, global_batch=256, kind="train"),
+        "prefill_32k": dict(seq_len=32768, global_batch=32, kind="prefill"),
+        "decode_32k": dict(seq_len=32768, global_batch=128, kind="decode"),
+        "long_500k": dict(seq_len=524288, global_batch=1, kind="decode"),
+    },
+    "gnn": {
+        "full_graph_sm": dict(n_nodes=2708, n_edges=10556, d_feat=1433, n_classes=7, kind="train_full"),
+        "minibatch_lg": dict(
+            n_nodes=232965, n_edges=114_615_892, batch_nodes=1024, fanouts=(15, 10),
+            d_feat=602, n_classes=41, kind="train_mini",
+        ),
+        "ogb_products": dict(
+            n_nodes=2_449_029, n_edges=61_859_140, d_feat=100, n_classes=47, kind="train_full"
+        ),
+        "molecule": dict(n_nodes=30, n_edges=64, batch=128, d_feat=16, n_classes=2, kind="train_mol"),
+    },
+    "recsys": {
+        "train_batch": dict(batch=65536, kind="train"),
+        "serve_p99": dict(batch=512, kind="serve"),
+        "serve_bulk": dict(batch=262144, kind="serve"),
+        "retrieval_cand": dict(batch=1, n_candidates=1_000_000, kind="retrieval"),
+    },
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchSpec:
+    name: str
+    family: str  # "lm" | "gnn" | "recsys"
+    source: str  # citation tag from the assignment
+    build: Callable  # (mesh, rules=None, smoke=False) -> bundle dict
+    # bundle: {"model", "config", "steps": {kind: fn}, "inputs": fn(shape)->tree,
+    #          "param_specs", "abstract_params", ...}
+    skips: Tuple[str, ...] = ()  # shape cells skipped (with reason in notes)
+    notes: str = ""
+
+    @property
+    def shapes(self) -> Dict:
+        return SHAPE_TABLES[self.family]
+
+
+def register(spec: ArchSpec) -> ArchSpec:
+    _REGISTRY[spec.name] = spec
+    return spec
+
+
+def get(name: str) -> ArchSpec:
+    if name not in _REGISTRY:
+        from . import _load_all  # lazy import of all config modules
+
+        _load_all()
+    return _REGISTRY[name]
+
+
+def all_archs() -> Dict[str, ArchSpec]:
+    from . import _load_all
+
+    _load_all()
+    return dict(_REGISTRY)

@@ -1,0 +1,68 @@
+"""bert4rec [recsys] embed_dim=64 n_blocks=2 n_heads=2 seq_len=200
+interaction=bidir-seq. [arXiv:1904.06690; paper]
+
+Encoder-only (bidirectional): no decode step exists; recsys shape set has
+none, so nothing is skipped. Masked-item training uses sampled softmax
+(8192 negatives) — full softmax over the 1M-item vocab at batch 65536 x
+20 masked positions would be a 5 TB logit tensor (DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+from ..models.recsys import RecsysConfig
+from .base import ArchSpec, register
+from .recsys_common import make_recsys_bundle
+
+FULL = RecsysConfig(
+    name="bert4rec",
+    kind="bert4rec",
+    embed_dim=64,
+    seq_len=200,
+    n_blocks=2,
+    n_heads=2,
+    n_items=1_000_000,  # sized to make retrieval_cand's 1M candidates native
+    n_negatives=8192,
+    n_mask=20,
+)
+
+SMOKE = RecsysConfig(
+    name="bert4rec-smoke",
+    kind="bert4rec",
+    embed_dim=16,
+    seq_len=16,
+    n_blocks=1,
+    n_heads=2,
+    n_items=1000,
+    n_negatives=64,
+    n_mask=4,
+)
+
+SMOKE_SHAPES = {
+    "train_batch": dict(batch=32, kind="train"),
+    "serve_p99": dict(batch=8, kind="serve"),
+    "serve_bulk": dict(batch=64, kind="serve"),
+    "retrieval_cand": dict(batch=1, n_candidates=4096, kind="retrieval"),
+}
+
+
+def build(mesh, shape_name=None, rules=None, smoke=False):
+    return make_recsys_bundle(
+        SMOKE if smoke else FULL,
+        mesh,
+        shape_name=shape_name,
+        rules=rules,
+        smoke_shapes=SMOKE_SHAPES if smoke else None,
+    )
+
+
+register(
+    ArchSpec(
+        name="bert4rec",
+        family="recsys",
+        source="arXiv:1904.06690; paper",
+        build=build,
+        notes="Encoder-only: no decode shapes exist in the recsys set. "
+        "ML-20m's native item count is 26744; n_items=1M is used so the "
+        "retrieval_cand cell is self-consistent (noted deviation).",
+    )
+)

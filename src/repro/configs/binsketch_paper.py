@@ -1,0 +1,45 @@
+"""The paper's own workload as a config: sketch-and-serve over a BoW corpus
+(NYTimes-statistics) — what examples/ranking_service.py and the serving
+launcher run. Not one of the 10 assigned architectures; registered so
+``--arch binsketch-paper`` selects the paper's native configuration.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from ..core import BinSketchConfig, theorem1_N
+from ..data.synthetic import DATASETS
+from .base import ArchSpec, register
+
+
+@dataclasses.dataclass(frozen=True)
+class PaperConfig:
+    dataset: str = "nytimes"
+    rho: float = 0.1
+    measure: str = "jaccard"
+
+    @property
+    def spec(self):
+        return DATASETS[self.dataset]
+
+    def sketch_config(self) -> BinSketchConfig:
+        return BinSketchConfig.from_sparsity(self.spec.d, self.spec.max_nnz, self.rho)
+
+
+def build(mesh, shape_name=None, rules=None, smoke=False):
+    cfg = PaperConfig(dataset="tiny" if smoke else "nytimes")
+    return {"config": cfg, "sketch_config": cfg.sketch_config()}
+
+
+register(
+    ArchSpec(
+        name="binsketch-paper",
+        family="recsys",  # serving-shaped
+        source="this paper (Pratap, Bera, Revanuru 2019)",
+        build=build,
+        notes="The paper's native workload; benchmarked by benchmarks/, "
+        "served by launch/serve.py. Dry-run cells come from the 10 "
+        "assigned archs.",
+    )
+)

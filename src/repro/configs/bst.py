@@ -1,0 +1,63 @@
+"""bst [recsys] embed_dim=32 seq_len=20 n_blocks=1 n_heads=8
+mlp=1024-512-256 interaction=transformer-seq — Behavior Sequence
+Transformer (Alibaba). [arXiv:1905.06874; paper]
+
+Behavior sequences are item-id *sets* — the paper's sparse-binary setting;
+BinSketch compresses them for candidate pre-scoring on retrieval_cand.
+"""
+
+from __future__ import annotations
+
+from ..models.recsys import RecsysConfig
+from .base import ArchSpec, register
+from .recsys_common import make_recsys_bundle
+
+FULL = RecsysConfig(
+    name="bst",
+    kind="bst",
+    embed_dim=32,
+    seq_len=20,
+    n_blocks=1,
+    n_heads=8,
+    mlp_dims=(1024, 512, 256),
+    n_items=4_000_000,  # Taobao-scale item space
+)
+
+SMOKE = RecsysConfig(
+    name="bst-smoke",
+    kind="bst",
+    embed_dim=16,
+    seq_len=8,
+    n_blocks=1,
+    n_heads=2,
+    mlp_dims=(32, 16),
+    n_items=1000,
+)
+
+SMOKE_SHAPES = {
+    "train_batch": dict(batch=64, kind="train"),
+    "serve_p99": dict(batch=16, kind="serve"),
+    "serve_bulk": dict(batch=128, kind="serve"),
+    "retrieval_cand": dict(batch=1, n_candidates=4096, kind="retrieval"),
+}
+
+
+def build(mesh, shape_name=None, rules=None, smoke=False):
+    return make_recsys_bundle(
+        SMOKE if smoke else FULL,
+        mesh,
+        shape_name=shape_name,
+        rules=rules,
+        smoke_shapes=SMOKE_SHAPES if smoke else None,
+    )
+
+
+register(
+    ArchSpec(
+        name="bst",
+        family="recsys",
+        source="arXiv:1905.06874; paper",
+        build=build,
+        notes="BinSketch first-class: behavior-set sketches on retrieval_cand.",
+    )
+)

@@ -1,0 +1,86 @@
+"""deepseek-v2-lite-16b [moe] 27L d_model=2048 16H d_ff(expert)=1408
+vocab=102400, MLA kv_lora=512, 64 routed experts top-6 + 2 shared, first
+layer dense (d_ff=10944). [arXiv:2405.04434; hf]
+
+Config-fidelity note (DESIGN.md §4): the assignment line mentions both
+"MoE 64e top-6" and "160 routed" — 160 is full V2; V2-*Lite* is 64 routed,
+which we follow.
+"""
+
+from __future__ import annotations
+
+from ..models.moe import MoEConfig
+from ..models.transformer import LMConfig, MLAConfig
+from .base import ArchSpec, register
+from .lm_common import make_lm_bundle
+
+FULL = LMConfig(
+    name="deepseek-v2-lite-16b",
+    n_layers=27,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=10944,  # dense first layer
+    vocab=102400,
+    attn="mla",
+    mla=MLAConfig(kv_lora_rank=512, qk_nope_dim=128, qk_rope_dim=64, v_head_dim=128),
+    moe=MoEConfig(n_experts=64, top_k=6, d_ff_expert=1408, n_shared=2, first_dense=1),
+)
+
+SMOKE = LMConfig(
+    name="deepseek-v2-lite-16b-smoke",
+    n_layers=3,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=160,
+    vocab=512,
+    attn="mla",
+    mla=MLAConfig(kv_lora_rank=32, qk_nope_dim=16, qk_rope_dim=8, v_head_dim=16),
+    moe=MoEConfig(n_experts=16, top_k=2, d_ff_expert=48, n_shared=2, first_dense=1),
+)
+
+SMOKE_SHAPES = {
+    "train_4k": dict(seq_len=32, global_batch=4, kind="train"),
+    "prefill_32k": dict(seq_len=64, global_batch=2, kind="prefill"),
+    "decode_32k": dict(seq_len=64, global_batch=4, kind="decode"),
+    "long_500k": dict(seq_len=128, global_batch=1, kind="decode"),
+}
+
+
+# MoE decode serving layout (§Perf-2, same rationale as kimi-k2): weights
+# fully resident (EP over model x TP-on-expert-hidden over data), tokens
+# replicated, KV sequence-sharded.
+MOE_DECODE_RULES = {
+    "batch": (),
+    "seq_kv": ("data", "model"),
+    "embed": (),
+    "expert_ff": ("data",),
+}
+
+
+def build(mesh, shape_name=None, rules=None, smoke=False):
+    merged = dict(rules or {})
+    if shape_name in ("decode_32k", "long_500k") and not smoke:
+        merged = dict(MOE_DECODE_RULES, **merged)
+    return make_lm_bundle(
+        SMOKE if smoke else FULL,
+        mesh,
+        shape_name=shape_name,
+        rules=merged or None,
+        smoke_shapes=SMOKE_SHAPES if smoke else None,
+    )
+
+
+register(
+    ArchSpec(
+        name="deepseek-v2-lite-16b",
+        family="lm",
+        source="arXiv:2405.04434; hf",
+        build=build,
+        skips=("long_500k",),
+        notes="MLA is full attention (quadratic prefill): long_500k "
+        "officially SKIP per assignment rule; MLA latent cache makes the "
+        "supplementary 500k decode row the cheapest of the five LMs.",
+    )
+)

@@ -1,0 +1,129 @@
+"""graphsage-reddit [gnn] n_layers=2 d_hidden=128 aggregator=mean
+sample_sizes=25-10. [arXiv:1706.02216; paper]
+
+Four regimes (assignment shapes): Cora full-batch, Reddit sampled
+minibatch (real neighbor sampler, fanout 15-10), ogbn-products full-batch
+(edge-sharded shard_map SpMM), batched molecules. Message passing is
+take + segment_sum — JAX's sparse story (assignment note).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..models.gnn import GraphSAGE, SAGEConfig
+from ..parallel.sharding import logical_to_spec
+from .base import ArchSpec, SHAPE_TABLES, register
+from .lm_common import opt_state_specs
+
+SMOKE_SHAPES = {
+    "full_graph_sm": dict(n_nodes=64, n_edges=256, d_feat=16, n_classes=4, kind="train_full"),
+    "minibatch_lg": dict(
+        n_nodes=512, n_edges=4096, batch_nodes=32, fanouts=(5, 3), d_feat=16, n_classes=4,
+        kind="train_mini",
+    ),
+    "ogb_products": dict(n_nodes=128, n_edges=512, d_feat=16, n_classes=4, kind="train_full"),
+    "molecule": dict(n_nodes=10, n_edges=20, batch=8, d_feat=8, n_classes=2, kind="train_mol"),
+}
+
+
+def _sds(mesh, shape, dtype, spec):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=NamedSharding(mesh, spec))
+
+
+def build(mesh: Mesh, shape_name: Optional[str] = None, rules: Optional[Dict] = None, smoke=False):
+    table = dict(SHAPE_TABLES["gnn"])
+    if smoke:
+        table.update(SMOKE_SHAPES)
+    info = table[shape_name or "full_graph_sm"]
+    cfg = SAGEConfig(
+        name="graphsage-reddit" + ("-smoke" if smoke else ""),
+        n_layers=2,
+        d_hidden=16 if smoke else 128,
+        d_feat=info["d_feat"],
+        n_classes=info["n_classes"],
+        fanouts=info.get("fanouts", (25, 10)),
+    )
+    model = GraphSAGE(cfg, mesh, rules=rules)
+    n_dev = 1
+    for n in mesh.shape.values():
+        n_dev *= n
+
+    def inputs(shape: str):
+        inf = table[shape]
+        params_abs = model.abstract_params()
+        pspecs = model.param_specs()
+        params_in = jax.tree.map(
+            lambda leaf, spec: _sds(mesh, leaf.shape, leaf.dtype, spec), params_abs, pspecs
+        )
+        kind = inf["kind"]
+        train_step, opt_init = model.make_train_step(
+            {"train_full": "full", "train_mini": "mini", "train_mol": "mol"}[kind]
+        )
+        opt_abs = jax.eval_shape(opt_init, params_abs)
+        opt_in = jax.tree.map(
+            lambda leaf, spec: _sds(mesh, leaf.shape, leaf.dtype, spec),
+            opt_abs,
+            opt_state_specs(opt_abs, pspecs),
+        )
+        all_axes = tuple(mesh.axis_names)
+        if kind == "train_full":
+            n, e, f = inf["n_nodes"], inf["n_edges"], inf["d_feat"]
+            e_pad = -(-e // n_dev) * n_dev
+            batch = {
+                "feats": _sds(mesh, (n, f), jnp.float32, P()),
+                "edges": _sds(mesh, (e_pad, 2), jnp.int32, P(all_axes, None)),
+                "labels": _sds(mesh, (n,), jnp.int32, P()),
+                "mask": _sds(mesh, (n,), jnp.float32, P()),
+            }
+        elif kind == "train_mini":
+            b, (f1, f2), f = inf["batch_nodes"], inf["fanouts"], inf["d_feat"]
+            bspec = logical_to_spec(("batch",), mesh, model.rules)
+            sp = lambda nd: logical_to_spec(("batch",) + (None,) * nd, mesh, model.rules)
+            batch = {
+                "x0": _sds(mesh, (b, f), jnp.float32, sp(1)),
+                "x1": _sds(mesh, (b, f1, f), jnp.float32, sp(2)),
+                "x2": _sds(mesh, (b, f1, f2, f), jnp.float32, sp(3)),
+                "labels": _sds(mesh, (b,), jnp.int32, bspec),
+            }
+        else:  # molecule
+            b, n, e, f = inf["batch"], inf["n_nodes"], inf["n_edges"], inf["d_feat"]
+            sp = lambda nd: logical_to_spec(("batch",) + (None,) * nd, mesh, model.rules)
+            batch = {
+                "feats": _sds(mesh, (b, n, f), jnp.float32, sp(2)),
+                "edges": _sds(mesh, (b, e, 2), jnp.int32, sp(2)),
+                "labels": _sds(mesh, (b,), jnp.int32, sp(0)),
+            }
+        return (params_in, opt_in, batch)
+
+    kind_map = {"train_full": "full", "train_mini": "mini", "train_mol": "mol"}
+    steps = {}
+    for k, v in kind_map.items():
+        ts, opt_init = model.make_train_step(v)
+        steps[k] = ts
+    return {
+        "model": model,
+        "config": cfg,
+        "steps": steps,
+        "inputs": inputs,
+        "opt_init": opt_init,
+        "param_specs": model.param_specs(),
+        "shape_table": table,
+    }
+
+
+register(
+    ArchSpec(
+        name="graphsage-reddit",
+        family="gnn",
+        source="arXiv:1706.02216; paper",
+        build=build,
+        notes="BinSketch applies to adjacency rows (neighbor-set Jaccard "
+        "diagnostics, models/gnn.neighborhood_sketches); SAGE aggregation "
+        "itself is dense segment-sum.",
+    )
+)

@@ -1,0 +1,57 @@
+"""internlm2-20b [dense] 48L d_model=6144 48H (GQA kv=8) d_ff=16384
+vocab=92544 — GQA. [arXiv:2403.17297; hf]"""
+
+from __future__ import annotations
+
+from ..models.transformer import LMConfig
+from .base import ArchSpec, register
+from .lm_common import make_lm_bundle
+
+FULL = LMConfig(
+    name="internlm2-20b",
+    n_layers=48,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=8,
+    d_ff=16384,
+    vocab=92544,
+)
+
+SMOKE = LMConfig(
+    name="internlm2-20b-smoke",
+    n_layers=2,
+    d_model=96,
+    n_heads=6,
+    n_kv_heads=2,
+    d_ff=256,
+    vocab=512,
+)
+
+SMOKE_SHAPES = {
+    "train_4k": dict(seq_len=32, global_batch=4, kind="train"),
+    "prefill_32k": dict(seq_len=64, global_batch=2, kind="prefill"),
+    "decode_32k": dict(seq_len=64, global_batch=4, kind="decode"),
+    "long_500k": dict(seq_len=128, global_batch=1, kind="decode"),
+}
+
+
+def build(mesh, shape_name=None, rules=None, smoke=False):
+    return make_lm_bundle(
+        SMOKE if smoke else FULL,
+        mesh,
+        shape_name=shape_name,
+        rules=rules,
+        smoke_shapes=SMOKE_SHAPES if smoke else None,
+    )
+
+
+register(
+    ArchSpec(
+        name="internlm2-20b",
+        family="lm",
+        source="arXiv:2403.17297; hf",
+        build=build,
+        skips=("long_500k",),
+        notes="full-attention arch: long_500k officially SKIP per assignment rule.",
+    )
+)

@@ -1,0 +1,86 @@
+"""kimi-k2-1t-a32b [moe] 61L d_model=7168 64H (GQA kv=8) d_ff(expert)=2048
+vocab=163840, MoE 384 routed top-8 + 1 shared, first layer dense
+(d_ff=18432). [arXiv:2501.kimi2; unverified]
+
+Assignment says GQA kv=8 (the real K2 uses MLA) — the assignment text is
+authoritative, so GQA with head_dim=128 is implemented (DESIGN.md §4).
+~1.03T total params, ~33B active; Adafactor (Adam moments for 1T params
+would be 8 TB).
+"""
+
+from __future__ import annotations
+
+from ..models.moe import MoEConfig
+from ..models.transformer import LMConfig
+from .base import ArchSpec, register
+from .lm_common import make_lm_bundle
+
+FULL = LMConfig(
+    name="kimi-k2-1t-a32b",
+    n_layers=61,
+    d_model=7168,
+    n_heads=64,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=18432,  # dense first layer
+    vocab=163840,
+    moe=MoEConfig(n_experts=384, top_k=8, d_ff_expert=2048, n_shared=1, first_dense=1),
+    optimizer="adafactor",
+)
+
+SMOKE = LMConfig(
+    name="kimi-k2-1t-a32b-smoke",
+    n_layers=3,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=2,
+    head_dim=16,
+    d_ff=192,
+    vocab=512,
+    moe=MoEConfig(n_experts=16, top_k=4, d_ff_expert=32, n_shared=1, first_dense=1),
+    optimizer="adafactor",
+)
+
+SMOKE_SHAPES = {
+    "train_4k": dict(seq_len=32, global_batch=4, kind="train"),
+    "prefill_32k": dict(seq_len=64, global_batch=2, kind="prefill"),
+    "decode_32k": dict(seq_len=64, global_batch=4, kind="decode"),
+    "long_500k": dict(seq_len=128, global_batch=1, kind="decode"),
+}
+
+
+# MoE decode serving layout (§Perf-2): weights fully resident — experts EP
+# over "model", expert hidden dim TP over "data", tokens replicated, KV
+# sequence-sharded 256-way. Without this the training FSDP layout re-
+# gathers 253 GB of expert weights per decoded token.
+MOE_DECODE_RULES = {
+    "batch": (),
+    "seq_kv": ("data", "model"),
+    "embed": (),
+    "expert_ff": ("data",),
+}
+
+
+def build(mesh, shape_name=None, rules=None, smoke=False):
+    merged = dict(rules or {})
+    if shape_name in ("decode_32k", "long_500k") and not smoke:
+        merged = dict(MOE_DECODE_RULES, **merged)
+    return make_lm_bundle(
+        SMOKE if smoke else FULL,
+        mesh,
+        shape_name=shape_name,
+        rules=merged or None,
+        smoke_shapes=SMOKE_SHAPES if smoke else None,
+    )
+
+
+register(
+    ArchSpec(
+        name="kimi-k2-1t-a32b",
+        family="lm",
+        source="arXiv:2501.kimi2; unverified",
+        build=build,
+        skips=("long_500k",),
+        notes="full-attention arch: long_500k officially SKIP per assignment rule.",
+    )
+)

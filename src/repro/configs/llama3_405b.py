@@ -1,0 +1,65 @@
+"""llama3-405b [dense] 126L d_model=16384 128H (GQA kv=8) d_ff=53248
+vocab=128256 — GQA 128k vocab. [arXiv:2407.21783; unverified]
+
+Adafactor optimizer: Adam fp32 moments for 405B params are 3.2 TB
+(12.7 GB/chip on one pod) — the factored second moment brings optimizer
+state to ~O(params/1e3) and is what Llama-scale pods actually need at
+16 GB HBM (accounting in EXPERIMENTS.md §Dry-run).
+"""
+
+from __future__ import annotations
+
+from ..models.transformer import LMConfig
+from .base import ArchSpec, register
+from .lm_common import make_lm_bundle
+
+FULL = LMConfig(
+    name="llama3-405b",
+    n_layers=126,
+    d_model=16384,
+    n_heads=128,
+    n_kv_heads=8,
+    d_ff=53248,
+    vocab=128256,
+    optimizer="adafactor",
+)
+
+SMOKE = LMConfig(
+    name="llama3-405b-smoke",
+    n_layers=2,
+    d_model=64,
+    n_heads=8,
+    n_kv_heads=2,
+    d_ff=192,
+    vocab=512,
+    optimizer="adafactor",
+)
+
+SMOKE_SHAPES = {
+    "train_4k": dict(seq_len=32, global_batch=4, kind="train"),
+    "prefill_32k": dict(seq_len=64, global_batch=2, kind="prefill"),
+    "decode_32k": dict(seq_len=64, global_batch=4, kind="decode"),
+    "long_500k": dict(seq_len=128, global_batch=1, kind="decode"),
+}
+
+
+def build(mesh, shape_name=None, rules=None, smoke=False):
+    return make_lm_bundle(
+        SMOKE if smoke else FULL,
+        mesh,
+        shape_name=shape_name,
+        rules=rules,
+        smoke_shapes=SMOKE_SHAPES if smoke else None,
+    )
+
+
+register(
+    ArchSpec(
+        name="llama3-405b",
+        family="lm",
+        source="arXiv:2407.21783; unverified",
+        build=build,
+        skips=("long_500k",),
+        notes="full-attention arch: long_500k officially SKIP per assignment rule.",
+    )
+)

@@ -1,0 +1,195 @@
+"""Shared bundle builder for the five LM architectures.
+
+A bundle ties together: model, step fns keyed by shape kind, abstract
+(ShapeDtypeStruct, sharding-attached) inputs per shape cell, and the
+per-shape sharding-rule overrides (DESIGN.md §5):
+
+  train_4k      defaults (batch->pod+data, params fsdp+tp)
+  prefill_32k   KV cache seq-sharded over model (TP idle for cache, SP used)
+  decode_32k    KV seq->model, batch->pod+data, split-K combine
+  long_500k     batch=1: KV seq->pod+data+model (256/512-way SP)
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..models.transformer import LMConfig, TransformerLM
+from ..optim.adafactor import AdafactorState, Factored
+from ..optim.adamw import AdamWState
+from ..parallel.sharding import logical_to_spec
+from .base import SHAPE_TABLES
+
+__all__ = ["LM_SHAPE_RULES", "make_lm_bundle", "opt_state_specs"]
+
+LM_SHAPE_RULES = {
+    "train_4k": {},
+    "prefill_32k": {"seq_kv": ("model",)},
+    "decode_32k": {"seq_kv": ("model",)},
+    "long_500k": {"batch": (), "seq_kv": ("pod", "data", "model")},
+}
+
+# §Perf-1 optimized layout for DENSE-LM train on the single pod: pure
+# ZeRO-3/FSDP-256 (params sharded 256-way on the embed dim, batch over
+# data x model) — replaces per-layer TP activation all-reduces (1.3 GB f32
+# x ~6/layer) with per-layer weight all-gathers; measured 11.7x less
+# collective traffic on qwen train_4k. Applied when the mesh is exactly
+# the 256-chip pod and the global batch divides 256. MoE archs keep the
+# replicated-token EP layout (their tokens cannot shard over "model").
+FSDP_TRAIN_RULES = {
+    "batch": ("data", "model"),
+    "embed": ("data", "model"),
+    "heads": (),
+    "kv_heads": (),
+    "mlp": (),
+    "vocab": ("data", "model"),
+}
+
+
+def dense_train_rules(mesh, cfg: LMConfig, global_batch: int = 256):
+    """FSDP-256 rules when applicable (dense arch, single 256-chip pod)."""
+    n_dev = 1
+    for s in mesh.shape.values():
+        n_dev *= s
+    if cfg.moe is not None or n_dev != 256 or global_batch % n_dev:
+        return {}
+    rules = dict(FSDP_TRAIN_RULES)
+    if cfg.vocab % n_dev:
+        rules["vocab"] = ("data",) if cfg.vocab % mesh.shape.get("data", 1) == 0 else ()
+    return rules
+
+
+def dense_prefill_rules(mesh, cfg: LMConfig):
+    """§Perf follow-on: dense prefill also prefers ZeRO-3 param sharding
+    (batch over pod+data only — B=32 cannot take the model axis); measured
+    2x less collective traffic than the TP layout on qwen prefill_32k."""
+    if cfg.moe is not None:
+        return {}
+    n_sh = 1
+    for s in mesh.shape.values():
+        n_sh *= s
+    rules = {
+        "batch": ("pod", "data"),
+        "embed": ("data", "model"),
+        "heads": (),
+        "kv_heads": (),
+        "mlp": (),
+        "vocab": ("data", "model"),
+    }
+    if cfg.vocab % n_sh:
+        rules["vocab"] = ("data",) if cfg.vocab % mesh.shape.get("data", 1) == 0 else ()
+    return rules
+
+
+def opt_state_specs(opt_state_abstract, params_specs):
+    """Optimizer-state PartitionSpecs mirroring the parameter shardings.
+
+    AdamW: moments shard exactly like their parameter (ZeRO via pjit).
+    Adafactor: factored row/col inherit the parameter spec minus the
+    reduced axis.
+    """
+    if isinstance(opt_state_abstract, AdamWState):
+        return AdamWState(step=P(), mu=params_specs, nu=params_specs)
+    assert isinstance(opt_state_abstract, AdafactorState)
+    p_leaves, treedef = jax.tree.flatten(params_specs, is_leaf=lambda x: isinstance(x, P))
+    v_leaves = treedef.flatten_up_to(opt_state_abstract.v)
+    out = []
+    for spec, v in zip(p_leaves, v_leaves):
+        t = tuple(spec)
+        if isinstance(v, Factored):
+            out.append(Factored(row=P(*t[:-1]), col=P(*(t[:-2] + t[-1:]))))
+        else:
+            out.append(spec)
+    return AdafactorState(step=P(), v=treedef.unflatten(out))
+
+
+def _sds(mesh: Mesh, shape, dtype, spec: P):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=NamedSharding(mesh, spec))
+
+
+def make_lm_bundle(
+    cfg: LMConfig,
+    mesh: Mesh,
+    shape_name: Optional[str] = None,
+    rules: Optional[Dict] = None,
+    smoke_shapes: Optional[Dict] = None,
+):
+    """Returns the bundle for one (arch, shape) cell. ``smoke_shapes``
+    overrides the assignment shape table (tiny dims for CPU smoke tests)."""
+    base_rules = dict(LM_SHAPE_RULES.get(shape_name or "train_4k", {}))
+    if not smoke_shapes:
+        if shape_name == "train_4k":
+            base_rules.update(dense_train_rules(mesh, cfg))
+        elif shape_name == "prefill_32k":
+            base_rules.update(dense_prefill_rules(mesh, cfg))
+    rules = dict(base_rules, **(rules or {}))
+    model = TransformerLM(cfg, mesh, rules=rules)
+    table = dict(SHAPE_TABLES["lm"])
+    if smoke_shapes:
+        table.update(smoke_shapes)
+
+    def abstract_tree(tree, specs):
+        return jax.tree.map(
+            lambda leaf, spec: _sds(mesh, leaf.shape, leaf.dtype, spec),
+            tree,
+            specs,
+            is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct),
+        )
+
+    def inputs(shape: str):
+        info = table[shape]
+        b, s = info["global_batch"], info["seq_len"]
+        params_abs = model.abstract_params()
+        pspecs = model.param_specs()
+        params_in = abstract_tree(params_abs, pspecs)
+        batch_spec = logical_to_spec(("batch", None), mesh, model.rules)
+        if info["kind"] == "train":
+            _, opt_init = model.make_train_step()
+            opt_abs = jax.eval_shape(opt_init, params_abs)
+            ospecs = opt_state_specs(opt_abs, pspecs)
+            opt_in = abstract_tree(opt_abs, ospecs)
+            batch = {
+                "tokens": _sds(mesh, (b, s), jnp.int32, batch_spec),
+                "labels": _sds(mesh, (b, s), jnp.int32, batch_spec),
+            }
+            return (params_in, opt_in, batch)
+        if info["kind"] == "prefill":
+            return (params_in, _sds(mesh, (b, s), jnp.int32, batch_spec))
+        # decode
+        cache_abs = model.cache_struct(b, s)
+        cache_lg = model.cache_logical()
+        cache_in = jax.tree.map(
+            lambda sds_, lg: _sds(
+                mesh, sds_.shape, sds_.dtype, logical_to_spec(lg, mesh, model.rules)
+            ),
+            cache_abs,
+            cache_lg,
+            is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct),
+        )
+        tok_spec = logical_to_spec(("batch",), mesh, model.rules)
+        return (
+            params_in,
+            cache_in,
+            _sds(mesh, (b,), jnp.int32, tok_spec),
+            _sds(mesh, (), jnp.int32, P()),
+        )
+
+    train_step, opt_init = model.make_train_step()
+    steps = {
+        "train": train_step,
+        "prefill": model.make_prefill_step(),
+        "decode": model.make_decode_step(),
+    }
+    return {
+        "model": model,
+        "config": cfg,
+        "steps": steps,
+        "inputs": inputs,
+        "opt_init": opt_init,
+        "param_specs": model.param_specs(),
+        "shape_table": table,
+    }

@@ -1,0 +1,56 @@
+"""xdeepfm [recsys] n_sparse=39 embed_dim=10 cin_layers=200-200-200
+mlp=400-400 interaction=cin. [arXiv:1803.05170; paper]
+
+The paper's §I.A categorical extension applies directly: the 39-field
+one-hot space is sketched by BinSketch for the retrieval tower.
+"""
+
+from __future__ import annotations
+
+from ..models.recsys import RecsysConfig, criteo_like_vocabs
+from .base import ArchSpec, register
+from .recsys_common import make_recsys_bundle
+
+FULL = RecsysConfig(
+    name="xdeepfm",
+    kind="xdeepfm",
+    embed_dim=10,
+    field_vocabs=criteo_like_vocabs(39),
+    cin_dims=(200, 200, 200),
+)
+
+SMOKE = RecsysConfig(
+    name="xdeepfm-smoke",
+    kind="xdeepfm",
+    embed_dim=10,
+    field_vocabs=tuple([50] * 8),
+    cin_dims=(16, 16),
+)
+
+SMOKE_SHAPES = {
+    "train_batch": dict(batch=64, kind="train"),
+    "serve_p99": dict(batch=16, kind="serve"),
+    "serve_bulk": dict(batch=128, kind="serve"),
+    "retrieval_cand": dict(batch=1, n_candidates=4096, kind="retrieval"),
+}
+
+
+def build(mesh, shape_name=None, rules=None, smoke=False):
+    return make_recsys_bundle(
+        SMOKE if smoke else FULL,
+        mesh,
+        shape_name=shape_name,
+        rules=rules,
+        smoke_shapes=SMOKE_SHAPES if smoke else None,
+    )
+
+
+register(
+    ArchSpec(
+        name="xdeepfm",
+        family="recsys",
+        source="arXiv:1803.05170; paper",
+        build=build,
+        notes="BinSketch first-class: categorical one-hot sketch tower on retrieval_cand.",
+    )
+)

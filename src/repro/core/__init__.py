@@ -1,0 +1,21 @@
+"""repro.core — BinSketch (the paper's contribution) and its competitors.
+
+Public API:
+    BinSketchConfig, theorem1_N, make_mapping, sketch_indices, sketch_dense
+    estimators.estimates_from_counts / pairwise_similarity  (Algorithms 1-4)
+    packed.*                 (bit packing + popcount substrate)
+    index.SketchIndex        (retrieval / ranking front-end)
+    categorical.*            (paper §I.A categorical extension)
+    baselines.*              (BCS, MinHash, DOPH, OddSketch, SimHash, CBE)
+"""
+
+from . import baselines, categorical, estimators, index, packed  # noqa: F401
+from .binsketch import (  # noqa: F401
+    BinSketchConfig,
+    make_mapping,
+    map_indices,
+    sketch_dense,
+    sketch_indices,
+    sketch_indices_dense,
+    theorem1_N,
+)

@@ -1,0 +1,17 @@
+"""Competitor sketching algorithms from the paper's §IV (Table I).
+
+All are implemented batched + jit-friendly so the compression-time benchmark
+(paper Fig. 3) compares like with like. Each module exposes ``sketch(...)``
+and the estimator(s) the paper evaluates it on.
+
+| module      | paper ref | measures            |
+|-------------|-----------|---------------------|
+| bcs         | [22,23]   | IP / Ham / JS / Cos |
+| minhash     | [5]       | JS (Cos, IP via [25],[26]) |
+| doph        | [24]      | JS (densified one-permutation) |
+| oddsketch   | [21]      | JS (high-similarity regime) |
+| simhash     | [10]      | Cos |
+| cbe         | [27]      | Cos (circulant, FFT) |
+"""
+
+from . import bcs, cbe, doph, minhash, oddsketch, simhash  # noqa: F401

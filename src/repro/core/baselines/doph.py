@@ -1,0 +1,64 @@
+"""DOPH — Densified One-Permutation Hashing [Shrivastava 2017].
+
+One pass: every element is hashed once to one of k bins; each bin keeps the
+min hash value. Empty bins are *densified* by borrowing the value of the
+nearest non-empty bin to the right (cyclic) plus an offset that keeps the
+collision probability unbiased (the rotation scheme of Shrivastava & Li;
+the "optimal" variant randomizes direction per bin — the rotation variant is
+what we benchmark, noted in DESIGN.md).
+
+Estimator: identical to MinHash over the k densified bins.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .minhash import estimates  # same estimator — re-exported for symmetry
+
+__all__ = ["make_hashes", "sketch_indices", "estimates"]
+
+_INF = jnp.uint32(0xFFFFFFFF)
+_OFFSET = jnp.uint32(2654435761)  # Knuth multiplicative constant, per-rotation offset
+
+
+def make_hashes(key: jax.Array) -> jax.Array:
+    """(4,) uint32: bin-hash (a1|1, b1) and value-hash (a2|1, b2)."""
+    c = jax.random.bits(key, (4,), dtype=jnp.uint32)
+    return c.at[0].set(c[0] | 1).at[2].set(c[2] | 1)
+
+
+def _densify(bins: jax.Array) -> jax.Array:
+    """Cyclic right-rotation fill of empty (INF) bins. bins: (B, k)."""
+    k = bins.shape[1]
+
+    def step(carry, j):
+        # carry: (B,) value propagated from the right neighbour chain
+        col = bins[:, k - 1 - j]
+        filled = jnp.where(col == _INF, carry + _OFFSET, col)
+        return filled, filled
+
+    # two passes over the ring guarantee every bin sees a non-empty source
+    init = jnp.full((bins.shape[0],), 0, jnp.uint32)
+    carry, _ = jax.lax.scan(step, init, jnp.arange(k))
+    _, cols = jax.lax.scan(step, carry, jnp.arange(k))
+    return jnp.flip(cols.T, axis=1)
+
+
+def sketch_indices(hashes: jax.Array, k: int, idx: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Padded sparse rows (B, P) -> ((B, k) densified values, (B,) |a|)."""
+    a1, b1, a2, b2 = hashes[0], hashes[1], hashes[2], hashes[3]
+    valid = idx >= 0
+    x = jnp.where(valid, idx, 0).astype(jnp.uint32)
+    which = ((a1 * x + b1) % jnp.uint32(k)).astype(jnp.int32)  # bin per element
+    val = a2 * x + b2
+    val = jnp.where(valid, val, _INF)
+
+    bsz = idx.shape[0]
+    rows = jnp.broadcast_to(jnp.arange(bsz)[:, None], idx.shape)
+    bins = jnp.full((bsz, k), _INF, jnp.uint32).at[rows, which].min(val)
+    sizes = jnp.sum(valid, axis=1).astype(jnp.int32)
+    return _densify(bins), sizes

@@ -1,0 +1,94 @@
+"""SketchIndex — retrieval over a sketched corpus (paper §IV-B at scale).
+
+Build: sketch every corpus row (shard-local on a mesh; sketches are
+row-partitioned, no communication). Query: score Q query sketches against
+all C candidates with the packed AND-popcount path + estimator epilogue,
+then top-k. The scorer is pluggable so the oracle (pure jnp) and the Pallas
+kernel (``repro.kernels.ops.sketch_score``) share this front-end.
+
+The distributed variant shards candidates over the mesh, takes a local
+top-k per shard, all-gathers the (k, score) pairs and reduces — the merge
+traffic is O(k * devices), independent of corpus size.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from . import binsketch, estimators
+
+__all__ = ["SketchIndex", "topk_merge"]
+
+Scorer = Callable[[jnp.ndarray, jnp.ndarray], jnp.ndarray]  # (Q,W),(C,W)->(Q,C)
+
+
+@dataclasses.dataclass
+class SketchIndex:
+    cfg: binsketch.BinSketchConfig
+    mapping: jax.Array
+    corpus: jax.Array  # (C, W) packed sketches
+    measure: str = "jaccard"
+    scorer: Optional[Scorer] = None  # defaults to the oracle path
+
+    @staticmethod
+    def build(
+        cfg: binsketch.BinSketchConfig,
+        mapping: jax.Array,
+        corpus_idx: jax.Array,
+        measure: str = "jaccard",
+        scorer: Optional[Scorer] = None,
+        batch: int = 4096,
+    ) -> "SketchIndex":
+        """corpus_idx: (C, P) padded sparse rows; sketched in batches."""
+        chunks = []
+        for start in range(0, corpus_idx.shape[0], batch):
+            chunks.append(binsketch.sketch_indices(cfg, mapping, corpus_idx[start : start + batch]))
+        return SketchIndex(cfg, mapping, jnp.concatenate(chunks, axis=0), measure, scorer)
+
+    def _scores(self, q_packed: jnp.ndarray, candidates: jnp.ndarray) -> jnp.ndarray:
+        if self.scorer is not None:
+            return self.scorer(q_packed, candidates)
+        return estimators.pairwise_similarity(q_packed, candidates, self.cfg.n_bins, self.measure)
+
+    def query(self, query_idx: jax.Array, k: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """(Q, P) padded query rows -> (scores (Q,k), ids (Q,k))."""
+        q = binsketch.sketch_indices(self.cfg, self.mapping, query_idx)
+        scores = self._scores(q, self.corpus)
+        return jax.lax.top_k(scores, k)
+
+    def query_sharded(
+        self, mesh: Mesh, axis: str, query_idx: jax.Array, k: int
+    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Candidate-sharded retrieval: local top-k then O(k*devices) merge."""
+        q = binsketch.sketch_indices(self.cfg, self.mapping, query_idx)
+        n_local = self.corpus.shape[0] // mesh.shape[axis]
+
+        def local(qs, cand, base):
+            s = self._scores(qs, cand)
+            sc, ix = jax.lax.top_k(s, k)
+            ids = base[0, 0] + ix
+            all_sc = jax.lax.all_gather(sc, axis, axis=1, tiled=True)  # (Q, shards*k)
+            all_ids = jax.lax.all_gather(ids, axis, axis=1, tiled=True)
+            sc2, ix2 = jax.lax.top_k(all_sc, k)
+            return sc2, jnp.take_along_axis(all_ids, ix2, axis=1)
+
+        base = jnp.arange(self.corpus.shape[0], dtype=jnp.int32).reshape(-1, 1)
+        fn = jax.shard_map(
+            local,
+            mesh=mesh,
+            in_specs=(P(), P(axis, None), P(axis, None)),
+            out_specs=(P(), P()),
+            check_vma=False,
+        )
+        return fn(q, self.corpus[: n_local * mesh.shape[axis]], base[: n_local * mesh.shape[axis]])
+
+
+def topk_merge(scores: jnp.ndarray, ids: jnp.ndarray, k: int):
+    """Merge per-shard (n, k_i) score/id lists into global top-k."""
+    sc, ix = jax.lax.top_k(scores, k)
+    return sc, jnp.take_along_axis(ids, ix, axis=-1)

@@ -1,0 +1,96 @@
+"""Packed-bit utilities for binary sketches.
+
+Sketches are stored packed: 32 sketch bins per uint32 word, little-endian
+within the word (bin ``j`` lives in word ``j // 32`` at bit ``j % 32``).
+Packing gives a 32x denser HBM footprint and lets similarity scoring run as
+word-wise AND + popcount — the dataflow the TPU kernels in
+``repro/kernels`` are built around.
+
+Everything here is pure jnp and jit-friendly; these are also the oracles the
+Pallas kernels are validated against.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = [
+    "num_words",
+    "pack_bits",
+    "unpack_bits",
+    "popcount",
+    "row_popcount",
+    "and_popcount_pairwise",
+    "or_rows",
+]
+
+_M1 = jnp.uint32(0x55555555)
+_M2 = jnp.uint32(0x33333333)
+_M4 = jnp.uint32(0x0F0F0F0F)
+_H01 = jnp.uint32(0x01010101)
+
+
+def num_words(n_bins: int) -> int:
+    """Number of uint32 words needed for an ``n_bins``-bit sketch."""
+    return (int(n_bins) + 31) // 32
+
+
+def pack_bits(dense: jnp.ndarray) -> jnp.ndarray:
+    """Pack ``(..., N)`` {0,1} bits into ``(..., ceil(N/32))`` uint32 words."""
+    n = dense.shape[-1]
+    w = num_words(n)
+    pad = w * 32 - n
+    if pad:
+        dense = jnp.pad(dense, [(0, 0)] * (dense.ndim - 1) + [(0, pad)])
+    bits = dense.reshape(dense.shape[:-1] + (w, 32)).astype(jnp.uint32)
+    weights = (jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32)).astype(jnp.uint32)
+    return jnp.sum(bits * weights, axis=-1).astype(jnp.uint32)
+
+
+def unpack_bits(packed: jnp.ndarray, n_bins: int) -> jnp.ndarray:
+    """Inverse of :func:`pack_bits`; returns ``(..., n_bins)`` uint8 bits."""
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    bits = (packed[..., None] >> shifts) & jnp.uint32(1)
+    flat = bits.reshape(packed.shape[:-1] + (packed.shape[-1] * 32,))
+    return flat[..., :n_bins].astype(jnp.uint8)
+
+
+def popcount(x: jnp.ndarray) -> jnp.ndarray:
+    """SWAR popcount of uint32 words; returns uint32 of the same shape."""
+    x = x.astype(jnp.uint32)
+    x = x - ((x >> 1) & _M1)
+    x = (x & _M2) + ((x >> 2) & _M2)
+    x = (x + (x >> 4)) & _M4
+    return (x * _H01) >> 24
+
+
+def row_popcount(packed: jnp.ndarray) -> jnp.ndarray:
+    """Total set-bit count along the trailing word axis -> int32."""
+    return jnp.sum(popcount(packed).astype(jnp.int32), axis=-1)
+
+
+def and_popcount_pairwise(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """``(Q, W) x (C, W) -> (Q, C)`` int32 popcount(AND) matrix (pure-jnp oracle).
+
+    The Pallas kernel ``repro.kernels.popcount_sim`` computes the same thing
+    blocked in VMEM; this materializes the (Q, C, W) intermediate and is meant
+    for tests and small problems.
+    """
+    both = a[:, None, :] & b[None, :, :]
+    return jnp.sum(popcount(both).astype(jnp.int32), axis=-1)
+
+
+def or_rows(packed: jnp.ndarray, axis: int = 0) -> jnp.ndarray:
+    """Bitwise-OR reduce packed sketches along ``axis`` (sketch of the union).
+
+    BinSketch is an OR-homomorphism: sketch(a | b) == sketch(a) | sketch(b),
+    so this *is* the sketch of the union of the underlying sets.
+    """
+    import jax
+
+    return jax.lax.reduce(
+        packed,
+        jnp.uint32(0),
+        lambda x, y: jnp.bitwise_or(x, y),
+        (axis % packed.ndim,),
+    )

@@ -1,0 +1,5 @@
+"""Data substrate: synthetic corpora, sharded pipeline, sketch-based dedup."""
+
+from . import dedup, pipeline, synthetic  # noqa: F401
+from .pipeline import ShardedBatcher  # noqa: F401
+from .synthetic import DATASETS, DatasetSpec, generate_corpus, generate_similar_pairs  # noqa: F401

@@ -1,0 +1,59 @@
+"""Near-duplicate document detection via BinSketch — the paper's flagship
+application (§I.C "Scalable Ranking and deduplication of documents"),
+wired into the LM data pipeline.
+
+Documents are token-id *sets* (sparse binary over the vocab), sketched once
+(single pass, OR-homomorphic so corpus shards sketch independently), and
+candidate duplicates are pairs whose *estimated* Jaccard exceeds the
+threshold. This runs ahead of LM training; the transformer math itself is
+untouched (DESIGN.md §4 — BinSketch is inapplicable to dense activations).
+"""
+
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import BinSketchConfig, make_mapping, sketch_indices
+from ..kernels import ops
+
+__all__ = ["find_near_duplicates"]
+
+
+def find_near_duplicates(
+    doc_token_sets: np.ndarray,
+    vocab_size: int,
+    threshold: float = 0.9,
+    psi: int | None = None,
+    rho: float = 0.05,
+    seed: int = 0,
+    chunk: int = 1024,
+) -> List[Tuple[int, int, float]]:
+    """doc_token_sets: (n, P) padded unique-token rows (pad = -1).
+
+    Returns [(i, j, js_est)] with i < j and js_est >= threshold. Scoring is
+    chunked through the packed popcount kernel — O(n^2) pairs but at 32
+    pairs/word/cycle in sketch space, which is the paper's point.
+    """
+    import jax
+
+    n = doc_token_sets.shape[0]
+    if psi is None:
+        lens = (doc_token_sets >= 0).sum(axis=1)
+        psi = int(lens.max())
+    cfg = BinSketchConfig.from_sparsity(vocab_size, psi, rho)
+    mapping = make_mapping(cfg, jax.random.PRNGKey(seed))
+    sk = sketch_indices(cfg, mapping, jnp.asarray(doc_token_sets))
+
+    out: List[Tuple[int, int, float]] = []
+    for qs in range(0, n, chunk):
+        q = sk[qs : qs + chunk]
+        sims = np.asarray(ops.sketch_score(q, sk, n_bins=cfg.n_bins, measure="jaccard"))
+        hits = np.argwhere(sims >= threshold)
+        for qi, cj in hits:
+            i, j = qs + int(qi), int(cj)
+            if i < j:
+                out.append((i, j, float(sims[qi, cj])))
+    return out

@@ -1,0 +1,79 @@
+"""Pallas TPU kernel: fused hash + compare-reduce sketch construction.
+
+``sketch_build`` takes pre-mapped bin ids — fine when the pi table exists.
+At tera-scale d (the paper's motivating regime) there is no table: the map
+is a multiply-shift hash. Mapping on the host costs one extra HBM round
+trip of the (B, P) int32 bins; this kernel computes
+
+    bin = ((a * idx + b) mod 2^32) mod N
+
+inside the kernel body (VPU integer ops) and feeds the same broadcast-
+compare + OR-reduce + pack pipeline, so raw indices stream from HBM
+exactly once. Coefficients arrive as a (2,) uint32 operand replicated to
+every program.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["hash_build_kernel"]
+
+
+def _kernel(coeffs_ref, idx_ref, out_ref, *, tile_words: int, n_bins: int):
+    j = pl.program_id(1)
+    idx = idx_ref[...]  # (TB, P) int32 raw feature indices, pad = -1
+    a = coeffs_ref[0]
+    b = coeffs_ref[1]
+    valid = idx >= 0
+    h = a * idx.astype(jnp.uint32) + b  # wraps mod 2^32
+    bins = (h % jnp.uint32(n_bins)).astype(jnp.int32)
+    bins = jnp.where(valid, bins, -1)
+
+    n_bits = tile_words * 32
+    base = j * n_bits
+    targets = base + jax.lax.broadcasted_iota(jnp.int32, (1, 1, n_bits), 2)
+    hits = jnp.any(bins[:, :, None] == targets, axis=1)  # (TB, n_bits)
+    words = hits.reshape(idx.shape[0], tile_words, 32).astype(jnp.uint32)
+    weights = (jnp.uint32(1) << jax.lax.broadcasted_iota(jnp.uint32, (1, 1, 32), 2)).astype(
+        jnp.uint32
+    )
+    out_ref[...] = jnp.sum(words * weights, axis=-1).astype(jnp.uint32)
+
+
+def hash_build_kernel(
+    idx: jax.Array,
+    coeffs: jax.Array,
+    n_bins: int,
+    *,
+    n_words: int | None = None,  # padded output width (>= ceil(n_bins/32))
+    block_rows: int = 8,
+    tile_words: int = 16,
+    interpret: bool = False,
+) -> jax.Array:
+    """``idx: (B, P)`` raw indices (pad=-1), ``coeffs: (2,)`` uint32
+    multiply-shift pair -> packed ``(B, n_words)`` uint32 sketches; the
+    modulo uses the true ``n_bins`` (bits beyond it are always zero).
+
+    Dims must divide the block shapes (``ops.hash_build_sketch`` pads/crops).
+    """
+    bsz, _ = idx.shape
+    if n_words is None:
+        n_words = (n_bins + 31) // 32
+    assert bsz % block_rows == 0 and n_words % tile_words == 0, (bsz, n_words)
+    grid = (bsz // block_rows, n_words // tile_words)
+    return pl.pallas_call(
+        functools.partial(_kernel, tile_words=tile_words, n_bins=n_bins),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((2,), lambda i, j: (0,)),
+            pl.BlockSpec((block_rows, idx.shape[1]), lambda i, j: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, tile_words), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((bsz, n_words), jnp.uint32),
+        interpret=interpret,
+    )(coeffs, idx)

@@ -1,0 +1,159 @@
+"""Jit'd public wrappers for the Pallas kernels: padding, dtype checks,
+backend dispatch (interpret=True off-TPU), and estimator plumbing.
+
+These are the entry points the rest of the framework uses
+(``core.index.SketchIndex`` scorer, recsys ``retrieval_cand``, benchmarks).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..core import packed as pk
+from . import hash_build, popcount_sim, sketch_build
+
+__all__ = ["build_sketch", "hash_build_sketch", "sketch_score", "score_counts"]
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x: jax.Array, axis: int, multiple: int, fill) -> jax.Array:
+    size = x.shape[axis]
+    target = -(-size // multiple) * multiple
+    if target == size:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, target - size)
+    return jnp.pad(x, pads, constant_values=fill)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_bins", "block_rows", "tile_words", "interpret")
+)
+def build_sketch(
+    bins: jax.Array,
+    n_bins: int,
+    *,
+    block_rows: int = 8,
+    tile_words: int = 16,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Pre-mapped padded bin ids (B, P) -> packed sketches (B, ceil(N/32)).
+
+    Pads rows to ``block_rows`` (pad rows are all -1 -> zero sketches) and
+    the word axis to ``tile_words``; crops both on return. Bin ids >= n_bins
+    are treated as padding by construction (they never match a target).
+    """
+    if interpret is None:
+        interpret = _interpret_default()
+    bsz = bins.shape[0]
+    n_words = pk.num_words(n_bins)
+    tile_words = min(tile_words, n_words) if n_words % min(tile_words, n_words) == 0 else 1
+    padded_rows = _pad_to(bins.astype(jnp.int32), 0, block_rows, -1)
+    n_words_padded = -(-n_words // tile_words) * tile_words
+    out = sketch_build.build_sketch_kernel(
+        padded_rows,
+        n_words_padded * 32,
+        block_rows=block_rows,
+        tile_words=tile_words,
+        interpret=interpret,
+    )
+    return out[:bsz, :n_words]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_bins", "block_rows", "tile_words", "interpret")
+)
+def hash_build_sketch(
+    idx: jax.Array,
+    coeffs: jax.Array,
+    n_bins: int,
+    *,
+    block_rows: int = 8,
+    tile_words: int = 16,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Fused hash+build: raw indices (B, P) + (2,) uint32 multiply-shift
+    coefficients -> packed sketches, mapping computed in-kernel (the
+    tera-scale-d path where no pi table exists)."""
+    if interpret is None:
+        interpret = _interpret_default()
+    bsz = idx.shape[0]
+    n_words = pk.num_words(n_bins)
+    tile_words = min(tile_words, n_words) if n_words % min(tile_words, n_words) == 0 else 1
+    padded = _pad_to(idx.astype(jnp.int32), 0, block_rows, -1)
+    n_words_padded = -(-n_words // tile_words) * tile_words
+    out = hash_build.hash_build_kernel(
+        padded,
+        coeffs.astype(jnp.uint32),
+        n_bins,
+        n_words=n_words_padded,
+        block_rows=block_rows,
+        tile_words=tile_words,
+        interpret=interpret,
+    )
+    return out[:bsz, :n_words]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_bins", "measure", "block_q", "block_c", "block_w", "interpret"),
+)
+def sketch_score(
+    a: jax.Array,
+    b: jax.Array,
+    n_bins: int,
+    measure: str = "jaccard",
+    *,
+    block_q: int = 128,
+    block_c: int = 128,
+    block_w: int = 32,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Packed (Q, W) x (C, W) -> (Q, C) float32 similarity, fused epilogue.
+
+    Fill counts |a_s|, |b_s| are computed here in one cheap popcount pass
+    (O((Q+C) W) vs the kernel's O(Q C W)) and streamed into the epilogue.
+    Zero-padded rows produce fill 0 -> similarity 0; cropped on return.
+    """
+    if interpret is None:
+        interpret = _interpret_default()
+    if a.dtype != jnp.uint32 or b.dtype != jnp.uint32:
+        raise TypeError(f"packed sketches must be uint32, got {a.dtype}, {b.dtype}")
+    q, w = a.shape
+    c, _ = b.shape
+    block_q = min(block_q, max(8, q))
+    block_c = min(block_c, max(8, c))
+    na = pk.row_popcount(a)
+    nb = pk.row_popcount(b)
+    ap = _pad_to(a, 0, block_q, 0)
+    bp = _pad_to(b, 0, block_c, 0)
+    block_w = min(block_w, w) if w % min(block_w, w) == 0 else 1
+    ap = _pad_to(ap, 1, block_w, 0)
+    bp = _pad_to(bp, 1, block_w, 0)
+    nap = _pad_to(na.astype(jnp.int32), 0, block_q, 0)
+    nbp = _pad_to(nb.astype(jnp.int32), 0, block_c, 0)
+    out = popcount_sim.sketch_score_kernel(
+        ap, bp, nap, nbp, n_bins, measure,
+        block_q=block_q, block_c=block_c, block_w=block_w, interpret=interpret,
+    )
+    return out[:q, :c]
+
+
+def score_counts(a: jax.Array, b: jax.Array, **kw) -> jax.Array:
+    """AND-popcount counts (Q, C) as float32 (no estimator)."""
+    return sketch_score(a, b, n_bins=1, measure="counts", **kw)
+
+
+def make_scorer(n_bins: int, measure: str = "jaccard", **kw):
+    """Scorer closure for ``core.index.SketchIndex``."""
+
+    def scorer(qs, cand):
+        return sketch_score(qs, cand, n_bins=n_bins, measure=measure, **kw)
+
+    return scorer

@@ -1,0 +1,145 @@
+"""Pallas TPU kernel: packed AND-popcount scoring + fused estimator epilogue.
+
+Scores Q query sketches against C candidate sketches (both packed uint32,
+W words per row):
+
+    counts[q, c] = sum_w popcount( a[q, w] & b[c, w] )
+
+blocked (TQ, TC, TW) exactly like a tiled matmul — the word axis plays the
+contraction role, so the kernel inherits matmul-style arithmetic-intensity
+scaling: bytes/tile O(TQ*TW + TC*TW), work O(TQ*TC*TW). Popcount is SWAR
+(4 shift/mask stages + one byte-sum multiply), all VPU int32 lanes.
+
+On the final word-tile the Alg 1/3/4 estimator epilogue (DESIGN.md §1) is
+applied in-register — fill counts |a_s|, |b_s| stream in as tiny
+per-row vectors — so the (Q, C) float similarity matrix leaves VMEM once.
+
+Grid: (Q/TQ, C/TC, W/TW); accumulation across the last (fastest) grid dim
+into the output tile, initialized at k == 0 (TPU grid order is row-major).
+
+VMEM per program (defaults TQ=TC=128, TW=32):
+  a tile 128*32*4 = 16 KiB, b tile 16 KiB, AND intermediate
+  128*128*32*4 = 2 MiB, acc tile 64 KiB  << 16 MiB.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["score_kernel", "sketch_score_kernel"]
+
+def _popcount(x):
+    # constants built inside the traced body (pallas kernels may not capture
+    # module-level device constants)
+    m1 = jnp.uint32(0x55555555)
+    m2 = jnp.uint32(0x33333333)
+    m4 = jnp.uint32(0x0F0F0F0F)
+    h01 = jnp.uint32(0x01010101)
+    x = x - ((x >> 1) & m1)
+    x = (x & m2) + ((x >> 2) & m2)
+    x = (x + (x >> 4)) & m4
+    return (x * h01) >> 24
+
+
+def _cardinality(count, n_bins):
+    # ln(1 - c/N) / ln(1 - 1/N), fp32, clipped for full sketches
+    n = jnp.float32(n_bins)
+    c = jnp.clip(count.astype(jnp.float32), 0.0, n - 0.5)
+    inv_log_n = jnp.float32(1.0 / math.log1p(-1.0 / n_bins))
+    return (jnp.log(jnp.maximum(n - c, 0.5)) - jnp.float32(math.log(n_bins))) * inv_log_n
+
+
+def _epilogue(counts, na, nb, n_bins, measure):
+    """counts: (TQ, TC) int32 AND-popcounts; na: (TQ, 1); nb: (1, TC)."""
+    card_a = _cardinality(na, n_bins)
+    card_b = _cardinality(nb, n_bins)
+    union_s = na.astype(jnp.int32) + nb.astype(jnp.int32) - counts
+    card_u = _cardinality(union_s, n_bins)
+    ip = jnp.maximum(card_a + card_b - card_u, 0.0)
+    if measure == "ip":
+        return ip
+    if measure == "hamming":
+        return jnp.maximum(card_a + card_b - 2.0 * ip, 0.0)
+    if measure == "jaccard":
+        return jnp.clip(ip / jnp.maximum(card_u, 1e-9), 0.0, 1.0)
+    if measure == "cosine":
+        return jnp.clip(ip / jnp.sqrt(jnp.maximum(card_a * card_b, 1e-18)), 0.0, 1.0)
+    raise ValueError(f"unknown measure {measure!r}")
+
+
+def _kernel(a_ref, b_ref, na_ref, nb_ref, out_ref, acc_ref, *, n_bins, measure, k_steps):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a = a_ref[...]  # (TQ, TW) uint32
+    b = b_ref[...]  # (TC, TW) uint32
+    both = a[:, None, :] & b[None, :, :]  # (TQ, TC, TW)
+    acc_ref[...] += jnp.sum(_popcount(both).astype(jnp.int32), axis=-1)
+
+    @pl.when(k == k_steps - 1)
+    def _fin():
+        counts = acc_ref[...]
+        if measure == "counts":
+            out_ref[...] = counts.astype(jnp.float32)
+        else:
+            na = na_ref[...].astype(jnp.int32).reshape(-1, 1)
+            nb = nb_ref[...].astype(jnp.int32).reshape(1, -1)
+            out_ref[...] = _epilogue(counts, na, nb, n_bins, measure)
+
+
+def sketch_score_kernel(
+    a: jax.Array,
+    b: jax.Array,
+    na: jax.Array,
+    nb: jax.Array,
+    n_bins: int,
+    measure: str = "jaccard",
+    *,
+    block_q: int = 128,
+    block_c: int = 128,
+    block_w: int = 32,
+    interpret: bool = False,
+) -> jax.Array:
+    """(Q, W) x (C, W) packed sketches -> (Q, C) float32 similarity/counts.
+
+    ``na``/``nb`` are per-row fill counts (int32) — tiny, precomputed by a
+    single popcount pass in ``ops.sketch_score``. All dims must be multiples
+    of their block sizes (ops handles padding).
+    """
+    q, w = a.shape
+    c, _ = b.shape
+    assert q % block_q == 0 and c % block_c == 0 and w % block_w == 0, (q, c, w)
+    k_steps = w // block_w
+    grid = (q // block_q, c // block_c, k_steps)
+    return pl.pallas_call(
+        functools.partial(
+            _kernel, n_bins=n_bins, measure=measure, k_steps=k_steps
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_q, block_w), lambda i, j, k: (i, k)),
+            pl.BlockSpec((block_c, block_w), lambda i, j, k: (j, k)),
+            pl.BlockSpec((block_q,), lambda i, j, k: (i,)),
+            pl.BlockSpec((block_c,), lambda i, j, k: (j,)),
+        ],
+        out_specs=pl.BlockSpec((block_q, block_c), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((q, c), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((block_q, block_c), jnp.int32)],
+        interpret=interpret,
+    )(a, b, na, nb)
+
+
+def score_kernel(a, b, **kw):
+    """AND-popcount counts only (no estimator epilogue)."""
+    na = jnp.zeros((a.shape[0],), jnp.int32)
+    nb = jnp.zeros((b.shape[0],), jnp.int32)
+    return sketch_score_kernel(a, b, na, nb, n_bins=1, measure="counts", **kw)

@@ -1,0 +1,79 @@
+"""Pallas TPU kernel: BinSketch construction as compare-reduce (no scatter).
+
+The paper's reference construction is a random scatter
+(``sketch[pi(i)] = 1``) — pathological on TPU. The TPU-native formulation
+(DESIGN.md §3): for a row-block of B vectors with pre-mapped padded bin ids
+``bins: (B, P)`` (pad = -1) and an output tile of TW packed words
+(= 32*TW sketch bins), compute
+
+    hit[b, t] = any_p( bins[b, p] == bin_base + t ),   t in [0, 32*TW)
+
+as a broadcast-compare + OR-reduce on the VPU, then pack 32 bit-columns per
+uint32 word with a {1<<t} dot. Emits the sketch already packed, so the
+popcount scoring kernel reads 32x denser data.
+
+Grid: (rows / TB, words / TW). Each program touches a (TB, P) slab of bins
+(re-streamed per word-tile — bins are tiny next to the compare work) and
+writes a (TB, TW) uint32 tile.
+
+VMEM budget per program (defaults TB=8, TW=16, P<=1024):
+  bins slab   8*1024*4 B                = 32 KiB
+  compare     8*1024*512 bool (staged)  = 4 MiB     << 16 MiB VMEM
+  out tile    8*16*4 B                  = 0.5 KiB
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["build_sketch_kernel", "build_sketch"]
+
+
+def _kernel(bins_ref, out_ref, *, tile_words: int):
+    j = pl.program_id(1)
+    bins = bins_ref[...]  # (TB, P) int32, pad = -1
+    n_bits = tile_words * 32
+    base = j * n_bits
+    # (TB, P, n_bits) compare; pads (-1) never equal a non-negative bin id.
+    targets = base + jax.lax.broadcasted_iota(jnp.int32, (1, 1, n_bits), 2)
+    hits = jnp.any(bins[:, :, None] == targets, axis=1)  # (TB, n_bits) bool
+    words = hits.reshape(bins.shape[0], tile_words, 32).astype(jnp.uint32)
+    weights = (jnp.uint32(1) << jax.lax.broadcasted_iota(jnp.uint32, (1, 1, 32), 2)).astype(
+        jnp.uint32
+    )
+    out_ref[...] = jnp.sum(words * weights, axis=-1).astype(jnp.uint32)
+
+
+def build_sketch_kernel(
+    bins: jax.Array,
+    n_bins: int,
+    *,
+    block_rows: int = 8,
+    tile_words: int = 16,
+    interpret: bool = False,
+) -> jax.Array:
+    """``bins: (B, P)`` pre-mapped padded bin ids -> packed ``(B, W)`` uint32.
+
+    B must be a multiple of ``block_rows`` and ``ceil(n_bins/32)`` a multiple
+    of ``tile_words`` — ``ops.build_sketch`` handles padding/cropping.
+    """
+    bsz, _ = bins.shape
+    n_words = (n_bins + 31) // 32
+    assert bsz % block_rows == 0 and n_words % tile_words == 0, (bsz, n_words)
+    grid = (bsz // block_rows, n_words // tile_words)
+    return pl.pallas_call(
+        functools.partial(_kernel, tile_words=tile_words),
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_rows, bins.shape[1]), lambda i, j: (i, 0))],
+        out_specs=pl.BlockSpec((block_rows, tile_words), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((bsz, n_words), jnp.uint32),
+        interpret=interpret,
+    )(bins)
+
+
+def build_sketch(*args, **kwargs):  # convenience alias used by ops.py
+    return build_sketch_kernel(*args, **kwargs)

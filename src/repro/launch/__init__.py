@@ -1,0 +1,5 @@
+"""Launchers: production mesh, multi-pod dry-run, fault-tolerant train loop,
+sketch-serving driver. ``dryrun`` must be executed as a module
+(``python -m repro.launch.dryrun``) — importing it sets XLA device flags."""
+
+from . import mesh  # noqa: F401

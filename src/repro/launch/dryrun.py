@@ -1,0 +1,266 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell and
+extract the roofline terms from the compiled artifact.
+
+The two lines above MUST run before any other import (jax locks the device
+count at first init) — hence their position. Do not set that flag anywhere
+global; smoke tests and benches see 1 device.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2.5-14b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all            # every cell, both meshes
+    PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod-only
+
+Each cell writes experiments/dryrun/<arch>__<shape>__<mesh>.json with
+memory_analysis, cost_analysis, and per-type collective bytes parsed from
+the compiled (post-SPMD, per-device) HLO. ``benchmarks/bench_roofline.py``
+turns those into the §Roofline table.
+
+Hardware constants (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s ICI
+per link.
+"""
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import re  # noqa: E402
+import sys  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all", "collective-permute")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Sum bytes of every tensor literal in an HLO type string like
+    '(bf16[16,128]{1,0}, u32[])'."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo_text: str):
+    """Per-type result-bytes of collective ops in the per-device module.
+    all-reduce is charged 2x (ring: reduce-scatter + all-gather phases)."""
+    out = {k: {"count": 0, "bytes": 0} for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        # match '<result_type> <name> = <op>(' with op in collectives;
+        # fusions mentioning collectives in metadata are skipped by
+        # requiring ' = <op>' syntax.
+        m = re.match(r"(?:ROOT )?[%\w\-.]+ = (.+?) (\w[\w\-]*)\(", s)
+        if not m:
+            continue
+        ty, op = m.groups()
+        op = op.rstrip("-start").rstrip("-done") if op.endswith(("-start", "-done")) else op
+        base = None
+        for c in _COLLECTIVES:
+            if op == c or op == c + "-start":
+                base = c
+                break
+        if base is None:
+            continue
+        if op.endswith("-done"):
+            continue  # counted at -start
+        b = _shape_bytes(ty)
+        out[base]["count"] += 1
+        out[base]["bytes"] += b
+    total = sum(
+        v["bytes"] * (2 if k == "all-reduce" else 1) for k, v in out.items()
+    )
+    return out, total
+
+
+def run_cell(
+    arch: str,
+    shape: str,
+    multi_pod: bool,
+    out_dir: str = "experiments/dryrun",
+    rules=None,
+    tag: str = "",
+):
+    from repro.configs import get
+    from repro.launch.mesh import make_production_mesh
+
+    spec = get(arch)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = ("pod2x16x16" if multi_pod else "pod16x16") + (f"+{tag}" if tag else "")
+    n_dev = 512 if multi_pod else 256
+
+    t0 = time.time()
+    bundle = spec.build(mesh, shape_name=shape, rules=rules)
+    sketch_variant = shape.endswith("_sketch")
+    if sketch_variant:
+        # recsys retrieval via the paper's BinSketch tower (packed popcount)
+        base_shape = shape[: -len("_sketch")]
+        info = bundle["shape_table"][base_shape]
+        kind = "retrieval_sketch"
+        step = bundle["steps"]["retrieval_sketch"]
+        args = bundle["sketch_inputs"](base_shape)
+    else:
+        info = bundle["shape_table"][shape]
+        kind = info["kind"]
+        step = bundle["steps"][kind]
+        args = bundle["inputs"](shape)
+
+    with mesh:
+        lowered = jax.jit(step).lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+
+    # trip-count-aware roofline numerators (launch/hlo_analysis.py);
+    # raw cost_analysis() counts while bodies once and is kept for reference
+    from repro.launch.hlo_analysis import analyze
+
+    totals = analyze(hlo)
+    coll = totals["collectives"]
+    coll_total = totals["collective_bytes"]
+    flops = totals["flops"]
+    bytes_accessed = totals["hbm_bytes"]
+    raw_flops = float(cost.get("flops", 0.0))
+    raw_bytes = float(cost.get("bytes accessed", 0.0))
+    result = {
+        "arch": arch,
+        "shape": shape,
+        "mesh": mesh_name,
+        "n_devices": n_dev,
+        "kind": kind,
+        "skip_official": shape in spec.skips,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "code_bytes": mem.generated_code_size_in_bytes,
+        },
+        "cost": {
+            "flops_per_device": flops,
+            "bytes_accessed_per_device": bytes_accessed,
+            "dot_bytes_per_device": totals["dot_bytes"],  # TPU-fusion floor
+            "raw_cost_analysis_flops": raw_flops,  # while bodies counted once
+            "raw_cost_analysis_bytes": raw_bytes,
+        },
+        "collectives": coll,
+        "collective_bytes_per_device": coll_total,
+        "roofline_seconds": {
+            "compute": flops / PEAK_FLOPS,
+            # memory is reported as a [floor, upper] pair: floor = dot
+            # operand/result streaming (perfect TPU fusion), upper = full
+            # per-instruction walk of the CPU-lowered HLO (no fusion credit)
+            "memory": totals["dot_bytes"] / HBM_BW,
+            "memory_upper": bytes_accessed / HBM_BW,
+            "collective": coll_total / ICI_BW,
+        },
+        "hlo_lines": len(hlo.splitlines()),
+    }
+    # model-flops ratio for LMs
+    if spec.family == "lm":
+        cfg = bundle["config"]
+        n_active = cfg.n_active_params()
+        tokens = info["global_batch"] * (info["seq_len"] if kind == "train" else (info["seq_len"] if kind == "prefill" else 1))
+        mult = 6 if kind == "train" else 2
+        model_flops = mult * n_active * tokens / n_dev
+        result["model_flops_per_device"] = model_flops
+        result["useful_flops_ratio"] = model_flops / flops if flops else None
+
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"{arch}__{shape}__{mesh_name}.json")
+    with open(path, "w") as f:
+        json.dump(result, f, indent=1)
+
+    terms = {k: v for k, v in result["roofline_seconds"].items() if k != "memory_upper"}
+    dom = max(terms, key=terms.get)
+    print(
+        f"[OK] {arch} {shape} {mesh_name}: compile {t_compile:.0f}s  "
+        f"flops/dev {flops:.3g}  bytes/dev {bytes_accessed:.3g}  "
+        f"coll/dev {coll_total:.3g}B  dominant={dom} ({terms[dom]*1e3:.2f} ms)",
+        flush=True,
+    )
+    print(f"  memory_analysis: {mem}", flush=True)
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--single-pod-only", action="store_true")
+    ap.add_argument("--multi-pod-only", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--override-rules", default=None,
+                    help='JSON dict of logical-axis rule overrides, e.g. '
+                         '\'{"batch": ["data","model"], "heads": []}\' (perf experiments)')
+    ap.add_argument("--tag", default="", help="suffix for the result filename")
+    args = ap.parse_args()
+
+    rules = None
+    if args.override_rules:
+        rules = {k: tuple(v) for k, v in json.loads(args.override_rules).items()}
+
+    from repro.configs import all_archs
+
+    if args.all:
+        failures = []
+        for name, spec in sorted(all_archs().items()):
+            if name == "binsketch-paper":
+                continue
+            shapes = list(spec.shapes)
+            if spec.family == "recsys":
+                shapes.append("retrieval_cand_sketch")  # the paper's tower
+            for shape in shapes:
+                meshes = [False, True]
+                if args.single_pod_only:
+                    meshes = [False]
+                if args.multi_pod_only:
+                    meshes = [True]
+                for mp in meshes:
+                    try:
+                        run_cell(name, shape, mp, args.out)
+                    except Exception as e:  # noqa: BLE001
+                        failures.append((name, shape, mp, repr(e)))
+                        print(f"[FAIL] {name} {shape} mp={mp}: {e}", flush=True)
+                        traceback.print_exc()
+        if failures:
+            print(f"\n{len(failures)} FAILURES:")
+            for f_ in failures:
+                print(" ", f_)
+            sys.exit(1)
+        print("\nALL CELLS PASSED")
+        return
+
+    run_cell(args.arch, args.shape, args.multi_pod, args.out, rules=rules, tag=args.tag)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,253 @@
+"""Trip-count-aware roofline analysis of compiled (post-SPMD) HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts each ``while`` body ONCE — for a
+scan-over-layers transformer that under-reports FLOPs by ~n_layers x. This
+module re-derives the three roofline numerators from the per-device HLO
+text, multiplying every computation's cost by the product of its enclosing
+loops' ``known_trip_count`` annotations:
+
+  * FLOPs        — ``dot`` ops only: 2 * prod(result dims) * prod(lhs
+                   contracting dims). Elementwise FLOPs are ignored (dot-
+                   dominated workloads; same convention as 6ND accounting).
+  * HBM bytes    — per top-level instruction: result bytes + operand bytes,
+                   NOT descending into fusions (fusion internals stay in
+                   registers/VMEM — that is what fusion means); view-only
+                   ops (tuple/get-tuple-element/bitcast/parameter) are free.
+  * collective bytes — result bytes of all-gather / all-reduce /
+                   reduce-scatter / all-to-all / collective-permute, by
+                   type; the ring all-reduce 2x factor is applied by the
+                   caller.
+
+Every number is per device: the compiled module under SPMD is already the
+per-device program.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+__all__ = ["HloCostModel", "analyze"]
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "s4": 1, "u4": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.+\{\s*$")
+_INSTR = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\((.*)$")
+_TRIP = re.compile(r'known_trip_count[^0-9]*?"?n"?[^0-9]*?(\d+)')
+_OPERAND = re.compile(r"%([\w.\-]+)")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all", "collective-permute")
+_VIEW_OPS = {"parameter", "constant", "tuple", "get-tuple-element", "bitcast", "after-all"}
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _dims_of(type_str: str) -> Optional[Tuple[str, Tuple[int, ...]]]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return None
+    dt, dims = m.groups()
+    return dt, tuple(int(d) for d in dims.split(",") if d)
+
+
+@dataclasses.dataclass
+class _Instr:
+    name: str
+    type_str: str
+    op: str
+    rest: str  # everything after the opening paren
+
+
+@dataclasses.dataclass
+class _Costs:
+    flops: float = 0.0
+    bytes: float = 0.0
+    dot_bytes: float = 0.0  # operands+results of dots only (TPU fusion floor)
+    coll: Dict[str, float] = dataclasses.field(default_factory=dict)
+    coll_counts: Dict[str, int] = dataclasses.field(default_factory=dict)
+
+    def add(self, other: "_Costs", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        self.dot_bytes += other.dot_bytes * mult
+        for k, v in other.coll.items():
+            self.coll[k] = self.coll.get(k, 0.0) + v * mult
+        for k, v in other.coll_counts.items():
+            self.coll_counts[k] = self.coll_counts.get(k, 0) + int(v * mult)
+
+
+class HloCostModel:
+    def __init__(self, hlo_text: str):
+        self.computations: Dict[str, List[_Instr]] = {}
+        self.entry: Optional[str] = None
+        self._parse(hlo_text)
+        self._memo: Dict[str, _Costs] = {}
+
+    def _parse(self, text: str):
+        cur: Optional[str] = None
+        for line in text.splitlines():
+            if cur is None:
+                m = _COMP_HDR.match(line.strip())
+                if m:
+                    cur = m.group(1)
+                    self.computations[cur] = []
+                    if line.lstrip().startswith("ENTRY"):
+                        self.entry = cur
+                continue
+            if line.strip() == "}":
+                cur = None
+                continue
+            m = _INSTR.match(line)
+            if m:
+                name, ty, op, rest = m.groups()
+                self.computations[cur].append(_Instr(name, ty, op, rest))
+
+    # ------------------------------------------------------------------
+    def _instr_map(self, comp: str) -> Dict[str, _Instr]:
+        return {i.name: i for i in self.computations.get(comp, [])}
+
+    @staticmethod
+    def _split_args_attrs(rest: str) -> Tuple[str, str]:
+        """rest = 'args...), attr=..., ...' -> (args, attrs)."""
+        depth = 1
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    return rest[:i], rest[i + 1 :]
+        return rest, ""
+
+    def _dot_flops(self, instr: _Instr, imap: Dict[str, _Instr]) -> float:
+        out = _dims_of(instr.type_str)
+        if out is None:
+            return 0.0
+        _, out_dims = out
+        args, attrs = self._split_args_attrs(instr.rest)
+        ops = _OPERAND.findall(args)
+        if not ops:
+            return 0.0
+        lhs = imap.get(ops[0])
+        if lhs is None:
+            return 0.0
+        lshape = _dims_of(lhs.type_str)
+        if lshape is None:
+            return 0.0
+        _, ldims = lshape
+        m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", attrs)
+        contract = 1
+        if m and m.group(1):
+            for d in m.group(1).split(","):
+                if int(d) < len(ldims):
+                    contract *= ldims[int(d)]
+        n_out = 1
+        for d in out_dims:
+            n_out *= d
+        return 2.0 * n_out * contract
+
+    def _instr_bytes(self, instr: _Instr, imap: Dict[str, _Instr]) -> float:
+        if instr.op in _VIEW_OPS:
+            return 0.0
+        total = float(_type_bytes(instr.type_str))
+        args, _ = self._split_args_attrs(instr.rest)
+        for op_name in _OPERAND.findall(args):
+            src = imap.get(op_name)
+            if src is not None and src.op != "constant":
+                total += _type_bytes(src.type_str)
+        return total
+
+    def _called_comps(self, instr: _Instr) -> List[Tuple[str, float]]:
+        """(computation, multiplier) pairs invoked by this instruction."""
+        _, attrs = self._split_args_attrs(instr.rest)
+        out: List[Tuple[str, float]] = []
+        if instr.op == "while":
+            m = re.search(r"body=%?([\w.\-]+)", attrs)
+            t = _TRIP.search(attrs)
+            trip = float(t.group(1)) if t else 1.0
+            if m:
+                out.append((m.group(1), trip))
+        elif instr.op == "fusion":
+            m = re.search(r"calls=%?([\w.\-]+)", attrs)
+            if m:
+                out.append((m.group(1), 1.0))
+        elif instr.op in ("call", "async-start", "custom-call"):
+            m = re.search(r"(?:to_apply|called_computations=\{)%?([\w.\-]+)", attrs)
+            if m:
+                out.append((m.group(1), 1.0))
+        elif instr.op == "conditional":
+            for m in re.finditer(r"%([\w.\-]+)", attrs.split("branch_computations={")[-1].split("}")[0]) if "branch_computations" in attrs else []:
+                out.append((m.group(1), 1.0))
+        return out
+
+    def _comp_costs(self, comp: str, in_fusion: bool = False) -> _Costs:
+        key = comp + ("#f" if in_fusion else "")
+        if key in self._memo:
+            return self._memo[key]
+        c = _Costs()
+        imap = self._instr_map(comp)
+        for instr in self.computations.get(comp, []):
+            base = instr.op.replace("-start", "").replace("-done", "")
+            if instr.op == "dot":
+                c.flops += self._dot_flops(instr, imap)
+                # dot-bytes floor counts even inside fusions: dot operands/
+                # results must stream from HBM no matter how well TPU fuses
+                c.dot_bytes += self._instr_bytes(instr, imap)
+            if base in _COLLECTIVES and not instr.op.endswith("-done"):
+                b = float(_type_bytes(instr.type_str))
+                c.coll[base] = c.coll.get(base, 0.0) + b
+                c.coll_counts[base] = c.coll_counts.get(base, 0) + 1
+            if not in_fusion and instr.op != "fusion":
+                pass
+            if not in_fusion:
+                c.bytes += self._instr_bytes(instr, imap)
+            for callee, mult in self._called_comps(instr):
+                if instr.op == "fusion":
+                    # fusion internals: count FLOPs/collectives, not bytes
+                    c.add(
+                        dataclasses.replace(
+                            self._comp_costs(callee, in_fusion=True), bytes=0.0
+                        ),
+                        mult,
+                    )
+                else:
+                    c.add(self._comp_costs(callee, in_fusion=in_fusion), mult)
+        self._memo[key] = c
+        return c
+
+    def totals(self) -> Dict:
+        if self.entry is None:
+            raise ValueError("no ENTRY computation found")
+        c = self._comp_costs(self.entry)
+        coll_total = sum(
+            v * (2.0 if k == "all-reduce" else 1.0) for k, v in c.coll.items()
+        )
+        return {
+            "flops": c.flops,
+            "hbm_bytes": c.bytes,
+            "dot_bytes": c.dot_bytes,
+            "collectives": {
+                k: {"bytes": c.coll.get(k, 0.0), "count": c.coll_counts.get(k, 0)}
+                for k in sorted(set(c.coll) | set(c.coll_counts))
+            },
+            "collective_bytes": coll_total,
+        }
+
+
+def analyze(hlo_text: str) -> Dict:
+    return HloCostModel(hlo_text).totals()

@@ -1,0 +1,31 @@
+"""Production mesh definitions.
+
+A FUNCTION, not a module-level constant — importing this module never
+touches jax device state (required for the dry-run's forced-512-device
+initialization order).
+
+Single pod: (data=16, model=16) — 256 v5e chips.
+Multi-pod:  (pod=2, data=16, model=16) — 512 chips; the "pod" axis is an
+extra DP dimension by default (DESIGN.md §5), with PP over "pod" available
+via repro.parallel.pipeline.
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_host_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model_axis: int = 1):
+    """Mesh over whatever devices exist (CPU smoke / small-host runs)."""
+    n = len(jax.devices())
+    if n % model_axis:
+        model_axis = 1
+    return jax.make_mesh((n // model_axis, model_axis), ("data", "model"))

@@ -1,0 +1,141 @@
+"""Fault-tolerant training driver.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen2.5-14b --smoke \
+        --steps 50 --ckpt-dir /tmp/ckpt
+
+Fault-tolerance story (exercised by tests/test_train_loop.py):
+  * checkpoint every ``--ckpt-every`` steps, async + atomic (manager);
+  * SIGTERM/SIGINT triggers a final synchronous checkpoint before exit
+    (preemption hook — what a TPU maintenance event sends);
+  * restart resumes from the latest manifest: params, optimizer state,
+    data-pipeline position and step counter all restore; the batch stream
+    replays identically (deterministic pipeline);
+  * straggler detection: per-step wall time EWMA + deviation; steps slower
+    than mu + STRAGGLER_K*sigma are logged with the host blamed — at real
+    scale this feeds the scheduler's replace-node decision; here it
+    degrades to logging (single host) but the detector logic is live;
+  * elastic restore: ``--ckpt-dir`` written on mesh A restores onto a
+    different device count (restore re-device_puts with current mesh
+    shardings; leaves are stored unsharded).
+"""
+
+from __future__ import annotations
+
+import argparse
+import signal
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+STRAGGLER_K = 3.0
+
+
+class StragglerDetector:
+    def __init__(self, alpha: float = 0.1):
+        self.alpha = alpha
+        self.mean = None
+        self.var = 0.0
+        self.events = []
+
+    def observe(self, step: int, dt: float) -> bool:
+        if self.mean is None:
+            self.mean = dt
+            return False
+        sigma = max(self.var, 1e-12) ** 0.5
+        is_straggler = dt > self.mean + STRAGGLER_K * sigma and dt > 1.5 * self.mean
+        if is_straggler:
+            self.events.append((step, dt, self.mean))
+        d = dt - self.mean
+        self.mean += self.alpha * d
+        self.var = (1 - self.alpha) * (self.var + self.alpha * d * d)
+        return is_straggler
+
+
+def make_lm_batches(cfg, table, shape, seed=0):
+    info = table[shape]
+    b, s = info["global_batch"], info["seq_len"]
+    rng = np.random.default_rng(seed)
+
+    def gen(step):
+        r = np.random.default_rng((seed, step))
+        tokens = r.integers(0, cfg.vocab, (b, s + 1), dtype=np.int64).astype(np.int32)
+        return {"tokens": jnp.asarray(tokens[:, :-1]), "labels": jnp.asarray(tokens[:, 1:])}
+
+    del rng
+    return gen
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2.5-14b")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--no-smoke", dest="smoke", action="store_false")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--model-axis", type=int, default=1)
+    args = ap.parse_args(argv)
+
+    from repro.checkpoint import CheckpointManager
+    from repro.configs import get
+    from repro.launch.mesh import make_host_mesh
+
+    mesh = make_host_mesh(args.model_axis)
+    spec = get(args.arch)
+    bundle = spec.build(mesh, shape_name="train_4k", smoke=args.smoke)
+    model, cfg = bundle["model"], bundle["config"]
+    train_step = jax.jit(bundle["steps"]["train"], donate_argnums=(0, 1))
+
+    mgr = CheckpointManager(args.ckpt_dir, keep=3)
+    start_step = 0
+    latest = mgr.latest_step()
+    if latest is not None:
+        state, aux = mgr.restore(latest, {"params": model.abstract_params(),
+                                          "opt": jax.eval_shape(bundle["opt_init"], model.abstract_params())})
+        params, opt_state = state["params"], state["opt"]
+        start_step = aux["step"] + 1
+        print(f"[resume] restored step {aux['step']} from {args.ckpt_dir}", flush=True)
+    else:
+        params = model.init(jax.random.PRNGKey(args.seed))
+        opt_state = bundle["opt_init"](params)
+
+    gen = make_lm_batches(cfg, bundle["shape_table"], "train_4k", args.seed)
+    detector = StragglerDetector()
+
+    stop = {"now": False}
+
+    def on_term(signum, frame):
+        stop["now"] = True
+
+    signal.signal(signal.SIGTERM, on_term)
+    signal.signal(signal.SIGINT, on_term)
+
+    step = start_step
+    for step in range(start_step, args.steps):
+        t0 = time.time()
+        batch = gen(step)
+        params, opt_state, metrics = train_step(params, opt_state, batch)
+        loss = float(metrics["loss"])
+        dt = time.time() - t0
+        if detector.observe(step, dt):
+            print(f"[straggler] step {step} took {dt:.3f}s (ewma {detector.mean:.3f}s) — "
+                  f"host 0 flagged for re-dispatch", flush=True)
+        print(f"step {step:5d} loss {loss:.4f} ({dt*1e3:.0f} ms)", flush=True)
+        if not np.isfinite(loss):
+            raise RuntimeError(f"loss diverged at step {step}")
+        if (step + 1) % args.ckpt_every == 0:
+            mgr.save(step, {"params": params, "opt": opt_state}, aux={"step": step}, blocking=False)
+        if stop["now"]:
+            print("[preempt] SIGTERM — final checkpoint", flush=True)
+            mgr.save(step, {"params": params, "opt": opt_state}, aux={"step": step}, blocking=True)
+            sys.exit(0)
+    mgr.save(step, {"params": params, "opt": opt_state}, aux={"step": step}, blocking=True)
+    print(f"[done] {args.steps} steps; straggler events: {len(detector.events)}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""Model zoo: unified LM transformer, GraphSAGE, recsys stack."""
+
+from . import gnn, layers, moe, recsys, transformer  # noqa: F401

@@ -1,0 +1,14 @@
+"""Optimizer substrate: AdamW, Adafactor, int8 error-feedback compression."""
+
+from . import adafactor, adamw, grad_compress  # noqa: F401
+from .adafactor import AdafactorConfig, AdafactorState  # noqa: F401
+from .adamw import AdamWConfig, AdamWState  # noqa: F401
+
+
+def make(name: str):
+    """(init, update, config_cls) triple by name."""
+    if name == "adamw":
+        return adamw.init, adamw.update, adamw.AdamWConfig
+    if name == "adafactor":
+        return adafactor.init, adafactor.update, adafactor.AdafactorConfig
+    raise ValueError(f"unknown optimizer {name!r}")

@@ -1,0 +1,96 @@
+"""Adafactor [Shazeer & Stern 2018] — factored second moments.
+
+For a (r, c) matrix the second moment is stored as a row vector + column
+vector (O(r + c) instead of O(r c)); no first moment. This is what makes
+the 405B / 1T-param configs trainable on a 16 GB/chip pod: optimizer state
+is ~1e-3 of Adam's (per-device byte accounting in EXPERIMENTS.md §Dry-run).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdafactorConfig", "AdafactorState", "init", "update"]
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdafactorConfig:
+    lr: float = 1e-2
+    decay_rate: float = 0.8
+    eps: float = 1e-30
+    clip_threshold: float = 1.0
+    weight_decay: float = 0.0
+    min_dim_size_to_factor: int = 128
+    warmup_steps: int = 100
+
+
+class Factored(NamedTuple):
+    row: jax.Array  # (..., r) second-moment row means
+    col: jax.Array  # (..., c) second-moment column means
+
+
+class AdafactorState(NamedTuple):
+    step: jax.Array
+    v: PyTree  # per param leaf: Factored for matrices, full fp32 otherwise
+
+
+def _should_factor(cfg: AdafactorConfig, shape) -> bool:
+    return len(shape) >= 2 and min(shape[-2:]) >= cfg.min_dim_size_to_factor
+
+
+def init(params: PyTree, cfg: Optional[AdafactorConfig] = None) -> AdafactorState:
+    cfg = cfg or AdafactorConfig()
+    p_leaves, treedef = jax.tree.flatten(params)
+    v_leaves = []
+    for p in p_leaves:
+        if _should_factor(cfg, p.shape):
+            v_leaves.append(
+                Factored(
+                    row=jnp.zeros(p.shape[:-1], jnp.float32),
+                    col=jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                )
+            )
+        else:
+            v_leaves.append(jnp.zeros(p.shape, jnp.float32))
+    return AdafactorState(step=jnp.zeros((), jnp.int32), v=treedef.unflatten(v_leaves))
+
+
+def update(
+    cfg: AdafactorConfig, grads: PyTree, state: AdafactorState, params: PyTree
+) -> Tuple[PyTree, AdafactorState]:
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    beta2 = 1.0 - t ** (-cfg.decay_rate)
+    lr = cfg.lr * jnp.minimum(1.0, t / max(cfg.warmup_steps, 1))
+
+    p_leaves, treedef = jax.tree.flatten(params)
+    g_leaves = treedef.flatten_up_to(grads)
+    v_leaves = treedef.flatten_up_to(state.v)
+
+    new_p, new_v = [], []
+    for p, g, v in zip(p_leaves, g_leaves, v_leaves):
+        g32 = g.astype(jnp.float32)
+        g2 = jnp.square(g32) + cfg.eps
+        if isinstance(v, Factored):
+            row = beta2 * v.row + (1 - beta2) * jnp.mean(g2, axis=-1)
+            col = beta2 * v.col + (1 - beta2) * jnp.mean(g2, axis=-2)
+            row_mean = jnp.mean(row, axis=-1, keepdims=True)
+            denom = (row / jnp.maximum(row_mean, cfg.eps))[..., None] * col[..., None, :]
+            u = g32 / jnp.sqrt(denom + cfg.eps)
+            v_new: Any = Factored(row=row, col=col)
+        else:
+            v_new = beta2 * v + (1 - beta2) * g2
+            u = g32 / jnp.sqrt(v_new + cfg.eps)
+        rms = jnp.sqrt(jnp.mean(jnp.square(u)) + cfg.eps)
+        u = u / jnp.maximum(1.0, rms / cfg.clip_threshold)
+        p32 = p.astype(jnp.float32) - lr * (u + cfg.weight_decay * p.astype(jnp.float32))
+        new_p.append(p32.astype(p.dtype))
+        new_v.append(v_new)
+
+    return treedef.unflatten(new_p), AdafactorState(step=step, v=treedef.unflatten(new_v))

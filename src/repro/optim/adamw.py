@@ -1,0 +1,84 @@
+"""AdamW (decoupled weight decay), pytree-native, no external deps.
+
+Moments are stored in fp32 regardless of param dtype (bf16-safe), and are
+sharded identically to their parameters — under pjit this gives ZeRO-style
+optimizer-state sharding for free wherever params are sharded.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWConfig", "AdamWState", "init", "update", "global_norm"]
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip_norm: Optional[float] = 1.0
+    warmup_steps: int = 100
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: PyTree
+    nu: PyTree
+
+
+def init(params: PyTree) -> AdamWState:
+    f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        mu=jax.tree.map(f32, params),
+        nu=jax.tree.map(f32, params),
+    )
+
+
+def global_norm(tree: PyTree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def update(
+    cfg: AdamWConfig, grads: PyTree, state: AdamWState, params: PyTree
+) -> Tuple[PyTree, AdamWState]:
+    step = state.step + 1
+    if cfg.grad_clip_norm is not None:
+        gnorm = global_norm(grads)
+        scale = jnp.minimum(1.0, cfg.grad_clip_norm / jnp.maximum(gnorm, 1e-9))
+        grads = jax.tree.map(lambda g: g * scale, grads)
+
+    warm = jnp.minimum(1.0, step.astype(jnp.float32) / max(cfg.warmup_steps, 1))
+    lr = cfg.lr * warm
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    p_leaves, treedef = jax.tree.flatten(params)
+    g_leaves = treedef.flatten_up_to(grads)
+    m_leaves = treedef.flatten_up_to(state.mu)
+    v_leaves = treedef.flatten_up_to(state.nu)
+
+    new_p, new_m, new_v = [], [], []
+    for p, g, m, v in zip(p_leaves, g_leaves, m_leaves, v_leaves):
+        g32 = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g32
+        v = b2 * v + (1 - b2) * jnp.square(g32)
+        upd = (m / bc1) / (jnp.sqrt(v / bc2) + cfg.eps)
+        p32 = p.astype(jnp.float32) - lr * (upd + cfg.weight_decay * p.astype(jnp.float32))
+        new_p.append(p32.astype(p.dtype))
+        new_m.append(m)
+        new_v.append(v)
+
+    unflat = treedef.unflatten
+    return unflat(new_p), AdamWState(step=step, mu=unflat(new_m), nu=unflat(new_v))

@@ -1,0 +1,4 @@
+"""Distribution substrate: sharding rules, hand-scheduled collectives, PP."""
+
+from . import collectives, pipeline, sharding  # noqa: F401
+from .sharding import RULES, logical_to_spec, named_sharding, tree_shardings  # noqa: F401

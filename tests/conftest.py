@@ -1,0 +1,30 @@
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+
+
+def run_multidevice(code: str, n_devices: int = 8, timeout: int = 600) -> str:
+    """Run a python snippet in a subprocess with forced host device count.
+
+    Multi-device shard_map tests must not pollute this process's jax device
+    state (smoke tests see 1 device per the assignment), hence subprocess.
+    """
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = SRC
+    r = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True, timeout=timeout, env=env
+    )
+    if r.returncode != 0:
+        raise AssertionError(f"subprocess failed:\nSTDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr}")
+    return r.stdout
+
+
+@pytest.fixture(scope="session")
+def multidevice():
+    return run_multidevice

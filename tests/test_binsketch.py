@@ -1,0 +1,120 @@
+"""Core BinSketch: Theorem 1 sizing, Algorithms 1-4 accuracy, invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    BinSketchConfig,
+    estimators,
+    make_mapping,
+    packed,
+    sketch_dense,
+    sketch_indices,
+    theorem1_N,
+)
+
+
+def make_pair(d, n_common, n_a, n_b, seed=0, pad=None):
+    rng = np.random.default_rng(seed)
+    words = rng.choice(d, n_common + n_a + n_b, replace=False)
+    a = np.sort(np.concatenate([words[:n_common], words[n_common : n_common + n_a]]))
+    b = np.sort(np.concatenate([words[:n_common], words[n_common + n_a :]]))
+    pad = pad or max(len(a), len(b))
+    padf = lambda v: np.concatenate([v, -np.ones(pad - len(v), np.int32)]).astype(np.int32)
+    return jnp.asarray(np.stack([padf(a), padf(b)]))
+
+
+def test_theorem1_formula():
+    # N = psi * sqrt(psi/2 * ln(2/rho))
+    assert theorem1_N(100, rho=0.1) == int(np.ceil(100 * np.sqrt(50 * np.log(20))))
+    assert theorem1_N(20, 0.5) >= 20
+    with pytest.raises(ValueError):
+        theorem1_N(0)
+    with pytest.raises(ValueError):
+        theorem1_N(10, 1.5)
+
+
+@pytest.mark.parametrize("mode", ["table", "hash"])
+def test_estimation_accuracy_all_measures(mode):
+    """Theorem 1: |IP_est - IP| = O(sqrt(psi ln(1/rho))) whp. We check the
+    bound with slack across several geometries; rho=0.05."""
+    d, psi, rho = 20000, 120, 0.05
+    cfg = BinSketchConfig(d=d, n_bins=theorem1_N(psi, rho), mode=mode)
+    bound = 14 * np.sqrt(psi / 2 * np.log(2 / rho))  # Lemma 12 literal constant
+    for seed, (c, ea, eb) in enumerate([(60, 40, 30), (100, 10, 15), (5, 80, 90), (0, 50, 60)]):
+        mapping = make_mapping(cfg, jax.random.PRNGKey(seed))
+        idx = make_pair(d, c, ea, eb, seed=seed, pad=psi)
+        sk = sketch_indices(cfg, mapping, idx)
+        na, nb, nab = estimators.pairwise_counts(sk[:1], sk[1:])
+        est = estimators.estimates_from_counts(na[:, None], nb[None, :], nab, cfg.n_bins)
+        ip_t = c
+        sa, sb = c + ea, c + eb
+        assert abs(float(est["ip"][0, 0]) - ip_t) < bound
+        assert abs(float(est["hamming"][0, 0]) - (sa + sb - 2 * ip_t)) < 2 * bound
+        js_t = ip_t / (sa + sb - ip_t)
+        cos_t = ip_t / np.sqrt(sa * sb)
+        assert abs(float(est["jaccard"][0, 0]) - js_t) < 0.15
+        assert abs(float(est["cosine"][0, 0]) - cos_t) < 0.15
+
+
+def test_estimates_tight_in_practice():
+    """Paper §V: practice far beats the worst-case bound — at the Theorem-1
+    N the relative IP error should be small for mid-similarity pairs."""
+    d, psi = 50000, 200
+    cfg = BinSketchConfig.from_sparsity(d, psi, rho=0.05)
+    errs = []
+    for seed in range(10):
+        mapping = make_mapping(cfg, jax.random.PRNGKey(100 + seed))
+        idx = make_pair(d, 100, 50, 50, seed=seed, pad=psi)
+        sk = sketch_indices(cfg, mapping, idx)
+        sim = estimators.pairwise_similarity(sk[:1], sk[1:], cfg.n_bins, "ip")
+        errs.append(abs(float(sim[0, 0]) - 100.0))
+    assert np.mean(errs) < 10.0, errs  # <10% of |a|
+
+
+def test_or_homomorphism_and_dense_agreement():
+    d = 4096
+    cfg = BinSketchConfig(d=d, n_bins=512)
+    mapping = make_mapping(cfg, jax.random.PRNGKey(3))
+    rng = np.random.default_rng(3)
+    a = rng.choice(d, 70, replace=False)
+    b = rng.choice(d, 50, replace=False)
+    pad = 160
+    padf = lambda v: np.concatenate([v, -np.ones(pad - len(v), np.int32)]).astype(np.int32)
+    idx = jnp.asarray(np.stack([padf(a), padf(b), padf(np.union1d(a, b))]))
+    sk = sketch_indices(cfg, mapping, idx)
+    assert (sk[2] == (sk[0] | sk[1])).all()  # sketch(a|b) == sketch(a)|sketch(b)
+
+    dense = np.zeros((2, d), np.uint8)
+    dense[0, a] = 1
+    dense[1, b] = 1
+    sk2 = sketch_dense(cfg, mapping, jnp.asarray(dense))
+    assert (sk2 == sk[:2]).all()
+
+
+def test_empty_and_full_rows():
+    cfg = BinSketchConfig(d=100, n_bins=64)
+    mapping = make_mapping(cfg, jax.random.PRNGKey(0))
+    empty = jnp.full((1, 8), -1, jnp.int32)
+    sk = sketch_indices(cfg, mapping, empty)
+    assert int(packed.row_popcount(sk)[0]) == 0
+    est = estimators.pairwise_similarity(sk, sk, cfg.n_bins, "ip")
+    assert float(est[0, 0]) == 0.0
+
+
+def test_mapping_determinism_and_range():
+    cfg = BinSketchConfig(d=1000, n_bins=37, mode="table")
+    m1 = make_mapping(cfg, jax.random.PRNGKey(7))
+    m2 = make_mapping(cfg, jax.random.PRNGKey(7))
+    assert (m1 == m2).all()
+    assert int(m1.min()) >= 0 and int(m1.max()) < 37
+
+    cfgh = BinSketchConfig(d=1 << 30, n_bins=37, mode="hash")  # huge d, no table
+    mh = make_mapping(cfgh, jax.random.PRNGKey(7))
+    from repro.core.binsketch import map_indices
+
+    bins = map_indices(cfgh, mh, jnp.asarray([[0, 12345, (1 << 30) - 1, -1]], jnp.int32))
+    assert int(bins[0, 3]) == -1  # padding passes through
+    assert (np.asarray(bins[0, :3]) >= 0).all() and (np.asarray(bins[0, :3]) < 37).all()

@@ -1,0 +1,115 @@
+"""Data pipeline, categorical encoding, optimizers, GNN substrate units."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import categorical
+from repro.data import ShardedBatcher, synthetic
+from repro.optim import adafactor, adamw
+
+
+def test_synthetic_corpus_statistics():
+    spec = synthetic.DATASETS["tiny"]
+    idx, lens = synthetic.generate_corpus(spec, seed=0)
+    assert idx.shape[0] == spec.n_points
+    assert (lens <= spec.max_nnz).all() and (lens >= 1).all()
+    # rows are unique sorted indices with -1 padding
+    r = idx[0]
+    vals = r[r >= 0]
+    assert (np.diff(vals) > 0).all()
+    # power law: top word much more frequent than median
+    flat = idx[idx >= 0]
+    counts = np.bincount(flat, minlength=spec.d)
+    assert counts.max() > 20 * max(np.median(counts[counts > 0]), 1)
+
+
+def test_similar_pairs_exact_jaccard():
+    spec = synthetic.DATASETS["tiny"]
+    a, b, js = synthetic.generate_similar_pairs(spec, 0.8, 4, seed=1)
+    for i in range(4):
+        sa = set(a[i][a[i] >= 0].tolist())
+        sb = set(b[i][b[i] >= 0].tolist())
+        true = len(sa & sb) / len(sa | sb)
+        assert abs(true - js[i]) < 0.02
+
+
+def test_sharded_batcher_host_slicing():
+    arr = {"x": np.arange(128)}
+    b0 = ShardedBatcher(arr, 32, seed=5, host_index=0, host_count=4, prefetch=False)
+    b1 = ShardedBatcher(arr, 32, seed=5, host_index=1, host_count=4, prefetch=False)
+    x0 = next(iter(b0))["x"]
+    x1 = next(iter(b1))["x"]
+    assert x0.shape == (8,) and x1.shape == (8,)
+    assert set(x0) & set(x1) == set()  # disjoint host shards
+
+
+def test_categorical_encoder_roundtrip():
+    data = np.array([[0, 5, 2], [1, 5, 3], [0, 6, 2]], np.int64)
+    enc = categorical.CategoricalEncoder.fit(data)
+    oh = enc.transform(data)
+    assert oh.shape == (3, 3)
+    assert enc.d == 2 + 2 + 2
+    # equal rows -> distance 0; rows 0,1 differ in 2 features
+    assert categorical.categorical_distance(data[0], data[2]) == 1
+    assert categorical.categorical_distance(data[0], data[1]) == 2
+
+
+def test_adamw_descends_quadratic():
+    w = jnp.asarray(np.random.default_rng(0).normal(size=(32,)), jnp.float32)
+    params = {"w": w}
+    cfg = adamw.AdamWConfig(lr=0.1, weight_decay=0.0, warmup_steps=1)
+    state = adamw.init(params)
+    loss = lambda p: jnp.sum(p["w"] ** 2)
+    for _ in range(50):
+        g = jax.grad(loss)(params)
+        params, state = adamw.update(cfg, g, state, params)
+    assert float(loss(params)) < 1e-2 * float(loss({"w": w}))
+
+
+def test_adafactor_descends_and_state_is_factored():
+    rng = np.random.default_rng(1)
+    params = {"w": jnp.asarray(rng.normal(size=(256, 192)), jnp.float32)}
+    cfg = adafactor.AdafactorConfig(lr=0.05, warmup_steps=1)
+    state = adafactor.init(params, cfg)
+    assert isinstance(state.v["w"], adafactor.Factored)
+    assert state.v["w"].row.shape == (256,) and state.v["w"].col.shape == (192,)
+    loss = lambda p: jnp.mean(p["w"] ** 2)
+    l0 = float(loss(params))
+    for _ in range(30):
+        g = jax.grad(loss)(params)
+        params, state = adafactor.update(cfg, g, state, params)
+    assert float(loss(params)) < 0.3 * l0
+
+
+def test_gnn_neighborhood_sketches():
+    from repro.models.gnn import neighborhood_sketches
+
+    rng = np.random.default_rng(0)
+    # two nodes with identical in-neighborhoods, one different
+    edges = []
+    nbrs = rng.choice(50, 10, replace=False)
+    for s in nbrs:
+        edges.append((s, 50))
+        edges.append((s, 51))
+    for s in rng.choice(50, 10, replace=False):
+        edges.append((s, 52))
+    edges = np.asarray(edges, np.int64)
+    sk, cfg = neighborhood_sketches(edges, 53, psi=16, rho=0.05)
+    from repro.core import estimators
+
+    sim = estimators.pairwise_similarity(sk[50:51], sk[51:53], cfg.n_bins, "jaccard")
+    assert float(sim[0, 0]) > 0.95  # identical neighborhoods
+    assert float(sim[0, 1]) < 0.6
+
+
+def test_gnn_sampler_respects_graph():
+    from repro.models.gnn import NeighborSampler
+
+    edges = np.asarray([(1, 0), (2, 0), (3, 0), (4, 9)], np.int64)
+    s = NeighborSampler(10, edges, seed=0)
+    nb = s.sample(np.asarray([0]), 64)
+    assert set(nb[0].tolist()) <= {1, 2, 3}
+    iso = s.sample(np.asarray([5]), 4)  # isolated node self-loops
+    assert (iso == 5).all()

@@ -1,0 +1,62 @@
+"""Distributed SketchIndex: candidate-sharded scoring + O(k·devices) top-k
+merge, and the OR-homomorphic shard-local corpus sketching story."""
+
+import numpy as np
+
+
+def test_query_sharded_matches_single_device(multidevice):
+    out = multidevice(
+        """
+import numpy as np, jax, jax.numpy as jnp
+from repro.core import BinSketchConfig, make_mapping
+from repro.core.index import SketchIndex
+from repro.data.synthetic import DATASETS, generate_similar_pairs
+
+spec = DATASETS["tiny"]
+a, b, _ = generate_similar_pairs(spec, 0.9, 32, seed=0)
+cfg = BinSketchConfig.from_sparsity(spec.d, spec.max_nnz, rho=0.05)
+mapping = make_mapping(cfg, jax.random.PRNGKey(0))
+index = SketchIndex.build(cfg, mapping, jnp.asarray(a))
+
+sc1, ids1 = index.query(jnp.asarray(b[:8]), k=4)
+
+mesh = jax.make_mesh((8,), ("data",))
+sc8, ids8 = index.query_sharded(mesh, "data", jnp.asarray(b[:8]), k=4)
+np.testing.assert_array_equal(np.asarray(ids1[:, 0]), np.asarray(ids8[:, 0]))
+np.testing.assert_allclose(np.asarray(sc1), np.asarray(sc8), rtol=1e-5, atol=1e-6)
+print("SHARDED_RETRIEVAL_OK")
+""",
+        8,
+    )
+    assert "SHARDED_RETRIEVAL_OK" in out
+
+
+def test_shard_local_sketching_merges_by_or(multidevice):
+    """Corpus shards sketch independently; union statistics come from the
+    OR-merge (no second pass over data) — the distributed build story."""
+    out = multidevice(
+        """
+import numpy as np, jax, jax.numpy as jnp
+from repro.core import BinSketchConfig, make_mapping, sketch_indices
+from repro.core.packed import or_rows
+
+d = 4096
+cfg = BinSketchConfig(d=d, n_bins=512)
+mapping = make_mapping(cfg, jax.random.PRNGKey(1))
+rng = np.random.default_rng(0)
+# one logical document split across 4 shards (e.g. sharded ingestion)
+parts = [np.sort(rng.choice(d, 30, replace=False)) for _ in range(4)]
+pad = 140
+def padr(rows):
+    out = np.full((len(rows), pad), -1, np.int32)
+    for i, r in enumerate(rows): out[i, :len(r)] = r
+    return jnp.asarray(out)
+shard_sketches = sketch_indices(cfg, mapping, padr(parts))
+merged = or_rows(shard_sketches, axis=0)
+full = sketch_indices(cfg, mapping, padr([np.unique(np.concatenate(parts))]))[0]
+assert (merged == full).all()
+print("OR_MERGE_OK")
+""",
+        4,
+    )
+    assert "OR_MERGE_OK" in out

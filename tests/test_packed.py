@@ -1,0 +1,45 @@
+"""Bit-packing substrate: roundtrips, popcount, OR-reduction."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import packed
+
+
+@pytest.mark.parametrize("n", [1, 31, 32, 33, 64, 77, 1000])
+def test_pack_roundtrip(n):
+    rng = np.random.default_rng(n)
+    bits = (rng.random((3, n)) < 0.3).astype(np.uint8)
+    p = packed.pack_bits(jnp.asarray(bits))
+    assert p.shape == (3, (n + 31) // 32) and p.dtype == jnp.uint32
+    assert (packed.unpack_bits(p, n) == bits).all()
+
+
+def test_popcount_exact():
+    rng = np.random.default_rng(0)
+    x = rng.integers(0, 2**32, 1000, dtype=np.uint64).astype(np.uint32)
+    got = np.asarray(packed.popcount(jnp.asarray(x)))
+    want = np.array([bin(int(v)).count("1") for v in x], np.uint32)
+    assert (got == want).all()
+
+
+def test_row_popcount_and_pairwise():
+    rng = np.random.default_rng(1)
+    bits_a = (rng.random((4, 100)) < 0.4).astype(np.uint8)
+    bits_b = (rng.random((6, 100)) < 0.4).astype(np.uint8)
+    pa, pb = packed.pack_bits(jnp.asarray(bits_a)), packed.pack_bits(jnp.asarray(bits_b))
+    assert (np.asarray(packed.row_popcount(pa)) == bits_a.sum(1)).all()
+    want = bits_a @ bits_b.T
+    got = np.asarray(packed.and_popcount_pairwise(pa, pb))
+    assert (got == want).all()
+
+
+def test_or_rows_is_union():
+    bits = np.zeros((3, 70), np.uint8)
+    bits[0, :10] = 1
+    bits[1, 5:20] = 1
+    bits[2, 65:] = 1
+    p = packed.pack_bits(jnp.asarray(bits))
+    u = packed.or_rows(p, axis=0)
+    assert (packed.unpack_bits(u[None], 70)[0] == bits.any(0)).all()

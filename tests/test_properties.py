@@ -1,0 +1,123 @@
+"""Hypothesis property tests on the system's core invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    BinSketchConfig,
+    categorical,
+    estimators,
+    make_mapping,
+    packed,
+    sketch_indices,
+)
+
+D = 2000
+CFG = BinSketchConfig(d=D, n_bins=256)
+MAPPING = make_mapping(CFG, jax.random.PRNGKey(0))
+PAD = 96
+
+
+def _pad_rows(rows):
+    out = np.full((len(rows), PAD), -1, np.int32)
+    for i, r in enumerate(rows):
+        u = np.unique(np.asarray(sorted(r), np.int32))[:PAD]
+        out[i, : len(u)] = u
+    return jnp.asarray(out)
+
+
+sets_st = st.sets(st.integers(0, D - 1), min_size=0, max_size=PAD)
+
+
+@settings(max_examples=25, deadline=None)
+@given(sets_st, sets_st)
+def test_or_homomorphism(a, b):
+    """sketch(a | b) == sketch(a) | sketch(b) — exactly, always."""
+    sk = sketch_indices(CFG, MAPPING, _pad_rows([a, b, a | b]))
+    assert (sk[2] == (sk[0] | sk[1])).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(sets_st)
+def test_monotone_and_deterministic(a):
+    """Subsets sketch to submasks; sketching is deterministic."""
+    sub = set(list(a)[: len(a) // 2])
+    sk = sketch_indices(CFG, MAPPING, _pad_rows([a, sub]))
+    assert (np.asarray(sk[1] & ~sk[0]) == 0).all()  # sub's bits subset of a's
+    sk2 = sketch_indices(CFG, MAPPING, _pad_rows([a, sub]))
+    assert (sk == sk2).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(sets_st, sets_st)
+def test_estimator_ranges(a, b):
+    """Estimates are always in valid ranges, even degenerate inputs."""
+    sk = sketch_indices(CFG, MAPPING, _pad_rows([a, b]))
+    na, nb, nab = estimators.pairwise_counts(sk[:1], sk[1:])
+    est = estimators.estimates_from_counts(na[:, None], nb[None, :], nab, CFG.n_bins)
+    for k in ("ip", "hamming"):
+        assert float(est[k][0, 0]) >= 0.0
+    for k in ("jaccard", "cosine"):
+        v = float(est[k][0, 0])
+        assert 0.0 <= v <= 1.0
+    assert np.isfinite([float(v[0, 0]) for v in est.values()]).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 64), st.integers(1, 500))
+def test_fill_inversion_bounds(count, n_bins):
+    """cardinality_from_fill is monotone and nonneg for any count<=N."""
+    count = min(count, n_bins)
+    c1 = float(estimators.cardinality_from_fill(jnp.asarray(count), n_bins))
+    c0 = float(estimators.cardinality_from_fill(jnp.asarray(max(count - 1, 0)), n_bins))
+    assert c1 >= c0 >= 0.0
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    st.lists(
+        st.tuples(st.integers(0, 5), st.integers(0, 3), st.integers(0, 9)),
+        min_size=2,
+        max_size=20,
+    )
+)
+def test_categorical_hamming_identity(rows):
+    """one-hot encoding: Ham_sym == 2 * categorical distance, exactly."""
+    data = np.asarray(rows, np.int64)
+    enc = categorical.CategoricalEncoder.fit(data)
+    oh = enc.transform(data)  # (n, F) one-hot indices
+    # dense one-hot vectors
+    dense = np.zeros((len(rows), enc.d), np.uint8)
+    for i, r in enumerate(oh):
+        dense[i, r] = 1
+    ham = (dense[0] != dense[1]).sum()
+    dist = categorical.categorical_distance(data[0], data[1])
+    assert ham == 2 * dist
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 1000), st.integers(1, 200))
+def test_packed_roundtrip_prop(seed, n):
+    rng = np.random.default_rng(seed)
+    bits = (rng.random((2, n)) < 0.5).astype(np.uint8)
+    assert (packed.unpack_bits(packed.pack_bits(jnp.asarray(bits)), n) == bits).all()
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_pipeline_replay_property(seed):
+    """Restarted pipeline replays the identical batch stream."""
+    from repro.data import ShardedBatcher
+
+    arr = {"x": np.arange(64)[:, None]}
+    b1 = ShardedBatcher(arr, global_batch=8, seed=seed, prefetch=False)
+    it1 = iter(b1)
+    first = [next(it1)["x"] for _ in range(3)]
+    state = b1.state_dict()
+    b2 = ShardedBatcher(arr, global_batch=8, seed=seed, prefetch=False)
+    b2.load_state_dict(state)
+    nxt1, nxt2 = next(it1)["x"], next(iter(b2))["x"]
+    assert (nxt1 == nxt2).all()
+    del first
