@@ -1,0 +1,108 @@
+"""Serving-engine throughput: ingest docs/s (batch vs streaming) and query
+q/s with the ingest-time fill cache on vs off.
+
+    PYTHONPATH=src python -m benchmarks.bench_engine [--dataset tiny]
+
+Emits ``BENCH_engine.json`` (repo root by default) so the perf trajectory
+of the serving subsystem is recorded PR-over-PR. Uses the oracle backend on
+CPU (the Pallas interpret path measures Python, not the system); on TPU run
+with ``--backend pallas``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _timeit(fn, repeats: int) -> float:
+    fn()  # warm up (trace + compile)
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        jax.block_until_ready(fn())
+    return (time.perf_counter() - t0) / repeats
+
+
+def run(dataset="tiny", backend="oracle", queries=64, topk=10, repeats=5, seed=0):
+    from repro.core import BinSketchConfig, make_mapping
+    from repro.data.synthetic import DATASETS, generate_corpus
+    from repro.engine import QueryPlanner, SketchEngine
+
+    spec = DATASETS[dataset]
+    idx, lens = generate_corpus(spec, seed=seed)
+    n = idx.shape[0]
+    cfg = BinSketchConfig.from_sparsity(spec.d, int(lens.max()), 0.05)
+    mapping = make_mapping(cfg, jax.random.PRNGKey(0))
+    idx_dev = jnp.asarray(idx)
+    planner = QueryPlanner(min_batch=8, max_batch=max(queries, 8))
+
+    # ---- ingest: one-shot batch build
+    def batch_build():
+        eng = SketchEngine.build(cfg, mapping, idx_dev, backend=backend, planner=planner)
+        return eng.store.sketches
+
+    t_batch = _timeit(batch_build, repeats)
+
+    # ---- ingest: streaming adds (256-doc chunks into doubling capacity)
+    def stream_build():
+        eng = SketchEngine.build(cfg, mapping, backend=backend, planner=planner, capacity=64)
+        for s in range(0, n, 256):
+            eng.add(idx_dev[s : s + 256])
+        return eng.store.sketches
+
+    t_stream = _timeit(stream_build, repeats)
+
+    # ---- query: fill cache on vs off
+    engine = SketchEngine.build(cfg, mapping, idx_dev, backend=backend, planner=planner)
+    rng = np.random.default_rng(1)
+    q = jnp.asarray(idx[rng.choice(n, queries, replace=False)])
+
+    t_cached = _timeit(lambda: engine.query(q, topk)[1], repeats)
+    t_uncached = _timeit(lambda: engine.query(q, topk, use_fill_cache=False)[1], repeats)
+
+    return {
+        "dataset": dataset,
+        "backend": backend,
+        "corpus_docs": int(n),
+        "n_bins": int(cfg.n_bins),
+        "n_words": int(cfg.n_words),
+        "queries": int(queries),
+        "topk": int(topk),
+        "ingest_batch_docs_per_s": n / t_batch,
+        "ingest_stream_docs_per_s": n / t_stream,
+        "query_qps_fill_cache": queries / t_cached,
+        "query_qps_no_cache": queries / t_uncached,
+        "fill_cache_speedup": t_uncached / t_cached,
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dataset", default="tiny")
+    ap.add_argument("--backend", default="oracle")
+    ap.add_argument("--queries", type=int, default=64)
+    ap.add_argument("--topk", type=int, default=10)
+    ap.add_argument("--repeats", type=int, default=5)
+    ap.add_argument("--out", default="BENCH_engine.json")
+    args = ap.parse_args(argv)
+
+    t0 = time.time()
+    result = run(args.dataset, args.backend, args.queries, args.topk, args.repeats)
+    result["wall_s"] = time.time() - t0
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=2)
+    print("metric,value")
+    for k in ("ingest_batch_docs_per_s", "ingest_stream_docs_per_s",
+              "query_qps_fill_cache", "query_qps_no_cache", "fill_cache_speedup"):
+        print(f"{k},{result[k]:.1f}")
+    print(f"# bench_engine done in {result['wall_s']:.1f}s -> {args.out}")
+    return result
+
+
+if __name__ == "__main__":
+    main()

@@ -13,9 +13,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import BinSketchConfig, estimators, make_mapping, sketch_indices
+from repro.core import BinSketchConfig, make_mapping
 from repro.core.baselines import bcs, minhash
 from repro.data.synthetic import DATASETS, generate_corpus, generate_similar_pairs
+from repro.engine import SketchEngine
 
 KEY = jax.random.PRNGKey(0)
 
@@ -60,9 +61,9 @@ def run(dataset="tiny", n_bins=512, thresholds=(0.8, 0.5, 0.2), seed=5):
 
     cfg = BinSketchConfig(d=spec.d, n_bins=n_bins)
     mapping = make_mapping(cfg, KEY)
-    skc = sketch_indices(cfg, mapping, jnp.asarray(corpus))
-    skq = sketch_indices(cfg, mapping, jnp.asarray(queries))
-    sims_bin = np.asarray(estimators.pairwise_similarity(skq, skc, n_bins, "jaccard"))
+    # the serving subsystem's path: store-cached corpus fills + planner
+    engine = SketchEngine.build(cfg, mapping, jnp.asarray(corpus), backend="oracle")
+    sims_bin = np.asarray(engine.score_all(jnp.asarray(queries)))
 
     bm = bcs.make_mapping(spec.d, n_bins, KEY)
     skc_b = bcs.sketch_indices(bm, n_bins, jnp.asarray(corpus))

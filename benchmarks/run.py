@@ -13,7 +13,14 @@ import time
 
 
 def main() -> None:
-    which = set(sys.argv[1:]) or {"mse", "time", "ranking", "kernels", "roofline"}
+    which = set(sys.argv[1:]) or {"mse", "time", "ranking", "kernels", "engine", "roofline"}
+
+    if "engine" in which:
+        print("=" * 70)
+        print("## bench_engine — serving engine: ingest docs/s + fill-cache q/s")
+        from benchmarks import bench_engine
+
+        bench_engine.main([])
 
     if "mse" in which:
         print("=" * 70)

@@ -18,11 +18,14 @@ def main():
     ap.add_argument("--dataset", default="tiny", choices=["tiny", "kos", "bbc", "enron", "nytimes"])
     ap.add_argument("--queries", type=int, default=64)
     ap.add_argument("--topk", type=int, default=10)
+    ap.add_argument("--backend", default="auto",
+                    help="engine backend (auto | oracle | pallas | pallas-interpret)")
     args = ap.parse_args()
     serve.main([
         "--dataset", args.dataset,
         "--queries", str(args.queries),
         "--topk", str(args.topk),
+        "--backend", args.backend,
     ])
 
 

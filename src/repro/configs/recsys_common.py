@@ -117,6 +117,10 @@ def make_recsys_bundle(
         query = {
             "sketch": _sds(mesh, (info["batch"], n_words), jnp.uint32, P(None, None)),
             "corpus_sketches": _sds(mesh, (c, n_words), jnp.uint32, P("model", None)),
+            # ingest-time fill-count cache from the serving SketchStore,
+            # sharded with its corpus rows — the retrieval step consumes it
+            # instead of popcounting all C rows per query (DESIGN.md §6)
+            "corpus_fills": _sds(mesh, (c,), jnp.int32, P("model")),
         }
         return (params_in, query)
 

@@ -4,7 +4,7 @@ Public API:
     BinSketchConfig, theorem1_N, make_mapping, sketch_indices, sketch_dense
     estimators.estimates_from_counts / pairwise_similarity  (Algorithms 1-4)
     packed.*                 (bit packing + popcount substrate)
-    index.SketchIndex        (retrieval / ranking front-end)
+    index.SketchIndex        (deprecated shim over repro.engine.SketchEngine)
     categorical.*            (paper §I.A categorical extension)
     baselines.*              (BCS, MinHash, DOPH, OddSketch, SimHash, CBE)
 """

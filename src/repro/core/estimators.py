@@ -90,10 +90,19 @@ def estimates_from_counts(
     return {"ip": ip, "hamming": hamming, "jaccard": jaccard, "cosine": cosine}
 
 
-def pairwise_counts(a_packed: jnp.ndarray, b_packed: jnp.ndarray):
-    """(|a_s| (Q,), |b_s| (C,), <a_s,b_s> (Q,C)) via the pure-jnp oracle path."""
-    na = pk.row_popcount(a_packed)
-    nb = pk.row_popcount(b_packed)
+def pairwise_counts(
+    a_packed: jnp.ndarray,
+    b_packed: jnp.ndarray,
+    a_fills: jnp.ndarray = None,
+    b_fills: jnp.ndarray = None,
+):
+    """(|a_s| (Q,), |b_s| (C,), <a_s,b_s> (Q,C)) via the pure-jnp oracle path.
+
+    ``a_fills``/``b_fills`` are optional precomputed fill counts (e.g. the
+    ``SketchStore`` ingest-time cache); ``None`` popcounts that side here.
+    """
+    na = a_fills if a_fills is not None else pk.row_popcount(a_packed)
+    nb = b_fills if b_fills is not None else pk.row_popcount(b_packed)
     nab = pk.and_popcount_pairwise(a_packed, b_packed)
     return na, nb, nab
 
@@ -104,13 +113,17 @@ def pairwise_similarity(
     n_bins: int,
     measure: str = "jaccard",
     convention: str = "symmetric",
+    *,
+    a_fills: jnp.ndarray = None,
+    b_fills: jnp.ndarray = None,
 ) -> jnp.ndarray:
     """(Q, C) estimated similarity matrix from packed sketches (oracle path).
 
     The production path for large C is ``repro.kernels.ops.sketch_score``,
-    which fuses AND-popcount and this estimator epilogue in VMEM.
+    which fuses AND-popcount and this estimator epilogue in VMEM. Precomputed
+    fill counts (the store's ingest-time cache) skip the per-call popcount.
     """
-    na, nb, nab = pairwise_counts(a_packed, b_packed)
+    na, nb, nab = pairwise_counts(a_packed, b_packed, a_fills, b_fills)
     est = estimates_from_counts(na[:, None], nb[None, :], nab, n_bins, convention)
     if measure not in est:
         raise ValueError(f"unknown measure {measure!r}; have {sorted(est)}")

@@ -1,14 +1,15 @@
-"""SketchIndex — retrieval over a sketched corpus (paper §IV-B at scale).
+"""DEPRECATED — ``SketchIndex`` is a thin compatibility shim.
 
-Build: sketch every corpus row (shard-local on a mesh; sketches are
-row-partitioned, no communication). Query: score Q query sketches against
-all C candidates with the packed AND-popcount path + estimator epilogue,
-then top-k. The scorer is pluggable so the oracle (pure jnp) and the Pallas
-kernel (``repro.kernels.ops.sketch_score``) share this front-end.
+The retrieval stack lives in :mod:`repro.engine` now:
+``engine.SketchEngine`` (serving front-end), ``engine.SketchStore``
+(incremental corpus + fill-count cache), and the backend registry that
+replaced the ``scorer`` callable and hand-threaded ``interpret=`` flags.
 
-The distributed variant shards candidates over the mesh, takes a local
-top-k per shard, all-gathers the (k, score) pairs and reduces — the merge
-traffic is O(k * devices), independent of corpus size.
+This module keeps the old constructor/query surface for existing callers
+and delegates everything to an internally-held engine. New code should use
+``repro.engine`` directly. The historical ``query_sharded`` tail bug (corpus
+silently truncated to a multiple of the mesh axis) is fixed by delegation:
+the engine pads with zero sketches and masks them out of top-k.
 """
 
 from __future__ import annotations
@@ -18,9 +19,9 @@ from typing import Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh
 
-from . import binsketch, estimators
+from . import binsketch
 
 __all__ = ["SketchIndex", "topk_merge"]
 
@@ -29,11 +30,28 @@ Scorer = Callable[[jnp.ndarray, jnp.ndarray], jnp.ndarray]  # (Q,W),(C,W)->(Q,C)
 
 @dataclasses.dataclass
 class SketchIndex:
+    """Deprecated front-end over :class:`repro.engine.SketchEngine`."""
+
     cfg: binsketch.BinSketchConfig
     mapping: jax.Array
     corpus: jax.Array  # (C, W) packed sketches
     measure: str = "jaccard"
-    scorer: Optional[Scorer] = None  # defaults to the oracle path
+    scorer: Optional[Scorer] = None  # legacy hook; prefer engine backends
+
+    def _engine(self):
+        cached, corpus_at_build = self.__dict__.get("_engine_cache", (None, None))
+        if cached is not None and corpus_at_build is self.corpus:
+            return cached
+        from ..engine import SketchEngine, SketchStore, from_legacy_scorer, get_backend
+
+        backend = (
+            from_legacy_scorer(self.scorer) if self.scorer is not None
+            else get_backend("oracle")
+        )
+        store = SketchStore.from_sketches(self.cfg, self.mapping, self.corpus)
+        eng = SketchEngine(store, backend, self.measure)
+        self.__dict__["_engine_cache"] = (eng, self.corpus)
+        return eng
 
     @staticmethod
     def build(
@@ -45,47 +63,27 @@ class SketchIndex:
         batch: int = 4096,
     ) -> "SketchIndex":
         """corpus_idx: (C, P) padded sparse rows; sketched in batches."""
-        chunks = []
-        for start in range(0, corpus_idx.shape[0], batch):
-            chunks.append(binsketch.sketch_indices(cfg, mapping, corpus_idx[start : start + batch]))
-        return SketchIndex(cfg, mapping, jnp.concatenate(chunks, axis=0), measure, scorer)
+        from ..engine import SketchEngine, SketchStore, from_legacy_scorer, get_backend
 
-    def _scores(self, q_packed: jnp.ndarray, candidates: jnp.ndarray) -> jnp.ndarray:
-        if self.scorer is not None:
-            return self.scorer(q_packed, candidates)
-        return estimators.pairwise_similarity(q_packed, candidates, self.cfg.n_bins, self.measure)
+        store = SketchStore.from_indices(cfg, mapping, corpus_idx, batch=batch)
+        index = SketchIndex(cfg, mapping, store.sketches, measure, scorer)
+        # prime the engine cache with the store built above (its fill cache
+        # is already populated — don't popcount the corpus a second time)
+        backend = from_legacy_scorer(scorer) if scorer is not None else get_backend("oracle")
+        index.__dict__["_engine_cache"] = (
+            SketchEngine(store, backend, measure), index.corpus
+        )
+        return index
 
     def query(self, query_idx: jax.Array, k: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
         """(Q, P) padded query rows -> (scores (Q,k), ids (Q,k))."""
-        q = binsketch.sketch_indices(self.cfg, self.mapping, query_idx)
-        scores = self._scores(q, self.corpus)
-        return jax.lax.top_k(scores, k)
+        return self._engine().query(query_idx, k)
 
     def query_sharded(
         self, mesh: Mesh, axis: str, query_idx: jax.Array, k: int
     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
         """Candidate-sharded retrieval: local top-k then O(k*devices) merge."""
-        q = binsketch.sketch_indices(self.cfg, self.mapping, query_idx)
-        n_local = self.corpus.shape[0] // mesh.shape[axis]
-
-        def local(qs, cand, base):
-            s = self._scores(qs, cand)
-            sc, ix = jax.lax.top_k(s, k)
-            ids = base[0, 0] + ix
-            all_sc = jax.lax.all_gather(sc, axis, axis=1, tiled=True)  # (Q, shards*k)
-            all_ids = jax.lax.all_gather(ids, axis, axis=1, tiled=True)
-            sc2, ix2 = jax.lax.top_k(all_sc, k)
-            return sc2, jnp.take_along_axis(all_ids, ix2, axis=1)
-
-        base = jnp.arange(self.corpus.shape[0], dtype=jnp.int32).reshape(-1, 1)
-        fn = jax.shard_map(
-            local,
-            mesh=mesh,
-            in_specs=(P(), P(axis, None), P(axis, None)),
-            out_specs=(P(), P()),
-            check_vma=False,
-        )
-        return fn(q, self.corpus[: n_local * mesh.shape[axis]], base[: n_local * mesh.shape[axis]])
+        return self._engine().query_sharded(mesh, axis, query_idx, k)
 
 
 def topk_merge(scores: jnp.ndarray, ids: jnp.ndarray, k: int):

@@ -1,0 +1,36 @@
+"""repro.engine — streaming, shard-aware sketch serving (DESIGN.md §6).
+
+| piece | file | role |
+|---|---|---|
+| SketchStore | store.py | packed corpus, incremental OR-ingest, fill cache |
+| Backend registry | backends.py | oracle / pallas / pallas-interpret behind one name |
+| QueryPlanner | planner.py | ragged batches -> bounded set of jit shapes |
+| SketchEngine | engine.py | build + query + sharded query on the pieces above |
+
+``core.index.SketchIndex`` is the deprecated batch-era front-end, kept as a
+thin shim over this package.
+"""
+
+from .backends import (
+    Backend,
+    available_backends,
+    from_legacy_scorer,
+    get_backend,
+    register_backend,
+)
+from .engine import SketchEngine, shard_topk
+from .planner import QueryChunk, QueryPlanner
+from .store import SketchStore
+
+__all__ = [
+    "Backend",
+    "QueryChunk",
+    "QueryPlanner",
+    "SketchEngine",
+    "SketchStore",
+    "available_backends",
+    "from_legacy_scorer",
+    "get_backend",
+    "register_backend",
+    "shard_topk",
+]

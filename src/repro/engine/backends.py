@@ -1,0 +1,152 @@
+"""Backend protocol + registry for the sketch engine.
+
+Replaces the two ad-hoc dispatch mechanisms the retrieval stack grew:
+the ``scorer: Optional[Callable]`` plumbed through ``core.index`` and the
+``interpret=`` flags threaded by hand into ``kernels.ops``. A backend owns
+both halves of the data path — *sketch* (construction) and *score*
+(AND-popcount + estimator epilogue) — so callers pick a name once:
+
+  * ``oracle``            pure-jnp reference (scatter build, materialized
+                          (Q, C, W) scoring) — small problems, shard_map
+                          bodies, ground truth.
+  * ``pallas``            Pallas kernels, ``interpret`` auto-resolved from
+                          the platform (compiled on TPU, interpret off-TPU).
+  * ``pallas-tpu``        Pallas kernels, compiled (TPU only).
+  * ``pallas-interpret``  Pallas kernels forced to interpret mode.
+  * ``auto``              alias for ``pallas``.
+
+``score`` takes optional precomputed fill counts; when the caller holds a
+:class:`~repro.engine.store.SketchStore` the corpus fills come from its
+ingest-time cache instead of an O(C·W) popcount per query (DESIGN.md §6).
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional, Protocol
+
+import jax
+
+from ..core import binsketch, estimators
+
+__all__ = ["Backend", "register_backend", "get_backend", "available_backends",
+           "from_legacy_scorer"]
+
+
+class Backend(Protocol):
+    """Both halves of the sketch data path behind one name."""
+
+    name: str
+
+    def sketch(
+        self, cfg: binsketch.BinSketchConfig, mapping: jax.Array, idx: jax.Array
+    ) -> jax.Array:
+        """(B, P) padded sparse rows -> (B, W) packed sketches."""
+        ...
+
+    def score(
+        self,
+        q: jax.Array,
+        corpus: jax.Array,
+        n_bins: int,
+        measure: str,
+        *,
+        q_fills: Optional[jax.Array] = None,
+        corpus_fills: Optional[jax.Array] = None,
+    ) -> jax.Array:
+        """Packed (Q, W) x (C, W) -> (Q, C) float32 similarity.
+
+        ``q_fills`` / ``corpus_fills`` are optional precomputed |row_s|
+        vectors; ``None`` means the backend popcounts that side itself.
+        """
+        ...
+
+
+class OracleBackend:
+    """Pure-jnp reference path (also the body used inside shard_map)."""
+
+    name = "oracle"
+
+    def sketch(self, cfg, mapping, idx):
+        return binsketch.sketch_indices(cfg, mapping, idx)
+
+    def score(self, q, corpus, n_bins, measure, *, q_fills=None, corpus_fills=None):
+        return estimators.pairwise_similarity(
+            q, corpus, n_bins, measure, a_fills=q_fills, b_fills=corpus_fills
+        )
+
+
+class PallasBackend:
+    """Pallas kernel path; ``interpret=None`` resolves per-platform."""
+
+    def __init__(self, name: str, interpret: Optional[bool]):
+        self.name = name
+        self.interpret = interpret
+
+    def sketch(self, cfg, mapping, idx):
+        from ..kernels import ops
+
+        bins = binsketch.map_indices(cfg, mapping, idx)
+        return ops.build_sketch(bins, cfg.n_bins, interpret=self.interpret)
+
+    def score(self, q, corpus, n_bins, measure, *, q_fills=None, corpus_fills=None):
+        from ..kernels import ops
+
+        return ops.sketch_score(
+            q, corpus, n_bins=n_bins, measure=measure,
+            a_fills=q_fills, b_fills=corpus_fills, interpret=self.interpret,
+        )
+
+
+class _LegacyScorerBackend:
+    """Adapter for the deprecated ``SketchIndex.scorer`` callable (sketching
+    falls back to the oracle; cached fills cannot be streamed through the
+    two-argument closure and are ignored)."""
+
+    name = "legacy-scorer"
+
+    def __init__(self, scorer: Callable[[jax.Array, jax.Array], jax.Array]):
+        self._scorer = scorer
+        self._oracle = OracleBackend()
+
+    def sketch(self, cfg, mapping, idx):
+        return self._oracle.sketch(cfg, mapping, idx)
+
+    def score(self, q, corpus, n_bins, measure, *, q_fills=None, corpus_fills=None):
+        return self._scorer(q, corpus)
+
+
+_REGISTRY: Dict[str, Callable[[], Backend]] = {}
+
+
+def register_backend(name: str, factory: Callable[[], Backend]) -> None:
+    _REGISTRY[name] = factory
+
+
+def available_backends():
+    return sorted(_REGISTRY)
+
+
+def get_backend(name: Optional[str] = None) -> Backend:
+    """Resolve a backend by name; ``None``/"auto" -> the Pallas kernels with
+    interpret auto-resolved (compiled on TPU, interpret elsewhere)."""
+    if name is None:
+        name = "auto"
+    if isinstance(name, str):
+        try:
+            return _REGISTRY[name]()
+        except KeyError:
+            raise ValueError(
+                f"unknown backend {name!r}; have {available_backends()}"
+            ) from None
+    return name  # already a Backend instance
+
+
+def from_legacy_scorer(scorer) -> Backend:
+    return _LegacyScorerBackend(scorer)
+
+
+register_backend("oracle", OracleBackend)
+register_backend("pallas", lambda: PallasBackend("pallas", None))
+register_backend("auto", lambda: PallasBackend("pallas", None))
+register_backend("pallas-tpu", lambda: PallasBackend("pallas-tpu", False))
+register_backend("pallas-interpret", lambda: PallasBackend("pallas-interpret", True))

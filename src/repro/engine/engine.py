@@ -1,0 +1,208 @@
+"""SketchEngine — the streaming, shard-aware serving front-end (DESIGN.md §6).
+
+Composes the three engine pieces into the paper's §IV-B ranking experiment
+run as a service:
+
+  * :class:`~repro.engine.store.SketchStore` — packed corpus, incremental
+    OR-homomorphic ingest, ingest-time fill-count cache;
+  * a :class:`~repro.engine.backends.Backend` — sketch + score kernels
+    behind one name (no ``interpret=`` plumbing, no scorer callables);
+  * a :class:`~repro.engine.planner.QueryPlanner` — ragged query batches
+    bucketed onto a bounded set of jit shapes.
+
+The sharded path lifts ``SketchIndex.query_sharded``'s local-top-k +
+O(k·devices) all-gather merge into the engine and fixes its tail bug:
+a corpus whose size is not divisible by the mesh axis is *padded* with zero
+sketches whose scores are masked to -inf, instead of silently dropping the
+tail docs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from ..core import binsketch, packed as pk
+from ..parallel.sharding import shard_map
+from . import backends as backends_mod
+from .backends import Backend
+from .planner import QueryPlanner
+from .store import SketchStore
+
+__all__ = ["SketchEngine", "shard_topk"]
+
+_NEG_INF = jnp.float32(-jnp.inf)
+
+
+def shard_topk(
+    qs: jax.Array,
+    cand: jax.Array,
+    n_bins: int,
+    measure: str,
+    k: int,
+    axis: str,
+    *,
+    backend: Optional[Backend] = None,
+    cand_fills: Optional[jax.Array] = None,
+    cand_ids: Optional[jax.Array] = None,
+    cand_valid: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Per-shard score -> local top-k -> O(k·devices) all-gather merge.
+
+    Call *inside* ``shard_map``: ``cand`` (C_loc, W) is this shard's slice of
+    the candidates, ``qs`` (Q, W) is replicated. ``cand_ids`` are this
+    shard's global doc ids (default: offset arange); ``cand_valid`` masks
+    padding rows (their scores become -inf so they never reach the merged
+    top-k). Shared by the engine's sharded path and the recsys retrieval
+    tower.
+    """
+    be = backend if backend is not None else backends_mod.OracleBackend()
+    s = be.score(qs, cand, n_bins, measure, corpus_fills=cand_fills)
+    if cand_valid is not None:
+        s = jnp.where(cand_valid[None, :], s, _NEG_INF)
+    sc, ix = jax.lax.top_k(s, k)
+    if cand_ids is None:
+        lo = jax.lax.axis_index(axis) * cand.shape[0]
+        ids = lo + ix
+    else:
+        ids = jnp.take(cand_ids, ix, axis=0)
+    sc_all = jax.lax.all_gather(sc, axis, axis=1, tiled=True)  # (Q, shards*k)
+    ids_all = jax.lax.all_gather(ids, axis, axis=1, tiled=True)
+    sc2, pos = jax.lax.top_k(sc_all, k)
+    return sc2, jnp.take_along_axis(ids_all, pos, axis=1)
+
+
+@dataclasses.dataclass
+class SketchEngine:
+    """Build + serve over a :class:`SketchStore` through one backend."""
+
+    store: SketchStore
+    backend: Backend
+    measure: str = "jaccard"
+    planner: QueryPlanner = dataclasses.field(default_factory=QueryPlanner)
+
+    # ------------------------------------------------------------ construct
+    @classmethod
+    def build(
+        cls,
+        cfg: binsketch.BinSketchConfig,
+        mapping: jax.Array,
+        corpus_idx: Optional[jax.Array] = None,
+        *,
+        backend=None,
+        measure: str = "jaccard",
+        planner: Optional[QueryPlanner] = None,
+        capacity: int = 1024,
+        batch: int = 4096,
+    ) -> "SketchEngine":
+        """Create an engine; ``corpus_idx`` (C, P) is ingested if given,
+        otherwise the engine starts empty and is fed via :meth:`add`."""
+        be = backends_mod.get_backend(backend)
+        if corpus_idx is not None:
+            store = SketchStore.from_indices(cfg, mapping, corpus_idx, backend=be, batch=batch)
+        else:
+            store = SketchStore.create(cfg, mapping, capacity=capacity)
+        return cls(store, be, measure, planner or QueryPlanner())
+
+    # ---------------------------------------------------------------- ingest
+    @property
+    def cfg(self) -> binsketch.BinSketchConfig:
+        return self.store.cfg
+
+    def add(self, idx: jax.Array, *, batch: int = 4096) -> range:
+        """Stream (B, P) padded sparse docs into the corpus; returns ids."""
+        return self.store.add(idx, backend=self.backend, batch=batch)
+
+    def merge_rows(self, doc_ids: jax.Array, idx: jax.Array) -> None:
+        """OR new content into existing docs (see SketchStore.merge_rows)."""
+        self.store.merge_rows(doc_ids, idx, backend=self.backend)
+
+    # ----------------------------------------------------------------- query
+    def _sketch_queries(self, query_idx: jax.Array) -> jax.Array:
+        return self.backend.sketch(self.cfg, self.store.mapping, query_idx)
+
+    def _padded_query_sketches(self, query_idx: jax.Array, padded: int) -> jax.Array:
+        q = query_idx.shape[0]
+        if padded > q:
+            pad = jnp.full((padded - q, query_idx.shape[1]), -1, query_idx.dtype)
+            query_idx = jnp.concatenate([query_idx, pad], axis=0)
+        return self._sketch_queries(query_idx)
+
+    def score_all(
+        self, query_idx: jax.Array, *, use_fill_cache: bool = True
+    ) -> jax.Array:
+        """(Q, P) padded query rows -> full (Q, C) similarity matrix.
+
+        ``use_fill_cache=False`` forces the legacy per-query corpus popcount
+        (benchmark baseline only)."""
+        if query_idx.shape[0] == 0:
+            return jnp.zeros((0, self.store.size), jnp.float32)
+        out = []
+        corpus = self.store.sketches
+        fills = self.store.fills if use_fill_cache else None
+        for chunk in self.planner.plan(query_idx.shape[0]):
+            qs = self._padded_query_sketches(
+                query_idx[chunk.start : chunk.start + chunk.rows], chunk.padded
+            )
+            s = self.backend.score(
+                qs, corpus, self.cfg.n_bins, self.measure,
+                q_fills=pk.row_popcount(qs), corpus_fills=fills,
+            )
+            out.append(s[: chunk.rows])
+        return jnp.concatenate(out, axis=0)
+
+    def query(
+        self, query_idx: jax.Array, k: int, *, use_fill_cache: bool = True
+    ) -> Tuple[jax.Array, jax.Array]:
+        """(Q, P) padded query rows -> (scores (Q, k), ids (Q, k))."""
+        scores = self.score_all(query_idx, use_fill_cache=use_fill_cache)
+        return jax.lax.top_k(scores, k)
+
+    # --------------------------------------------------------------- sharded
+    def query_sharded(
+        self,
+        mesh: Mesh,
+        axis: str,
+        query_idx: jax.Array,
+        k: int,
+    ) -> Tuple[jax.Array, jax.Array]:
+        """Candidate-sharded retrieval: local top-k then O(k·devices) merge.
+
+        The corpus is padded with zero sketches up to a multiple of the mesh
+        axis; pad rows score -inf and are masked out of the merged top-k
+        (no silent tail drop for non-divisible C).
+        """
+        c = self.store.size
+        shards = mesh.shape[axis]
+        n_local = -(-c // shards)
+        c_pad = n_local * shards
+        corpus = self.store.sketches
+        fills = self.store.fills
+        if c_pad > c:
+            corpus = jnp.pad(corpus, ((0, c_pad - c), (0, 0)))
+            fills = jnp.pad(fills, (0, c_pad - c))
+        ids = jnp.arange(c_pad, dtype=jnp.int32)
+        valid = ids < c
+        qs = self._sketch_queries(query_idx)
+        n_bins, measure = self.cfg.n_bins, self.measure
+        backend = self.backend  # same scoring path as the single-device query
+
+        def local(q_rep, cand, cand_fills, cand_ids, cand_valid):
+            return shard_topk(
+                q_rep, cand, n_bins, measure, k, axis,
+                backend=backend, cand_fills=cand_fills,
+                cand_ids=cand_ids, cand_valid=cand_valid,
+            )
+
+        fn = shard_map(
+            local,
+            mesh=mesh,
+            in_specs=(P(), P(axis, None), P(axis), P(axis), P(axis)),
+            out_specs=(P(), P()),
+            check_vma=False,
+        )
+        return fn(qs, corpus, fills, ids, valid)

@@ -1,0 +1,200 @@
+"""SketchStore — packed, capacity-managed sketch corpus with incremental ingest.
+
+The store owns the (C, W) packed corpus plus the *fill-count cache*: the
+per-row popcount |a_s| every estimator epilogue needs. The legacy path
+(``ops.sketch_score`` called cold) recomputed ``row_popcount`` over the whole
+corpus on every query — O(C·W) per call; the store computes fills exactly
+once at ingest and the query path streams the cached vector into the scorer
+(DESIGN.md §6).
+
+Ingest is incremental: ``add`` appends rows into preallocated capacity with
+amortized-doubling growth, so a streaming producer pays O(1) amortized
+device-concat per document instead of a rebuild-from-scratch. Because
+BinSketch is an OR-homomorphism, updates to an *existing* document and
+merges of two shard-local stores are both plain bitwise ORs (``merge_rows``,
+``merge``) — no second pass over raw data, ever.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, TYPE_CHECKING
+
+import jax
+import jax.numpy as jnp
+
+from ..core import binsketch, packed as pk
+
+if TYPE_CHECKING:  # pragma: no cover - typing only
+    from .backends import Backend
+
+__all__ = ["SketchStore"]
+
+
+def _grow(arr: jax.Array, new_capacity: int) -> jax.Array:
+    pads = [(0, new_capacity - arr.shape[0])] + [(0, 0)] * (arr.ndim - 1)
+    return jnp.pad(arr, pads)
+
+
+@dataclasses.dataclass
+class SketchStore:
+    """Packed sketch corpus + fill-count cache, doc id == row index."""
+
+    cfg: binsketch.BinSketchConfig
+    mapping: jax.Array
+    _sketches: jax.Array  # (capacity, W) uint32; rows >= size are zero
+    _fills: jax.Array  # (capacity,) int32; rows >= size are zero
+    size: int = 0
+
+    # ------------------------------------------------------------ construct
+    @classmethod
+    def create(
+        cls,
+        cfg: binsketch.BinSketchConfig,
+        mapping: jax.Array,
+        capacity: int = 1024,
+    ) -> "SketchStore":
+        capacity = max(int(capacity), 1)
+        return cls(
+            cfg,
+            mapping,
+            jnp.zeros((capacity, cfg.n_words), jnp.uint32),
+            jnp.zeros((capacity,), jnp.int32),
+            0,
+        )
+
+    @classmethod
+    def from_indices(
+        cls,
+        cfg: binsketch.BinSketchConfig,
+        mapping: jax.Array,
+        corpus_idx: jax.Array,
+        *,
+        backend: Optional["Backend"] = None,
+        batch: int = 4096,
+    ) -> "SketchStore":
+        """Batch build: sketch (C, P) padded sparse rows in ``batch`` chunks."""
+        store = cls.create(cfg, mapping, capacity=max(int(corpus_idx.shape[0]), 1))
+        store.add(corpus_idx, backend=backend, batch=batch)
+        return store
+
+    @classmethod
+    def from_sketches(
+        cls,
+        cfg: binsketch.BinSketchConfig,
+        mapping: jax.Array,
+        sketches: jax.Array,
+    ) -> "SketchStore":
+        """Wrap pre-built packed sketches (fills computed here, once)."""
+        sketches = sketches.astype(jnp.uint32)
+        return cls(cfg, mapping, sketches, pk.row_popcount(sketches), sketches.shape[0])
+
+    # ------------------------------------------------------------ properties
+    @property
+    def capacity(self) -> int:
+        return int(self._sketches.shape[0])
+
+    @property
+    def sketches(self) -> jax.Array:
+        """(size, W) packed corpus view."""
+        return self._sketches[: self.size]
+
+    @property
+    def fills(self) -> jax.Array:
+        """(size,) cached |row_s| fill counts — computed at ingest."""
+        return self._fills[: self.size]
+
+    # ---------------------------------------------------------------- ingest
+    def _ensure_capacity(self, n: int) -> None:
+        cap = self.capacity
+        if n <= cap:
+            return
+        while cap < n:
+            cap *= 2  # amortized doubling
+        self._sketches = _grow(self._sketches, cap)
+        self._fills = _grow(self._fills, cap)
+
+    def _sketch_rows(self, idx: jax.Array, backend: Optional["Backend"]) -> jax.Array:
+        if backend is not None:
+            return backend.sketch(self.cfg, self.mapping, idx)
+        return binsketch.sketch_indices(self.cfg, self.mapping, idx)
+
+    def add(
+        self,
+        idx: jax.Array,
+        *,
+        backend: Optional["Backend"] = None,
+        batch: int = 4096,
+    ) -> range:
+        """Sketch (B, P) padded sparse rows and append; returns assigned ids."""
+        chunks = [
+            self._sketch_rows(idx[s : s + batch], backend)
+            for s in range(0, idx.shape[0], batch)
+        ]
+        return self.add_sketches(jnp.concatenate(chunks, axis=0) if chunks else
+                                 jnp.zeros((0, self.cfg.n_words), jnp.uint32))
+
+    def add_sketches(self, sketches: jax.Array) -> range:
+        """Append pre-built packed rows; fills enter the cache here (once)."""
+        b = int(sketches.shape[0])
+        if b == 0:
+            return range(self.size, self.size)
+        self._ensure_capacity(self.size + b)
+        sketches = sketches.astype(jnp.uint32)
+        lo = self.size
+        self._sketches = jax.lax.dynamic_update_slice_in_dim(
+            self._sketches, sketches, lo, axis=0
+        )
+        self._fills = jax.lax.dynamic_update_slice_in_dim(
+            self._fills, pk.row_popcount(sketches), lo, axis=0
+        )
+        self.size += b
+        return range(lo, self.size)
+
+    def merge_rows(
+        self,
+        doc_ids: jax.Array,
+        idx: jax.Array,
+        *,
+        backend: Optional["Backend"] = None,
+    ) -> None:
+        """OR new content into *existing* docs (streaming updates).
+
+        ``doc_ids: (B,)`` existing row ids, ``idx: (B, P)`` padded sparse rows.
+        sketch(old | new) == sketch(old) | sketch(new), so this is one OR plus
+        a fill refresh on the B touched rows — never a corpus rebuild.
+        """
+        import numpy as np
+
+        upd = self._sketch_rows(idx, backend)
+        # scatter-with-set keeps only one write per index, so duplicate doc
+        # ids must be OR-combined first (ingest-time host op, B is small)
+        uniq, inv = np.unique(np.asarray(doc_ids, np.int32), return_inverse=True)
+        if len(uniq) < len(inv):
+            group = jnp.asarray(inv)[None, :] == jnp.arange(len(uniq))[:, None]
+            upd = pk.or_rows(
+                jnp.where(group[:, :, None], upd[None, :, :], jnp.uint32(0)), axis=1
+            )
+        doc_ids = jnp.asarray(uniq)
+        merged = self._sketches[doc_ids] | upd
+        self._sketches = self._sketches.at[doc_ids].set(merged)
+        self._fills = self._fills.at[doc_ids].set(pk.row_popcount(merged))
+
+    def merge(self, other: "SketchStore") -> "SketchStore":
+        """OR-merge two stores row-aligned (sketch of per-row unions).
+
+        Shard-local ingestion: each shard sketches its slice of every doc
+        independently; the merged store equals sketching the union directly
+        (the OR-homomorphism). Sizes may differ — the shorter store's missing
+        rows are treated as empty sets.
+        """
+        n = max(self.size, other.size)
+        self._ensure_capacity(n)
+        merged = self._sketches.at[: other.size].set(
+            self._sketches[: other.size] | other.sketches
+        )
+        self._sketches = merged
+        self.size = n
+        touched = merged[:n]
+        self._fills = self._fills.at[:n].set(pk.row_popcount(touched))
+        return self

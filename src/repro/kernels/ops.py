@@ -1,8 +1,9 @@
 """Jit'd public wrappers for the Pallas kernels: padding, dtype checks,
-backend dispatch (interpret=True off-TPU), and estimator plumbing.
+interpret-mode fallback off-TPU, and estimator plumbing.
 
-These are the entry points the rest of the framework uses
-(``core.index.SketchIndex`` scorer, recsys ``retrieval_cand``, benchmarks).
+These are the entry points the rest of the framework uses — primarily the
+``pallas*`` backends in ``repro.engine.backends`` (which stream the
+``SketchStore`` fill cache in via ``a_fills``/``b_fills``) plus benchmarks.
 """
 
 from __future__ import annotations
@@ -110,6 +111,8 @@ def sketch_score(
     n_bins: int,
     measure: str = "jaccard",
     *,
+    a_fills: jax.Array | None = None,
+    b_fills: jax.Array | None = None,
     block_q: int = 128,
     block_c: int = 128,
     block_w: int = 32,
@@ -117,8 +120,11 @@ def sketch_score(
 ) -> jax.Array:
     """Packed (Q, W) x (C, W) -> (Q, C) float32 similarity, fused epilogue.
 
-    Fill counts |a_s|, |b_s| are computed here in one cheap popcount pass
-    (O((Q+C) W) vs the kernel's O(Q C W)) and streamed into the epilogue.
+    Fill counts |a_s|, |b_s| stream into the epilogue as tiny per-row
+    vectors. Pass ``a_fills``/``b_fills`` to reuse precomputed counts (the
+    ``engine.SketchStore`` ingest-time cache — skips the O(C·W) corpus
+    popcount per query); ``None`` computes them here in one cheap pass
+    (O((Q+C) W) vs the kernel's O(Q C W)).
     Zero-padded rows produce fill 0 -> similarity 0; cropped on return.
     """
     if interpret is None:
@@ -129,8 +135,8 @@ def sketch_score(
     c, _ = b.shape
     block_q = min(block_q, max(8, q))
     block_c = min(block_c, max(8, c))
-    na = pk.row_popcount(a)
-    nb = pk.row_popcount(b)
+    na = a_fills if a_fills is not None else pk.row_popcount(a)
+    nb = b_fills if b_fills is not None else pk.row_popcount(b)
     ap = _pad_to(a, 0, block_q, 0)
     bp = _pad_to(b, 0, block_c, 0)
     block_w = min(block_w, w) if w % min(block_w, w) == 0 else 1
@@ -151,7 +157,9 @@ def score_counts(a: jax.Array, b: jax.Array, **kw) -> jax.Array:
 
 
 def make_scorer(n_bins: int, measure: str = "jaccard", **kw):
-    """Scorer closure for ``core.index.SketchIndex``."""
+    """DEPRECATED: scorer closure for the old ``core.index.SketchIndex``
+    hook. Use ``repro.engine.get_backend("pallas")`` instead — backends also
+    accept the store's cached fill counts, which a 2-arg closure cannot."""
 
     def scorer(qs, cand):
         return sketch_score(qs, cand, n_bins=n_bins, measure=measure, **kw)

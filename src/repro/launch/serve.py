@@ -2,10 +2,12 @@
 
     PYTHONPATH=src python -m repro.launch.serve --dataset tiny --queries 64
 
-Build phase: sketch the corpus once (single pass, shard-local on a mesh —
-the OR-homomorphism means shards never need a second pass). Serve phase:
-batched queries are sketched and scored against the corpus in packed
-sketch space (Pallas kernel on TPU, oracle path on CPU), top-k returned.
+Runs on :class:`repro.engine.SketchEngine`. Build phase: the corpus streams
+into a ``SketchStore`` in ``--ingest-batch`` chunks (incremental OR-ingest;
+fill counts enter the cache here, once). Serve phase: ragged query batches
+are bucketed by the engine's planner onto a bounded set of jit shapes,
+sketched, and scored against the corpus with the cached corpus fills
+(Pallas kernel on TPU, interpret/oracle elsewhere — pick with ``--backend``).
 Reports build/serve throughput and recall@k against exact Jaccard — the
 paper's ranking experiment (§IV-B) as a live service.
 """
@@ -45,13 +47,16 @@ def main(argv=None):
     ap.add_argument("--topk", type=int, default=10)
     ap.add_argument("--rho", type=float, default=0.05)
     ap.add_argument("--batch", type=int, default=32)
+    ap.add_argument("--ingest-batch", type=int, default=1024,
+                    help="streaming ingest chunk size (docs per add)")
+    ap.add_argument("--backend", default="auto",
+                    help="engine backend: auto | oracle | pallas | pallas-tpu | pallas-interpret")
     ap.add_argument("--check-recall", action="store_true", default=True)
     args = ap.parse_args(argv)
 
     from repro.core import BinSketchConfig, make_mapping
-    from repro.core.index import SketchIndex
     from repro.data.synthetic import DATASETS, generate_corpus
-    from repro.kernels import ops
+    from repro.engine import QueryPlanner, SketchEngine
 
     spec = DATASETS[args.dataset]
     idx, lens = generate_corpus(spec, seed=0)
@@ -63,14 +68,20 @@ def main(argv=None):
           f"{cfg.n_words * 4} B/doc vs {int(lens.mean()) * 4} B raw avg)")
     mapping = make_mapping(cfg, jax.random.PRNGKey(0))
 
-    t0 = time.time()
-    index = SketchIndex.build(
-        cfg, mapping, jnp.asarray(idx),
-        scorer=ops.make_scorer(cfg.n_bins, "jaccard"),
+    engine = SketchEngine.build(
+        cfg, mapping,
+        backend=args.backend,
+        planner=QueryPlanner(min_batch=8, max_batch=max(args.batch, 8)),
+        capacity=n,
     )
-    jax.block_until_ready(index.corpus)
+    t0 = time.time()
+    idx_dev = jnp.asarray(idx)
+    for s in range(0, n, args.ingest_batch):  # streaming ingest
+        engine.add(idx_dev[s : s + args.ingest_batch])
+    jax.block_until_ready(engine.store.sketches)
     t_build = time.time() - t0
-    print(f"build: {t_build:.2f}s ({n / t_build:.0f} docs/s)")
+    print(f"build: {t_build:.2f}s ({n / t_build:.0f} docs/s, "
+          f"backend={engine.backend.name}, fill cache primed at ingest)")
 
     rng = np.random.default_rng(1)
     q_rows = rng.choice(n, args.queries, replace=False)
@@ -79,7 +90,7 @@ def main(argv=None):
     t0 = time.time()
     all_ids = []
     for s in range(0, args.queries, args.batch):
-        scores, ids = index.query(jnp.asarray(queries[s : s + args.batch]), args.topk)
+        scores, ids = engine.query(jnp.asarray(queries[s : s + args.batch]), args.topk)
         all_ids.append(np.asarray(ids))
     ids = np.concatenate(all_ids)
     t_serve = time.time() - t0

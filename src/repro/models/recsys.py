@@ -24,7 +24,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
 from ..optim import adamw
-from ..parallel.sharding import RULES, logical_to_spec
+from ..parallel.sharding import RULES, logical_to_spec, shard_map
 from .layers import init_dense
 
 __all__ = ["RecsysConfig", "RecsysModel", "criteo_like_vocabs"]
@@ -97,7 +97,7 @@ def sharded_embedding_lookup(
 
     ids_spec = P(dp_axes) if dp_axes else P(None)
     out_spec = P(dp_axes) if dp_axes else P(None)
-    return jax.shard_map(
+    return shard_map(
         local,
         mesh=mesh,
         in_specs=(P(axis, None), ids_spec),
@@ -393,7 +393,7 @@ class RecsysModel:
                 sc2, pos = jax.lax.top_k(sc_all, k_top)
                 return sc2, jnp.take_along_axis(ix_all, pos, axis=1)
 
-            return jax.shard_map(
+            return shard_map(
                 local,
                 mesh=self.mesh,
                 in_specs=(P(self.ep_axis, None), P(None, None)),
@@ -405,34 +405,41 @@ class RecsysModel:
 
     def make_retrieval_sketch_step(self, n_bins: int):
         """BinSketch-space retrieval (the paper's ranking experiment at the
-        1M-candidate shape): packed popcount + Alg-3 epilogue + top-k.
-        Candidates sharded over 'model'; O(k) merge. Pure-jnp scoring path
-        (= kernels/ref oracle) so it lowers for the TPU dry-run."""
-        from ..core import estimators
+        1M-candidate shape): the engine's shared shard_topk body — packed
+        popcount + Alg-3 epilogue + local top-k + O(k·devices) merge.
+        Candidates sharded over 'model'; oracle scoring path (= kernels/ref)
+        so it lowers for the TPU dry-run. When the serving store's cached
+        fill counts ride along as ``query["corpus_fills"]`` the per-query
+        O(C·W) corpus popcount disappears."""
+        from ..engine import shard_topk
 
         k_top = 100
+        ep = self.ep_axis
 
         def retrieval(params, query):
-            """query: {"sketch" (B, W) uint32}; corpus sketches in params."""
+            """query: {"sketch" (B, W), "corpus_sketches" (C, W),
+            optional "corpus_fills" (C,) from the SketchStore cache}."""
             corpus = query["corpus_sketches"]  # (C, W) uint32
+            fills = query.get("corpus_fills")
 
-            def local(cand, qs):
-                sims = estimators.pairwise_similarity(qs, cand, n_bins, "jaccard")
-                sc, ix = jax.lax.top_k(sims, k_top)
-                lo = jax.lax.axis_index(self.ep_axis) * cand.shape[0]
-                ix = ix + lo
-                sc_all = jax.lax.all_gather(sc, self.ep_axis, axis=1, tiled=True)
-                ix_all = jax.lax.all_gather(ix, self.ep_axis, axis=1, tiled=True)
-                sc2, pos = jax.lax.top_k(sc_all, k_top)
-                return sc2, jnp.take_along_axis(ix_all, pos, axis=1)
+            def local(cand, qs, *cand_fills):
+                return shard_topk(
+                    qs, cand, n_bins, "jaccard", k_top, ep,
+                    cand_fills=cand_fills[0] if cand_fills else None,
+                )
 
-            return jax.shard_map(
+            in_specs = [P(ep, None), P(None, None)]
+            operands = [corpus, query["sketch"]]
+            if fills is not None:
+                in_specs.append(P(ep))
+                operands.append(fills)
+            return shard_map(
                 local,
                 mesh=self.mesh,
-                in_specs=(P(self.ep_axis, None), P(None, None)),
+                in_specs=tuple(in_specs),
                 out_specs=(P(None, None), P(None, None)),
                 check_vma=False,
-            )(corpus, query["sketch"])
+            )(*operands)
 
         return retrieval
 
