@@ -1,12 +1,25 @@
-"""Serving-engine throughput: ingest docs/s (batch vs streaming) and query
-q/s with the ingest-time fill cache on vs off.
+"""Serving-engine throughput: ingest docs/s (batch vs streaming), query q/s
+with the ingest-time fill cache on vs off, and the fused streaming top-k
+vs the materialize-(Q,C)-then-``lax.top_k`` baseline across corpus sizes.
 
     PYTHONPATH=src python -m benchmarks.bench_engine [--dataset tiny]
+    PYTHONPATH=src python -m benchmarks.bench_engine --smoke   # CI parity gate
 
 Emits ``BENCH_engine.json`` (repo root by default) so the perf trajectory
 of the serving subsystem is recorded PR-over-PR. Uses the oracle backend on
 CPU (the Pallas interpret path measures Python, not the system); on TPU run
 with ``--backend pallas``.
+
+Timing discipline: every timed section is jit-warmed (two untimed calls,
+each ``block_until_ready``) and reports the *minimum* over ``repeats``
+timed calls — the standard microbenchmark estimator; mean-of-noisy-runs is
+what made the fill cache look like a regression in PR 1's numbers.
+
+The top-k sweep scores synthetic random packed sketches (content does not
+affect the arithmetic) so 64k+ docs don't pay the host-side corpus
+generator. Alongside QPS it reports the scoring output footprint per query
+batch: the fused path writes O(Q·k), the materialize path O(Q·C) — the
+memory wall the streaming kernel removes (DESIGN.md §7).
 """
 
 from __future__ import annotations
@@ -20,15 +33,62 @@ import jax.numpy as jnp
 import numpy as np
 
 
-def _timeit(fn, repeats: int) -> float:
-    fn()  # warm up (trace + compile)
-    t0 = time.perf_counter()
-    for _ in range(repeats):
+def _timeit(fn, repeats: int, warmup: int = 2) -> float:
+    for _ in range(warmup):  # trace + compile + first-touch, untimed
         jax.block_until_ready(fn())
-    return (time.perf_counter() - t0) / repeats
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        best = min(best, time.perf_counter() - t0)
+    return best
 
 
-def run(dataset="tiny", backend="oracle", queries=64, topk=10, repeats=5, seed=0):
+def _rand_packed(rng, n: int, n_words: int) -> jnp.ndarray:
+    x = rng.integers(0, 2**32, (n, n_words), dtype=np.uint64).astype(np.uint32)
+    return jnp.asarray(x)
+
+
+def run_topk_sweep(sizes, backend="oracle", queries=32, topk=10, n_bins=512,
+                   repeats=3, seed=0):
+    """Fused streaming top-k vs materialize+``lax.top_k`` per corpus size."""
+    from repro.core.packed import num_words, row_popcount
+    from repro.engine import get_backend
+
+    be = get_backend(backend)
+    w = num_words(n_bins)
+    rng = np.random.default_rng(seed)
+    qs = _rand_packed(rng, queries, w)
+    rows = []
+    for c in sizes:
+        corpus = _rand_packed(rng, c, w)
+        fills = row_popcount(corpus)  # = the store's ingest-time cache
+
+        def fused():
+            return be.topk(qs, corpus, n_bins, "jaccard", topk,
+                           corpus_fills=fills)[1]
+
+        def materialize():
+            s = be.score(qs, corpus, n_bins, "jaccard", corpus_fills=fills)
+            return jax.lax.top_k(s, topk)[1]
+
+        t_fused = _timeit(fused, repeats)
+        t_mat = _timeit(materialize, repeats)
+        rows.append({
+            "corpus_docs": int(c),
+            "qps_fused_topk": queries / t_fused,
+            "qps_materialize_topk": queries / t_mat,
+            "fused_topk_speedup": t_mat / t_fused,
+            # scoring-output HBM footprint per query batch: the O(Q·C) wall
+            # the fused path removes (scores f32 + ids i32 for fused)
+            "out_bytes_fused": int(queries * topk * 8),
+            "out_bytes_materialized": int(queries * c * 4),
+        })
+    return rows
+
+
+def run(dataset="tiny", backend="oracle", queries=64, topk=10, repeats=5,
+        seed=0, sweep_sizes=(4096, 16384, 65536)):
     from repro.core import BinSketchConfig, make_mapping
     from repro.data.synthetic import DATASETS, generate_corpus
     from repro.engine import QueryPlanner, SketchEngine
@@ -57,7 +117,7 @@ def run(dataset="tiny", backend="oracle", queries=64, topk=10, repeats=5, seed=0
 
     t_stream = _timeit(stream_build, repeats)
 
-    # ---- query: fill cache on vs off
+    # ---- query: fill cache on vs off (streaming top-k path)
     engine = SketchEngine.build(cfg, mapping, idx_dev, backend=backend, planner=planner)
     rng = np.random.default_rng(1)
     q = jnp.asarray(idx[rng.choice(n, queries, replace=False)])
@@ -65,7 +125,7 @@ def run(dataset="tiny", backend="oracle", queries=64, topk=10, repeats=5, seed=0
     t_cached = _timeit(lambda: engine.query(q, topk)[1], repeats)
     t_uncached = _timeit(lambda: engine.query(q, topk, use_fill_cache=False)[1], repeats)
 
-    return {
+    result = {
         "dataset": dataset,
         "backend": backend,
         "corpus_docs": int(n),
@@ -79,6 +139,46 @@ def run(dataset="tiny", backend="oracle", queries=64, topk=10, repeats=5, seed=0
         "query_qps_no_cache": queries / t_uncached,
         "fill_cache_speedup": t_uncached / t_cached,
     }
+    if sweep_sizes:
+        result["topk_sweep"] = run_topk_sweep(
+            sweep_sizes, backend=backend, topk=topk, repeats=max(2, repeats - 2),
+            seed=seed,
+        )
+        biggest = result["topk_sweep"][-1]
+        result["topk_fused_speedup_largest"] = biggest["fused_topk_speedup"]
+        result["topk_out_bytes_ratio_largest"] = (
+            biggest["out_bytes_materialized"] / biggest["out_bytes_fused"]
+        )
+    return result
+
+
+def smoke() -> dict:
+    """CI gate: tiny shapes, asserts fused-topk parity against the
+    materialized score matrix on both the oracle and interpret backends."""
+    from repro.engine import get_backend
+
+    rng = np.random.default_rng(7)
+    n_bins, q, c, k = 101, 8, 37, 5
+    w = (n_bins + 31) // 32
+    a = _rand_packed(rng, q, w)
+    b = _rand_packed(rng, c, w)
+    for name in ("oracle", "pallas-interpret"):
+        be = get_backend(name)
+        for measure in ("jaccard", "ip", "cosine", "hamming"):
+            s = np.asarray(be.score(a, b, n_bins, measure))
+            want_sc, want_ix = jax.lax.top_k(s, k)
+            got_sc, got_ix = be.topk(a, b, n_bins, measure, k)
+            got_sc, got_ix = np.asarray(got_sc), np.asarray(got_ix)
+            np.testing.assert_allclose(got_sc, np.asarray(want_sc),
+                                       rtol=1e-5, atol=1e-6)
+            gathered = np.take_along_axis(s, got_ix, axis=1)
+            np.testing.assert_allclose(gathered, got_sc, rtol=1e-5, atol=1e-6)
+        # k > C padding contract
+        sc, ix = be.topk(a, b, n_bins, "jaccard", c + 4)
+        assert (np.asarray(sc)[:, c:] == -np.inf).all(), name
+        assert (np.asarray(ix)[:, c:] == -1).all(), name
+        print(f"smoke ok: {name}")
+    return {"smoke": "ok"}
 
 
 def main(argv=None):
@@ -87,12 +187,22 @@ def main(argv=None):
     ap.add_argument("--backend", default="oracle")
     ap.add_argument("--queries", type=int, default=64)
     ap.add_argument("--topk", type=int, default=10)
-    ap.add_argument("--repeats", type=int, default=5)
+    ap.add_argument("--repeats", type=int, default=10)
+    ap.add_argument("--sweep-sizes", default="4096,16384,65536",
+                    help="comma-separated corpus sizes for the fused-topk "
+                         "sweep; empty string disables it")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny-shape fused-topk parity assert (CI); no json")
     ap.add_argument("--out", default="BENCH_engine.json")
     args = ap.parse_args(argv)
 
+    if args.smoke:
+        return smoke()
+
+    sizes = tuple(int(s) for s in args.sweep_sizes.split(",") if s)
     t0 = time.time()
-    result = run(args.dataset, args.backend, args.queries, args.topk, args.repeats)
+    result = run(args.dataset, args.backend, args.queries, args.topk,
+                 args.repeats, sweep_sizes=sizes)
     result["wall_s"] = time.time() - t0
     with open(args.out, "w") as f:
         json.dump(result, f, indent=2)
@@ -100,6 +210,9 @@ def main(argv=None):
     for k in ("ingest_batch_docs_per_s", "ingest_stream_docs_per_s",
               "query_qps_fill_cache", "query_qps_no_cache", "fill_cache_speedup"):
         print(f"{k},{result[k]:.1f}")
+    for row in result.get("topk_sweep", ()):
+        print(f"topk_fused_speedup@{row['corpus_docs']},"
+              f"{row['fused_topk_speedup']:.2f}")
     print(f"# bench_engine done in {result['wall_s']:.1f}s -> {args.out}")
     return result
 

@@ -3,7 +3,7 @@ across similarity regimes, BinSketch vs all baselines.
 
 Reports -log(MSE) for Jaccard/Cosine (higher better, as in Fig. 2) and raw
 MSE for inner product (lower better, Fig. 1). Synthetic corpora matched to
-the paper's dataset statistics (DESIGN.md §7 note 4).
+the paper's dataset statistics (DESIGN.md §8 note 4).
 """
 
 from __future__ import annotations

@@ -8,7 +8,7 @@ resulting binary vectors have exactly F ones (F = #features) and
 where D is the paper's categorical distance (count of differing features):
 each differing feature contributes two set-bit mismatches. (The paper states
 equality; under the symmetric-difference Hamming it is 2D — the factor is
-deterministic so every downstream use is unaffected. DESIGN.md §7.)
+deterministic so every downstream use is unaffected. DESIGN.md §8.)
 
 Fitting is host-side numpy (vocabulary discovery is data-dependent);
 transform + sketching are jit-friendly.

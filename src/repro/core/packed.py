@@ -22,6 +22,7 @@ __all__ = [
     "row_popcount",
     "and_popcount_pairwise",
     "or_rows",
+    "segment_or",
 ]
 
 _M1 = jnp.uint32(0x55555555)
@@ -78,6 +79,45 @@ def and_popcount_pairwise(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
     """
     both = a[:, None, :] & b[None, :, :]
     return jnp.sum(popcount(both).astype(jnp.int32), axis=-1)
+
+
+def segment_or(
+    data: jnp.ndarray, segment_ids: jnp.ndarray, num_segments: int
+) -> jnp.ndarray:
+    """OR-reduce rows of ``data`` (B, ...) into (num_segments, ...) buckets.
+
+    ``jax.ops.segment_max``-style API for the reduction scatter-max cannot
+    express: bitwise OR over packed words. Rows are ordered by segment id,
+    a segmented associative OR-scan runs over them, and each segment's last
+    row is gathered — O(B·W) memory throughout, never the dense
+    (num_segments, B, W) one-hot mask the naive broadcast combine builds.
+    Empty segments come back all-zero (the empty-union sketch).
+    """
+    import jax
+
+    b = data.shape[0]
+    if b == 0:
+        return jnp.zeros((num_segments,) + data.shape[1:], data.dtype)
+    order = jnp.argsort(segment_ids)
+    ids_sorted = jnp.take(segment_ids, order)
+    rows = jnp.take(data, order, axis=0)
+    starts = jnp.concatenate(
+        [jnp.ones((1,), bool), ids_sorted[1:] != ids_sorted[:-1]]
+    ).reshape((b,) + (1,) * (data.ndim - 1))
+
+    def comb(x, y):  # segmented scan: a start flag resets the running OR
+        xf, xv = x
+        yf, yv = y
+        return xf | yf, jnp.where(yf, yv, xv | yv)
+
+    _, scanned = jax.lax.associative_scan(comb, (starts, rows), axis=0)
+    seg = jnp.arange(num_segments)
+    ends = jnp.searchsorted(ids_sorted, seg, side="right") - 1
+    present = ends >= jnp.searchsorted(ids_sorted, seg, side="left")
+    out = jnp.take(scanned, jnp.maximum(ends, 0), axis=0)
+    return jnp.where(
+        present.reshape((num_segments,) + (1,) * (data.ndim - 1)), out, 0
+    ).astype(data.dtype)
 
 
 def or_rows(packed: jnp.ndarray, axis: int = 0) -> jnp.ndarray:

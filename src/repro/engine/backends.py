@@ -18,15 +18,23 @@ both halves of the data path — *sketch* (construction) and *score*
 ``score`` takes optional precomputed fill counts; when the caller holds a
 :class:`~repro.engine.store.SketchStore` the corpus fills come from its
 ingest-time cache instead of an O(C·W) popcount per query (DESIGN.md §6).
+
+``topk`` is the serving hot path (DESIGN.md §7): score -> k best per query
+without ever materializing the (Q, C) matrix. The oracle backend is the
+chunked ``lax.top_k``-merge reference; the pallas backends run the fused
+streaming kernel (``kernels.topk_stream``). Both honor ``corpus_valid``
+masks (masked rows return score -inf / id -1) and the -inf/-1 padding
+contract for ``k`` larger than the retrievable corpus.
 """
 
 from __future__ import annotations
 
-from typing import Callable, Dict, Optional, Protocol
+from typing import Callable, Dict, Optional, Protocol, Tuple
 
 import jax
+import jax.numpy as jnp
 
-from ..core import binsketch, estimators
+from ..core import binsketch, estimators, packed as pk
 
 __all__ = ["Backend", "register_backend", "get_backend", "available_backends",
            "from_legacy_scorer"]
@@ -60,11 +68,42 @@ class Backend(Protocol):
         """
         ...
 
+    def topk(
+        self,
+        q: jax.Array,
+        corpus: jax.Array,
+        n_bins: int,
+        measure: str,
+        k: int,
+        *,
+        q_fills: Optional[jax.Array] = None,
+        corpus_fills: Optional[jax.Array] = None,
+        corpus_valid: Optional[jax.Array] = None,
+    ) -> Tuple[jax.Array, jax.Array]:
+        """Packed (Q, W) x (C, W) -> (scores (Q, k), ids (Q, k)), streaming.
+
+        Never materializes the full (Q, C) matrix. Rows sorted descending,
+        ties broken toward the lower doc id (``lax.top_k`` convention);
+        ``corpus_valid`` masks rows out entirely; slots beyond the
+        retrievable corpus hold score -inf / id -1.
+        """
+        ...
+
+
+def _masked_topk_merge(parts_s, parts_i, k):
+    """Final merge of per-chunk (Q, k) top-k lists; -inf slots get id -1."""
+    sc_all = jnp.concatenate(parts_s, axis=1)
+    ix_all = jnp.concatenate(parts_i, axis=1)
+    sc, pos = jax.lax.top_k(sc_all, k)
+    ids = jnp.take_along_axis(ix_all, pos, axis=1)
+    return sc, jnp.where(jnp.isneginf(sc), -1, ids)
+
 
 class OracleBackend:
     """Pure-jnp reference path (also the body used inside shard_map)."""
 
     name = "oracle"
+    topk_chunk = 4096  # corpus rows scored per chunk in the streaming top-k
 
     def sketch(self, cfg, mapping, idx):
         return binsketch.sketch_indices(cfg, mapping, idx)
@@ -73,6 +112,32 @@ class OracleBackend:
         return estimators.pairwise_similarity(
             q, corpus, n_bins, measure, a_fills=q_fills, b_fills=corpus_fills
         )
+
+    def topk(self, q, corpus, n_bins, measure, k, *, q_fills=None,
+             corpus_fills=None, corpus_valid=None):
+        """Chunked ``lax.top_k`` merge: scores ``topk_chunk`` corpus rows at a
+        time, keeps k per chunk, merges once — peak transient O(Q·chunk), not
+        O(Q·C). Chunk order preserves global index order, so tie-breaks match
+        a full ``lax.top_k`` over the materialized matrix exactly."""
+        nq, c = q.shape[0], corpus.shape[0]
+        if c == 0:
+            return (jnp.full((nq, k), -jnp.inf, jnp.float32),
+                    jnp.full((nq, k), -1, jnp.int32))
+        qf = q_fills if q_fills is not None else pk.row_popcount(q)
+        parts_s, parts_i = [], []
+        for lo in range(0, c, self.topk_chunk):
+            hi = min(lo + self.topk_chunk, c)
+            cf = corpus_fills[lo:hi] if corpus_fills is not None else None
+            s = self.score(q, corpus[lo:hi], n_bins, measure,
+                           q_fills=qf, corpus_fills=cf)
+            if corpus_valid is not None:
+                s = jnp.where(corpus_valid[lo:hi][None, :] != 0, s, -jnp.inf)
+            kk = min(k, hi - lo)
+            sc, ix = jax.lax.top_k(s, kk)
+            pad = ((0, 0), (0, k - kk))
+            parts_s.append(jnp.pad(sc, pad, constant_values=-jnp.inf))
+            parts_i.append(jnp.pad(ix + lo, pad, constant_values=-1))
+        return _masked_topk_merge(parts_s, parts_i, k)
 
 
 class PallasBackend:
@@ -96,6 +161,16 @@ class PallasBackend:
             a_fills=q_fills, b_fills=corpus_fills, interpret=self.interpret,
         )
 
+    def topk(self, q, corpus, n_bins, measure, k, *, q_fills=None,
+             corpus_fills=None, corpus_valid=None):
+        from ..kernels import ops
+
+        return ops.sketch_topk(
+            q, corpus, n_bins=n_bins, measure=measure, k=int(k),
+            a_fills=q_fills, b_fills=corpus_fills, b_valid=corpus_valid,
+            interpret=self.interpret,
+        )
+
 
 class _LegacyScorerBackend:
     """Adapter for the deprecated ``SketchIndex.scorer`` callable (sketching
@@ -113,6 +188,19 @@ class _LegacyScorerBackend:
 
     def score(self, q, corpus, n_bins, measure, *, q_fills=None, corpus_fills=None):
         return self._scorer(q, corpus)
+
+    def topk(self, q, corpus, n_bins, measure, k, *, q_fills=None,
+             corpus_fills=None, corpus_valid=None):
+        # legacy closures can only produce the full matrix; mask + top_k here
+        s = self._scorer(q, corpus)
+        if corpus_valid is not None:
+            s = jnp.where(corpus_valid[None, :] != 0, s, -jnp.inf)
+        kk = min(int(k), corpus.shape[0])
+        sc, ix = jax.lax.top_k(s, kk)
+        pad = ((0, 0), (0, int(k) - kk))
+        sc = jnp.pad(sc, pad, constant_values=-jnp.inf)
+        ix = jnp.pad(ix, pad, constant_values=-1)
+        return sc, jnp.where(jnp.isneginf(sc), -1, ix)
 
 
 _REGISTRY: Dict[str, Callable[[], Backend]] = {}

@@ -10,11 +10,14 @@ run as a service:
   * a :class:`~repro.engine.planner.QueryPlanner` — ragged query batches
     bucketed onto a bounded set of jit shapes.
 
-The sharded path lifts ``SketchIndex.query_sharded``'s local-top-k +
-O(k·devices) all-gather merge into the engine and fixes its tail bug:
-a corpus whose size is not divisible by the mesh axis is *padded* with zero
-sketches whose scores are masked to -inf, instead of silently dropping the
-tail docs.
+Both query paths are streaming end-to-end (DESIGN.md §7): single-device
+``query`` and the per-shard body of ``query_sharded`` go through
+``Backend.topk``, so no (Q, C) — or (Q, C_loc) — score matrix is ever
+materialized; only O(Q·k) leaves each scoring kernel. The sharded path
+lifts ``SketchIndex.query_sharded``'s local-top-k + O(k·devices)
+all-gather merge into the engine and fixes its tail bug: a corpus whose
+size is not divisible by the mesh axis is *padded* with zero sketches whose
+slots are masked to -inf / -1, instead of silently dropping the tail docs.
 """
 
 from __future__ import annotations
@@ -26,7 +29,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
-from ..core import binsketch, packed as pk
+from ..core import binsketch
 from ..parallel.sharding import shard_map
 from . import backends as backends_mod
 from .backends import Backend
@@ -34,8 +37,6 @@ from .planner import QueryPlanner
 from .store import SketchStore
 
 __all__ = ["SketchEngine", "shard_topk"]
-
-_NEG_INF = jnp.float32(-jnp.inf)
 
 
 def shard_topk(
@@ -51,25 +52,28 @@ def shard_topk(
     cand_ids: Optional[jax.Array] = None,
     cand_valid: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, jax.Array]:
-    """Per-shard score -> local top-k -> O(k·devices) all-gather merge.
+    """Per-shard streaming top-k -> O(k·devices) all-gather merge.
 
     Call *inside* ``shard_map``: ``cand`` (C_loc, W) is this shard's slice of
     the candidates, ``qs`` (Q, W) is replicated. ``cand_ids`` are this
     shard's global doc ids (default: offset arange); ``cand_valid`` masks
-    padding rows (their scores become -inf so they never reach the merged
-    top-k). Shared by the engine's sharded path and the recsys retrieval
+    padding rows (their slots become -inf / -1 so they never reach the
+    merged top-k). The local pass goes through ``Backend.topk`` — the fused
+    streaming kernel on pallas backends, the chunked ``lax.top_k`` merge on
+    the oracle — so no shard ever materializes its full (Q, C_loc) score
+    matrix. Shared by the engine's sharded path and the recsys retrieval
     tower.
     """
     be = backend if backend is not None else backends_mod.OracleBackend()
-    s = be.score(qs, cand, n_bins, measure, corpus_fills=cand_fills)
-    if cand_valid is not None:
-        s = jnp.where(cand_valid[None, :], s, _NEG_INF)
-    sc, ix = jax.lax.top_k(s, k)
+    sc, ix = be.topk(
+        qs, cand, n_bins, measure, k,
+        corpus_fills=cand_fills, corpus_valid=cand_valid,
+    )
     if cand_ids is None:
         lo = jax.lax.axis_index(axis) * cand.shape[0]
-        ids = lo + ix
+        ids = jnp.where(ix >= 0, lo + ix, -1)
     else:
-        ids = jnp.take(cand_ids, ix, axis=0)
+        ids = jnp.where(ix >= 0, jnp.take(cand_ids, jnp.maximum(ix, 0), axis=0), -1)
     sc_all = jax.lax.all_gather(sc, axis, axis=1, tiled=True)  # (Q, shards*k)
     ids_all = jax.lax.all_gather(ids, axis, axis=1, tiled=True)
     sc2, pos = jax.lax.top_k(sc_all, k)
@@ -137,8 +141,11 @@ class SketchEngine:
     ) -> jax.Array:
         """(Q, P) padded query rows -> full (Q, C) similarity matrix.
 
-        ``use_fill_cache=False`` forces the legacy per-query corpus popcount
-        (benchmark baseline only)."""
+        Materializes O(Q·C) — analysis/benchmark surface only; the serving
+        path is :meth:`query`. Query fills are left to the backend so the
+        popcount fuses into the jit'd scoring kernel instead of running
+        eagerly out here. ``use_fill_cache=False`` forces the legacy
+        per-query corpus popcount (benchmark baseline only)."""
         if query_idx.shape[0] == 0:
             return jnp.zeros((0, self.store.size), jnp.float32)
         out = []
@@ -149,8 +156,7 @@ class SketchEngine:
                 query_idx[chunk.start : chunk.start + chunk.rows], chunk.padded
             )
             s = self.backend.score(
-                qs, corpus, self.cfg.n_bins, self.measure,
-                q_fills=pk.row_popcount(qs), corpus_fills=fills,
+                qs, corpus, self.cfg.n_bins, self.measure, corpus_fills=fills,
             )
             out.append(s[: chunk.rows])
         return jnp.concatenate(out, axis=0)
@@ -158,9 +164,29 @@ class SketchEngine:
     def query(
         self, query_idx: jax.Array, k: int, *, use_fill_cache: bool = True
     ) -> Tuple[jax.Array, jax.Array]:
-        """(Q, P) padded query rows -> (scores (Q, k), ids (Q, k))."""
-        scores = self.score_all(query_idx, use_fill_cache=use_fill_cache)
-        return jax.lax.top_k(scores, k)
+        """(Q, P) padded query rows -> (scores (Q, k), ids (Q, k)).
+
+        Streaming: each planner chunk runs ``Backend.topk``, so only
+        O(Q·k) scores ever leave the scoring kernel — the (Q, C) matrix is
+        never materialized (DESIGN.md §7). If ``k`` exceeds the corpus the
+        tail slots hold score -inf / id -1 (old behavior was an error).
+        """
+        if query_idx.shape[0] == 0:
+            return (jnp.zeros((0, k), jnp.float32),
+                    jnp.full((0, k), -1, jnp.int32))
+        out_s, out_i = [], []
+        corpus = self.store.sketches
+        fills = self.store.fills if use_fill_cache else None
+        for chunk in self.planner.plan(query_idx.shape[0]):
+            qs = self._padded_query_sketches(
+                query_idx[chunk.start : chunk.start + chunk.rows], chunk.padded
+            )
+            sc, ix = self.backend.topk(
+                qs, corpus, self.cfg.n_bins, self.measure, k, corpus_fills=fills,
+            )
+            out_s.append(sc[: chunk.rows])
+            out_i.append(ix[: chunk.rows])
+        return jnp.concatenate(out_s, axis=0), jnp.concatenate(out_i, axis=0)
 
     # --------------------------------------------------------------- sharded
     def query_sharded(

@@ -126,13 +126,16 @@ class SketchStore:
         backend: Optional["Backend"] = None,
         batch: int = 4096,
     ) -> range:
-        """Sketch (B, P) padded sparse rows and append; returns assigned ids."""
-        chunks = [
-            self._sketch_rows(idx[s : s + batch], backend)
-            for s in range(0, idx.shape[0], batch)
-        ]
-        return self.add_sketches(jnp.concatenate(chunks, axis=0) if chunks else
-                                 jnp.zeros((0, self.cfg.n_words), jnp.uint32))
+        """Sketch (B, P) padded sparse rows and append; returns assigned ids.
+
+        Each chunk streams straight into capacity via :meth:`add_sketches` —
+        no concatenation of all chunks into one (B, W) temporary, so peak
+        device memory during a large ingest is one batch, not the whole
+        corpus twice."""
+        lo = self.size
+        for s in range(0, idx.shape[0], batch):
+            self.add_sketches(self._sketch_rows(idx[s : s + batch], backend))
+        return range(lo, self.size)
 
     def add_sketches(self, sketches: jax.Array) -> range:
         """Append pre-built packed rows; fills enter the cache here (once)."""
@@ -168,13 +171,11 @@ class SketchStore:
 
         upd = self._sketch_rows(idx, backend)
         # scatter-with-set keeps only one write per index, so duplicate doc
-        # ids must be OR-combined first (ingest-time host op, B is small)
+        # ids must be OR-combined first: segment-OR over packed words,
+        # O(B·W) — not the dense (U, B, W) one-hot broadcast mask
         uniq, inv = np.unique(np.asarray(doc_ids, np.int32), return_inverse=True)
         if len(uniq) < len(inv):
-            group = jnp.asarray(inv)[None, :] == jnp.arange(len(uniq))[:, None]
-            upd = pk.or_rows(
-                jnp.where(group[:, :, None], upd[None, :, :], jnp.uint32(0)), axis=1
-            )
+            upd = pk.segment_or(upd, jnp.asarray(inv), len(uniq))
         doc_ids = jnp.asarray(uniq)
         merged = self._sketches[doc_ids] | upd
         self._sketches = self._sketches.at[doc_ids].set(merged)

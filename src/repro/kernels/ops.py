@@ -14,9 +14,10 @@ import jax
 import jax.numpy as jnp
 
 from ..core import packed as pk
-from . import hash_build, popcount_sim, sketch_build
+from . import hash_build, popcount_sim, sketch_build, topk_stream
 
-__all__ = ["build_sketch", "hash_build_sketch", "sketch_score", "score_counts"]
+__all__ = ["build_sketch", "hash_build_sketch", "sketch_score", "sketch_topk",
+           "score_counts"]
 
 
 def _interpret_default() -> bool:
@@ -149,6 +150,77 @@ def sketch_score(
         block_q=block_q, block_c=block_c, block_w=block_w, interpret=interpret,
     )
     return out[:q, :c]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_bins", "measure", "k", "block_q", "block_c", "sub_words",
+                     "interpret"),
+)
+def sketch_topk(
+    a: jax.Array,
+    b: jax.Array,
+    n_bins: int,
+    measure: str = "jaccard",
+    *,
+    k: int,
+    a_fills: jax.Array | None = None,
+    b_fills: jax.Array | None = None,
+    b_valid: jax.Array | None = None,
+    block_q: int = 128,
+    block_c: int = 128,
+    sub_words: int = 8,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Packed (Q, W) x (C, W) -> top-k (scores (Q, k), ids (Q, k)), fused.
+
+    The streaming kernel (``topk_stream``) never materializes the (Q, C)
+    score matrix: corpus blocks flow through VMEM once and only O(Q·k)
+    leaves the chip. Same padding/cropping contract as ``sketch_score``:
+    fill counts stream in (``a_fills``/``b_fills`` reuse the SketchStore
+    ingest-time cache, ``None`` popcounts here in one cheap pass), rows pad
+    to block multiples and crop on return. ``b_valid`` (C,) masks corpus
+    rows out of the result entirely. Rows come back sorted descending with
+    ``jax.lax.top_k``'s lowest-index-first tie-break; slots past the number
+    of retrievable docs (k > C, or masked rows) hold score -inf / id -1.
+    """
+    if interpret is None:
+        interpret = _interpret_default()
+    if a.dtype != jnp.uint32 or b.dtype != jnp.uint32:
+        raise TypeError(f"packed sketches must be uint32, got {a.dtype}, {b.dtype}")
+    if k < 1:
+        raise ValueError(f"k must be >= 1, got {k}")
+    q, w = a.shape
+    c, _ = b.shape
+    if c == 0:  # no docs: every slot is the empty sentinel
+        return (jnp.full((q, k), -jnp.inf, jnp.float32),
+                jnp.full((q, k), -1, jnp.int32))
+    k_pad = topk_stream.next_pow2(k)
+    block_q = min(block_q, max(8, q))
+    # corpus block: a power of two (the sort network's lane count), big
+    # enough to donate a full k_pad columns, no bigger than the padded corpus
+    block_c = max(k_pad, min(topk_stream.next_pow2(block_c),
+                             topk_stream.next_pow2(max(c, 1))))
+    na = a_fills if a_fills is not None else pk.row_popcount(a)
+    nb = b_fills if b_fills is not None else pk.row_popcount(b)
+    valid = (
+        b_valid.astype(jnp.int32)
+        if b_valid is not None
+        else jnp.ones((c,), jnp.int32)
+    )
+    ap = _pad_to(a, 0, block_q, 0)
+    bp = _pad_to(b, 0, block_c, 0)
+    sub_w = min(sub_words, w)
+    ap = _pad_to(ap, 1, sub_w, 0)
+    bp = _pad_to(bp, 1, sub_w, 0)
+    nap = _pad_to(na.astype(jnp.int32), 0, block_q, 0)
+    nbp = _pad_to(nb.astype(jnp.int32), 0, block_c, 0)
+    validp = _pad_to(valid, 0, block_c, 0)
+    out_s, out_i = topk_stream.sketch_topk_kernel(
+        ap, bp, nap, nbp, validp, n_bins, measure, k_pad,
+        block_q=block_q, block_c=block_c, sub_words=sub_w, interpret=interpret,
+    )
+    return out_s[:q, :k], out_i[:q, :k]
 
 
 def score_counts(a: jax.Array, b: jax.Array, **kw) -> jax.Array:

@@ -17,9 +17,13 @@ per-row vectors — so the (Q, C) float similarity matrix leaves VMEM once.
 Grid: (Q/TQ, C/TC, W/TW); accumulation across the last (fastest) grid dim
 into the output tile, initialized at k == 0 (TPU grid order is row-major).
 
-VMEM per program (defaults TQ=TC=128, TW=32):
-  a tile 128*32*4 = 16 KiB, b tile 16 KiB, AND intermediate
-  128*128*32*4 = 2 MiB, acc tile 64 KiB  << 16 MiB.
+The contraction itself runs as an in-kernel loop over ``sub_w``-word
+sub-tiles (``_and_popcount_tile``), so the transient AND intermediate is
+(TQ, TC, sub_w) — 512 KiB at the defaults — instead of the full
+(TQ, TC, TW) 2 MiB 3D block the kernel used to materialize per step.
+VMEM per program (defaults TQ=TC=128, TW=32, sub_w=8):
+  a tile 128*32*4 = 16 KiB, b tile 16 KiB, AND sub-tile
+  128*128*8*4 = 512 KiB, acc tile 64 KiB  << 16 MiB.
 """
 
 from __future__ import annotations
@@ -45,6 +49,23 @@ def _popcount(x):
     x = (x & m2) + ((x >> 2) & m2)
     x = (x + (x >> 4)) & m4
     return (x * h01) >> 24
+
+
+def _and_popcount_tile(a, b, sub_w):
+    """(TQ, W) x (TC, W) uint32 -> (TQ, TC) int32 AND-popcounts.
+
+    Static loop over ``sub_w``-word sub-tiles: the transient AND block is
+    (TQ, TC, sub_w) instead of (TQ, TC, W), so VMEM pressure is set by the
+    sub-tile width, not the contraction length. W must divide into sub_w
+    chunks (callers pad the word axis).
+    """
+    w = a.shape[-1]
+    assert w % sub_w == 0, (w, sub_w)
+    acc = jnp.zeros((a.shape[0], b.shape[0]), jnp.int32)
+    for w0 in range(0, w, sub_w):
+        both = a[:, None, w0 : w0 + sub_w] & b[None, :, w0 : w0 + sub_w]
+        acc = acc + jnp.sum(_popcount(both).astype(jnp.int32), axis=-1)
+    return acc
 
 
 def _cardinality(count, n_bins):
@@ -73,7 +94,8 @@ def _epilogue(counts, na, nb, n_bins, measure):
     raise ValueError(f"unknown measure {measure!r}")
 
 
-def _kernel(a_ref, b_ref, na_ref, nb_ref, out_ref, acc_ref, *, n_bins, measure, k_steps):
+def _kernel(a_ref, b_ref, na_ref, nb_ref, out_ref, acc_ref, *, n_bins, measure,
+            k_steps, sub_w):
     k = pl.program_id(2)
 
     @pl.when(k == 0)
@@ -82,8 +104,7 @@ def _kernel(a_ref, b_ref, na_ref, nb_ref, out_ref, acc_ref, *, n_bins, measure, 
 
     a = a_ref[...]  # (TQ, TW) uint32
     b = b_ref[...]  # (TC, TW) uint32
-    both = a[:, None, :] & b[None, :, :]  # (TQ, TC, TW)
-    acc_ref[...] += jnp.sum(_popcount(both).astype(jnp.int32), axis=-1)
+    acc_ref[...] += _and_popcount_tile(a, b, sub_w)
 
     @pl.when(k == k_steps - 1)
     def _fin():
@@ -107,22 +128,27 @@ def sketch_score_kernel(
     block_q: int = 128,
     block_c: int = 128,
     block_w: int = 32,
+    sub_words: int = 8,
     interpret: bool = False,
 ) -> jax.Array:
     """(Q, W) x (C, W) packed sketches -> (Q, C) float32 similarity/counts.
 
     ``na``/``nb`` are per-row fill counts (int32) — tiny, precomputed by a
     single popcount pass in ``ops.sketch_score``. All dims must be multiples
-    of their block sizes (ops handles padding).
+    of their block sizes (ops handles padding). ``sub_words`` is the width of
+    the in-kernel contraction sub-tile (clamped to divide ``block_w``).
     """
     q, w = a.shape
     c, _ = b.shape
     assert q % block_q == 0 and c % block_c == 0 and w % block_w == 0, (q, c, w)
+    sub_w = min(sub_words, block_w)
+    while block_w % sub_w:
+        sub_w -= 1
     k_steps = w // block_w
     grid = (q // block_q, c // block_c, k_steps)
     return pl.pallas_call(
         functools.partial(
-            _kernel, n_bins=n_bins, measure=measure, k_steps=k_steps
+            _kernel, n_bins=n_bins, measure=measure, k_steps=k_steps, sub_w=sub_w
         ),
         grid=grid,
         in_specs=[

@@ -1,0 +1,202 @@
+"""Pallas TPU kernel: fused streaming score -> top-k over a packed corpus.
+
+``sketch_score`` writes the full (Q, C) float32 similarity matrix to HBM and
+reads it back just so ``jax.lax.top_k`` can keep k values per query — an
+O(Q·C) memory wall that caps corpus size. This kernel never materializes
+that matrix: the grid iterates corpus blocks as the *innermost* sequential
+dimension, each step computes the AND-popcount + estimator epilogue for its
+(TQ, TC) tile entirely in VMEM (reusing ``popcount_sim``'s SWAR popcount,
+sub-tiled contraction and ``_epilogue``) and merges the tile into a
+per-query running top-k of scores + *global* doc ids. Only (Q, k_pad)
+scores/ids ever leave the chip: HBM output shrinks from O(Q·C) to O(Q·k).
+
+Top-k maintenance is a sort-based compare-exchange network (DESIGN.md §7):
+
+  * each (TQ, TC) score tile is bitonic-sorted descending along the lane
+    axis together with its doc ids (tie-break: smaller id, matching
+    ``jax.lax.top_k``), and its best ``k_pad`` columns kept;
+  * the running top-k (descending) concatenated with the reversed block
+    top-k is a bitonic sequence of length 2·k_pad, so one bitonic *merge*
+    (log2(2·k_pad) compare-exchange stages) re-sorts it; the best k_pad
+    survive in the output block, which stays VMEM-resident across the
+    corpus-block grid steps (same revisited-output pattern as a matmul
+    accumulator).
+
+Partner exchange at lane distance ``stride`` is the XOR trick laid out as a
+reshape: (TQ, L) -> (TQ, L/(2·stride), 2, stride) and a swap of the pair
+axis — pure VPU data movement, no gather.
+
+Invalid corpus rows (padding, masked docs) stream in via a per-row validity
+vector and score -inf with id -1, so they can never displace a real doc.
+
+Grid: (Q/TQ, C/TC) with the corpus axis innermost; the word axis is not a
+grid dimension — each step loads its full (TQ, W) / (TC, W) word rows and
+contracts them with ``popcount_sim._and_popcount_tile``'s in-kernel sub-tile
+loop, keeping the AND transient at (TQ, TC, sub_w).
+
+VMEM per program (TQ=TC=128, W=64, k_pad=16, sub_w=8):
+  a tile 32 KiB + b tile 32 KiB + AND sub-tile 512 KiB + score tile 64 KiB
+  + sort ids 64 KiB + running top-k 2*(128*16*4) = 16 KiB  << 16 MiB.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .popcount_sim import _and_popcount_tile, _epilogue
+
+__all__ = ["sketch_topk_kernel", "next_pow2"]
+
+_NEG_INF = float("-inf")
+
+
+def next_pow2(n: int) -> int:
+    """Smallest power of two >= n (n >= 1)."""
+    p = 1
+    while p < n:
+        p *= 2
+    return p
+
+
+def _exchange(x, stride):
+    """Swap each lane with its partner at XOR-distance ``stride`` (last axis)."""
+    q, l = x.shape
+    x = x.reshape(q, l // (2 * stride), 2, stride)
+    x = jnp.concatenate([x[:, :, 1:2, :], x[:, :, 0:1, :]], axis=2)
+    return x.reshape(q, l)
+
+
+def _compare_exchange(s, ids, stride, take_max):
+    """One compare-exchange stage on (score, id) pairs at lane distance
+    ``stride``. ``take_max`` marks lanes that keep the larger element under
+    the total order (score desc, id asc) — the id tie-break reproduces
+    ``jax.lax.top_k``'s lowest-index-first convention exactly."""
+    ps, pids = _exchange(s, stride), _exchange(ids, stride)
+    self_wins = (s > ps) | ((s == ps) & (ids <= pids))
+    keep_self = jnp.where(take_max, self_wins, ~self_wins)
+    return jnp.where(keep_self, s, ps), jnp.where(keep_self, ids, pids)
+
+
+def _lane(shape, stride=None):
+    lane = jax.lax.broadcasted_iota(jnp.int32, shape, 1)
+    return lane if stride is None else (lane & stride) == 0
+
+
+def _bitonic_sort_desc(s, ids):
+    """Full bitonic sort of (TQ, L) descending along lanes, L a power of 2."""
+    l = s.shape[-1]
+    size = 2
+    while size <= l:
+        stride = size // 2
+        while stride >= 1:
+            desc_block = (_lane(s.shape) & size) == 0
+            lower = _lane(s.shape, stride)
+            s, ids = _compare_exchange(s, ids, stride, lower == desc_block)
+            stride //= 2
+        size *= 2
+    return s, ids
+
+
+def _bitonic_merge_desc(s, ids):
+    """Merge a bitonic (TQ, L) sequence into descending order: one pass of
+    log2(L) compare-exchange stages, max kept at the lower lane."""
+    stride = s.shape[-1] // 2
+    while stride >= 1:
+        s, ids = _compare_exchange(s, ids, stride, _lane(s.shape, stride))
+        stride //= 2
+    return s, ids
+
+
+def _kernel(a_ref, b_ref, na_ref, nb_ref, valid_ref, out_s_ref, out_i_ref, *,
+            n_bins, measure, sub_w, k_pad, block_c):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        out_s_ref[...] = jnp.full_like(out_s_ref, _NEG_INF)
+        out_i_ref[...] = jnp.full_like(out_i_ref, -1)
+
+    a = a_ref[...]  # (TQ, W) uint32
+    b = b_ref[...]  # (TC, W) uint32
+    counts = _and_popcount_tile(a, b, sub_w)  # (TQ, TC) int32
+    if measure == "counts":
+        s = counts.astype(jnp.float32)
+    else:
+        na = na_ref[...].astype(jnp.int32).reshape(-1, 1)
+        nb = nb_ref[...].astype(jnp.int32).reshape(1, -1)
+        s = _epilogue(counts, na, nb, n_bins, measure)
+    valid = valid_ref[...].reshape(1, -1) != 0
+    s = jnp.where(valid, s, _NEG_INF)
+    ids = j * block_c + _lane(s.shape)  # global doc ids for this block
+    ids = jnp.where(valid, ids, -1)
+
+    # block top-k_pad, then one bitonic merge against the running top-k
+    s, ids = _bitonic_sort_desc(s, ids)
+    ms = jnp.concatenate([out_s_ref[...], s[:, k_pad - 1 :: -1]], axis=1)
+    mi = jnp.concatenate([out_i_ref[...], ids[:, k_pad - 1 :: -1]], axis=1)
+    ms, mi = _bitonic_merge_desc(ms, mi)
+    out_s_ref[...] = ms[:, :k_pad]
+    out_i_ref[...] = mi[:, :k_pad]
+
+
+def sketch_topk_kernel(
+    a: jax.Array,
+    b: jax.Array,
+    na: jax.Array,
+    nb: jax.Array,
+    valid: jax.Array,
+    n_bins: int,
+    measure: str,
+    k_pad: int,
+    *,
+    block_q: int = 128,
+    block_c: int = 128,
+    sub_words: int = 8,
+    interpret: bool = False,
+):
+    """(Q, W) x (C, W) packed sketches -> ((Q, k_pad) scores, (Q, k_pad) ids).
+
+    ``na``/``nb`` are per-row fill counts, ``valid`` (C,) int32 marks real
+    corpus rows (0 -> score -inf, id -1). Q/C/W must be multiples of their
+    block sizes and ``block_c``/``k_pad`` powers of two with
+    ``k_pad <= block_c`` (``ops.sketch_topk`` handles padding/clamping).
+    Output rows are sorted descending; HBM traffic is O(Q·(W + k_pad)), not
+    O(Q·C).
+    """
+    q, w = a.shape
+    c, _ = b.shape
+    assert q % block_q == 0 and c % block_c == 0, (q, c, block_q, block_c)
+    assert block_c == next_pow2(block_c) and k_pad == next_pow2(k_pad)
+    assert k_pad <= block_c, (k_pad, block_c)
+    sub_w = min(sub_words, w)
+    while w % sub_w:
+        sub_w -= 1
+    grid = (q // block_q, c // block_c)
+    out_s, out_i = pl.pallas_call(
+        functools.partial(
+            _kernel, n_bins=n_bins, measure=measure,
+            sub_w=sub_w, k_pad=k_pad, block_c=block_c,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_q, w), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_c, w), lambda i, j: (j, 0)),
+            pl.BlockSpec((block_q,), lambda i, j: (i,)),
+            pl.BlockSpec((block_c,), lambda i, j: (j,)),
+            pl.BlockSpec((block_c,), lambda i, j: (j,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_q, k_pad), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_q, k_pad), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((q, k_pad), jnp.float32),
+            jax.ShapeDtypeStruct((q, k_pad), jnp.int32),
+        ],
+        interpret=interpret,
+    )(a, b, na, nb, valid)
+    return out_s, out_i
