@@ -132,6 +132,20 @@ class CheckpointManager:
             return steps[-1] if steps else None
         return step
 
+    def load_aux(self, step: Optional[int] = None) -> Dict:
+        """Read a checkpoint's aux metadata without touching its arrays.
+
+        Cold-restore entry point: callers that serialize their own shape
+        manifest into ``aux`` (e.g. ``engine.SegmentedStore``) read it here
+        first, build a matching zero target tree, then call :meth:`restore`.
+        """
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {self.root}")
+        with open(os.path.join(self.root, f"step_{step:012d}", "aux.json")) as f:
+            return json.load(f)
+
     def restore(
         self,
         step: Optional[int],

@@ -4,12 +4,13 @@ Public API:
     BinSketchConfig, theorem1_N, make_mapping, sketch_indices, sketch_dense
     estimators.estimates_from_counts / pairwise_similarity  (Algorithms 1-4)
     packed.*                 (bit packing + popcount substrate)
+    counting.*               (counting BinSketch: the mutable lift, DESIGN §9)
     index.SketchIndex        (deprecated shim over repro.engine.SketchEngine)
     categorical.*            (paper §I.A categorical extension)
     baselines.*              (BCS, MinHash, DOPH, OddSketch, SimHash, CBE)
 """
 
-from . import baselines, categorical, estimators, index, packed  # noqa: F401
+from . import baselines, categorical, counting, estimators, index, packed  # noqa: F401
 from .binsketch import (  # noqa: F401
     BinSketchConfig,
     make_mapping,

@@ -1,0 +1,88 @@
+"""Counting BinSketch — the mutable lift of the paper's OR-sketch.
+
+The packed sketch (Definition 4) is an OR over the bins of the random map
+``pi``: once a bit is set there is no way to know how many elements set it,
+so nothing can ever be *removed* without a rebuild. The counting variant
+(the count-sketch idiom: per-bucket counters whose zero-test recovers the
+structure) stores, per document, the **occupancy counter** of every bin
+
+    c_s[j] = |{ i in a : pi(i) = j }|
+
+instead of the OR bit ``a_s[j] = [c_s[j] > 0]``. Insertion of an element
+increments its bin, removal decrements it, and the binary sketch — the one
+every estimator and both scoring kernels consume, bit-for-bit unchanged —
+is recovered as ``c_s > 0`` at any moment. u16 counters suffice: a bin's
+occupancy is bounded by the document sparsity psi (<< 65535 for every
+regime the paper considers; saturating arithmetic guards the pathological
+rest).
+
+This module is the pure-jnp oracle; the batched Pallas compare-reduce
+construction lives in ``repro.kernels.count_update`` (dispatch via
+``Backend.count``). The mutable head segment in
+``repro.engine.segments`` is the consumer.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import binsketch, packed as pk
+
+__all__ = [
+    "COUNTER_DTYPE",
+    "COUNTER_MAX",
+    "count_indices_dense",
+    "counters_to_packed",
+    "counter_fills",
+    "packed_to_counters",
+]
+
+COUNTER_DTYPE = jnp.uint16
+COUNTER_MAX = 65535  # saturating add/sub clamp
+
+
+def count_indices_dense(
+    cfg: binsketch.BinSketchConfig, mapping: jax.Array, idx: jax.Array
+) -> jax.Array:
+    """Padded sparse rows ``idx: (B, P)`` (pad = -1) -> occupancy ``(B, N)`` int32.
+
+    Scatter-add reference (cf. the scatter-max of
+    :func:`~repro.core.binsketch.sketch_indices_dense`); the TPU-native
+    compare-reduce construction is ``kernels.count_update``. Elements are
+    counted with multiplicity — callers feeding *sets* must deduplicate
+    rows first (the synthetic corpora already are unique-sorted).
+    """
+    bsz = idx.shape[0]
+    bins = binsketch.map_indices(cfg, mapping, idx)
+    valid = (bins >= 0).astype(jnp.int32)
+    safe = jnp.where(bins >= 0, bins, 0)
+    rows = jnp.broadcast_to(jnp.arange(bsz)[:, None], idx.shape)
+    dense = jnp.zeros((bsz, cfg.n_bins), jnp.int32)
+    return dense.at[rows, safe].add(valid)
+
+
+def counters_to_packed(counters: jax.Array) -> jax.Array:
+    """Occupancy ``(B, N)`` -> packed binary sketch ``(B, W)`` uint32.
+
+    ``counters > 0`` *is* the paper's OR-sketch, so everything downstream
+    (estimators, scoring kernels, fused top-k) is unchanged.
+    """
+    return pk.pack_bits((counters > 0).astype(jnp.uint8))
+
+
+def counter_fills(counters: jax.Array) -> jax.Array:
+    """Occupancy ``(B, N)`` -> fill counts |a_s| ``(B,)`` int32 (bins occupied)."""
+    return jnp.sum((counters > 0).astype(jnp.int32), axis=-1)
+
+
+def packed_to_counters(packed: jax.Array, n_bins: int) -> jax.Array:
+    """Packed binary rows -> occupancy rows with every set bin at count 1.
+
+    Lossy re-entry point for rows that only exist in OR-form (sealed
+    segments, ``add_sketches`` callers): the binary sketch is preserved
+    exactly, but element multiplicity is gone, so per-element *retraction*
+    on such rows is no longer meaningful (the segment store tracks this
+    and refuses).
+    """
+    return pk.unpack_bits(packed, n_bins).astype(jnp.int32)

@@ -15,6 +15,7 @@ the engine pads with zero sketches and masks them out of top-k.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Callable, Optional, Tuple
 
 import jax
@@ -37,6 +38,14 @@ class SketchIndex:
     corpus: jax.Array  # (C, W) packed sketches
     measure: str = "jaccard"
     scorer: Optional[Scorer] = None  # legacy hook; prefer engine backends
+
+    def __post_init__(self):
+        warnings.warn(
+            "core.index.SketchIndex is deprecated; use repro.engine.SketchEngine "
+            "(SketchStore + backend registry) instead",
+            DeprecationWarning,
+            stacklevel=2,
+        )
 
     def _engine(self):
         cached, corpus_at_build = self.__dict__.get("_engine_cache", (None, None))

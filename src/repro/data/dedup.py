@@ -5,19 +5,26 @@ wired into the LM data pipeline.
 Documents are token-id *sets* (sparse binary over the vocab), sketched once
 (single pass, OR-homomorphic so corpus shards sketch independently), and
 candidate duplicates are pairs whose *estimated* Jaccard exceeds the
-threshold. This runs ahead of LM training; the transformer math itself is
-untouched (DESIGN.md §4 — BinSketch is inapplicable to dense activations).
+threshold. Sketching and scoring go through the engine stack: a
+:class:`~repro.engine.store.SketchStore` (ingest-time fill cache — the
+corpus popcount happens once, not once per chunk) and a named
+:class:`~repro.engine.backends.Backend` instead of hand-threaded kernel
+flags; pair chunks reuse the engine's :class:`QueryPlanner` bucketing so
+the chunk loop compiles a bounded set of shapes. This runs ahead of LM
+training; the transformer math itself is untouched (DESIGN.md §4 —
+BinSketch is inapplicable to dense activations).
 """
 
 from __future__ import annotations
 
 from typing import List, Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core import BinSketchConfig, make_mapping, sketch_indices
-from ..kernels import ops
+from ..core import BinSketchConfig, make_mapping
+from ..engine import QueryPlanner, SketchStore, get_backend
 
 __all__ = ["find_near_duplicates"]
 
@@ -30,30 +37,43 @@ def find_near_duplicates(
     rho: float = 0.05,
     seed: int = 0,
     chunk: int = 1024,
+    backend: str | None = "auto",
 ) -> List[Tuple[int, int, float]]:
     """doc_token_sets: (n, P) padded unique-token rows (pad = -1).
 
     Returns [(i, j, js_est)] with i < j and js_est >= threshold. Scoring is
-    chunked through the packed popcount kernel — O(n^2) pairs but at 32
-    pairs/word/cycle in sketch space, which is the paper's point.
+    chunked through the packed popcount path of the named ``backend`` —
+    O(n^2) pairs but at 32 pairs/word/cycle in sketch space, which is the
+    paper's point.
     """
-    import jax
-
     n = doc_token_sets.shape[0]
     if psi is None:
         lens = (doc_token_sets >= 0).sum(axis=1)
         psi = int(lens.max())
     cfg = BinSketchConfig.from_sparsity(vocab_size, psi, rho)
     mapping = make_mapping(cfg, jax.random.PRNGKey(seed))
-    sk = sketch_indices(cfg, mapping, jnp.asarray(doc_token_sets))
+    be = get_backend(backend)
+    store = SketchStore.from_indices(
+        cfg, mapping, jnp.asarray(doc_token_sets), backend=be
+    )
+    sk, fills = store.sketches, store.fills
 
     out: List[Tuple[int, int, float]] = []
-    for qs in range(0, n, chunk):
-        q = sk[qs : qs + chunk]
-        sims = np.asarray(ops.sketch_score(q, sk, n_bins=cfg.n_bins, measure="jaccard"))
+    planner = QueryPlanner(min_batch=min(chunk, 8), max_batch=max(chunk, 8))
+    for piece in planner.plan(n):
+        lo, hi = piece.start, piece.start + piece.rows
+        q, qf = sk[lo:hi], fills[lo:hi]
+        if piece.padded > piece.rows:  # pad to the planner bucket so the
+            # tail chunk reuses a compiled shape (zero rows score 0 < threshold)
+            q = jnp.pad(q, ((0, piece.padded - piece.rows), (0, 0)))
+            qf = jnp.pad(qf, (0, piece.padded - piece.rows))
+        sims = np.asarray(
+            be.score(q, sk, cfg.n_bins, "jaccard",
+                     q_fills=qf, corpus_fills=fills)
+        )[: piece.rows]
         hits = np.argwhere(sims >= threshold)
         for qi, cj in hits:
-            i, j = qs + int(qi), int(cj)
+            i, j = lo + int(qi), int(cj)
             if i < j:
                 out.append((i, j, float(sims[qi, cj])))
     return out

@@ -3,6 +3,7 @@
 | piece | file | role |
 |---|---|---|
 | SketchStore | store.py | packed corpus, incremental OR-ingest, fill cache |
+| SegmentedStore | segments.py | mutable lifecycle: counting head, sealed segments, tombstones, compaction |
 | Backend registry | backends.py | oracle / pallas / pallas-interpret behind one name |
 | QueryPlanner | planner.py | ragged batches -> bounded set of jit shapes |
 | SketchEngine | engine.py | build + query + sharded query on the pieces above |
@@ -18,19 +19,24 @@ from .backends import (
     get_backend,
     register_backend,
 )
-from .engine import SketchEngine, shard_topk
+from .engine import SketchEngine, merge_segment_topk, shard_topk
 from .planner import QueryChunk, QueryPlanner
-from .store import SketchStore
+from .segments import SealedSegment, SegmentedStore
+from .store import SegmentView, SketchStore
 
 __all__ = [
     "Backend",
     "QueryChunk",
     "QueryPlanner",
+    "SealedSegment",
+    "SegmentView",
+    "SegmentedStore",
     "SketchEngine",
     "SketchStore",
     "available_backends",
     "from_legacy_scorer",
     "get_backend",
+    "merge_segment_topk",
     "register_backend",
     "shard_topk",
 ]

@@ -34,7 +34,7 @@ from typing import Callable, Dict, Optional, Protocol, Tuple
 import jax
 import jax.numpy as jnp
 
-from ..core import binsketch, estimators, packed as pk
+from ..core import binsketch, counting, estimators, packed as pk
 
 __all__ = ["Backend", "register_backend", "get_backend", "available_backends",
            "from_legacy_scorer"]
@@ -49,6 +49,17 @@ class Backend(Protocol):
         self, cfg: binsketch.BinSketchConfig, mapping: jax.Array, idx: jax.Array
     ) -> jax.Array:
         """(B, P) padded sparse rows -> (B, W) packed sketches."""
+        ...
+
+    def count(
+        self, cfg: binsketch.BinSketchConfig, mapping: jax.Array, idx: jax.Array
+    ) -> jax.Array:
+        """(B, P) padded sparse rows -> (B, N) int32 per-bin occupancy.
+
+        The counting-BinSketch construction (``core.counting``): the
+        mutable head segment's insert/retract deltas. ``counters > 0``
+        packs to exactly what :meth:`sketch` returns.
+        """
         ...
 
     def score(
@@ -108,6 +119,9 @@ class OracleBackend:
     def sketch(self, cfg, mapping, idx):
         return binsketch.sketch_indices(cfg, mapping, idx)
 
+    def count(self, cfg, mapping, idx):
+        return counting.count_indices_dense(cfg, mapping, idx)
+
     def score(self, q, corpus, n_bins, measure, *, q_fills=None, corpus_fills=None):
         return estimators.pairwise_similarity(
             q, corpus, n_bins, measure, a_fills=q_fills, b_fills=corpus_fills
@@ -153,6 +167,12 @@ class PallasBackend:
         bins = binsketch.map_indices(cfg, mapping, idx)
         return ops.build_sketch(bins, cfg.n_bins, interpret=self.interpret)
 
+    def count(self, cfg, mapping, idx):
+        from ..kernels import ops
+
+        bins = binsketch.map_indices(cfg, mapping, idx)
+        return ops.count_bins(bins, cfg.n_bins, interpret=self.interpret)
+
     def score(self, q, corpus, n_bins, measure, *, q_fills=None, corpus_fills=None):
         from ..kernels import ops
 
@@ -185,6 +205,9 @@ class _LegacyScorerBackend:
 
     def sketch(self, cfg, mapping, idx):
         return self._oracle.sketch(cfg, mapping, idx)
+
+    def count(self, cfg, mapping, idx):
+        return self._oracle.count(cfg, mapping, idx)
 
     def score(self, q, corpus, n_bins, measure, *, q_fills=None, corpus_fills=None):
         return self._scorer(q, corpus)

@@ -34,9 +34,33 @@ from ..parallel.sharding import shard_map
 from . import backends as backends_mod
 from .backends import Backend
 from .planner import QueryPlanner
-from .store import SketchStore
+from .segments import SegmentedStore
+from .store import SegmentView, SketchStore
 
-__all__ = ["SketchEngine", "shard_topk"]
+__all__ = ["SketchEngine", "merge_segment_topk", "shard_topk"]
+
+
+def merge_segment_topk(parts_s, parts_i, k: int) -> Tuple[jax.Array, jax.Array]:
+    """Merge per-segment (Q, k) top-k partials into one global (Q, k).
+
+    Unlike the chunked merges elsewhere (whose concatenation order encodes
+    ascending doc id, so ``lax.top_k``'s positional tie-break is the id
+    tie-break), segments of a mutated store can hold *interleaved* id
+    ranges — an updated sealed doc relocates into the head under its old,
+    low id. Ties must therefore break toward the lower **global id**
+    explicitly: two stable sorts (id ascending, then score descending)
+    reproduce exactly the ordering a fresh batch-built store would give.
+    ``-inf`` slots already carry id -1 and sink to the tail.
+    """
+    sc = jnp.concatenate(parts_s, axis=1)
+    ids = jnp.concatenate(parts_i, axis=1)
+    order = jnp.argsort(ids, axis=1, stable=True)
+    sc = jnp.take_along_axis(sc, order, axis=1)
+    ids = jnp.take_along_axis(ids, order, axis=1)
+    order = jnp.argsort(-sc, axis=1, stable=True)
+    sc = jnp.take_along_axis(sc, order, axis=1)[:, :k]
+    ids = jnp.take_along_axis(ids, order, axis=1)[:, :k]
+    return sc, jnp.where(jnp.isneginf(sc), -1, ids)
 
 
 def shard_topk(
@@ -82,9 +106,10 @@ def shard_topk(
 
 @dataclasses.dataclass
 class SketchEngine:
-    """Build + serve over a :class:`SketchStore` through one backend."""
+    """Build + serve over a :class:`SketchStore` or :class:`SegmentedStore`
+    through one backend."""
 
-    store: SketchStore
+    store: "SketchStore | SegmentedStore"
     backend: Backend
     measure: str = "jaccard"
     planner: QueryPlanner = dataclasses.field(default_factory=QueryPlanner)
@@ -102,14 +127,27 @@ class SketchEngine:
         planner: Optional[QueryPlanner] = None,
         capacity: int = 1024,
         batch: int = 4096,
+        mutable: bool = False,
+        seal_rows: Optional[int] = None,
     ) -> "SketchEngine":
         """Create an engine; ``corpus_idx`` (C, P) is ingested if given,
-        otherwise the engine starts empty and is fed via :meth:`add`."""
+        otherwise the engine starts empty and is fed via :meth:`add`.
+        ``mutable=True`` builds over a :class:`SegmentedStore` (counting
+        head + sealed segments) so the corpus also supports ``delete`` /
+        ``update`` / ``seal`` / ``compact`` / ``expire``; ``seal_rows``
+        auto-seals the head at that many rows."""
         be = backends_mod.get_backend(backend)
+        if seal_rows is not None and not mutable:
+            raise ValueError("seal_rows requires mutable=True (append-only "
+                             "SketchStore has no head to seal)")
+        store_cls = SegmentedStore if mutable else SketchStore
+        kw = {"seal_rows": seal_rows} if mutable else {}
         if corpus_idx is not None:
-            store = SketchStore.from_indices(cfg, mapping, corpus_idx, backend=be, batch=batch)
+            store = store_cls.from_indices(
+                cfg, mapping, corpus_idx, backend=be, batch=batch, **kw
+            )
         else:
-            store = SketchStore.create(cfg, mapping, capacity=capacity)
+            store = store_cls.create(cfg, mapping, capacity=capacity, **kw)
         return cls(store, be, measure, planner or QueryPlanner())
 
     # ---------------------------------------------------------------- ingest
@@ -117,13 +155,51 @@ class SketchEngine:
     def cfg(self) -> binsketch.BinSketchConfig:
         return self.store.cfg
 
-    def add(self, idx: jax.Array, *, batch: int = 4096) -> range:
-        """Stream (B, P) padded sparse docs into the corpus; returns ids."""
+    def add(self, idx: jax.Array, *, batch: int = 4096, now: float = 0.0) -> range:
+        """Stream (B, P) padded sparse docs into the corpus; returns ids.
+        ``now`` stamps the docs' birth time on a mutable store (TTL expiry
+        measures age against it); append-only stores ignore it."""
+        if isinstance(self.store, SegmentedStore):
+            return self.store.add(idx, backend=self.backend, batch=batch, now=now)
         return self.store.add(idx, backend=self.backend, batch=batch)
 
     def merge_rows(self, doc_ids: jax.Array, idx: jax.Array) -> None:
         """OR new content into existing docs (see SketchStore.merge_rows)."""
         self.store.merge_rows(doc_ids, idx, backend=self.backend)
+
+    # ------------------------------------------------- lifecycle (mutable)
+    def _mutable_store(self) -> SegmentedStore:
+        if not isinstance(self.store, SegmentedStore):
+            raise TypeError(
+                "this engine serves an append-only SketchStore; build with "
+                "mutable=True for delete/update/seal/compact/expire"
+            )
+        return self.store
+
+    def delete(self, doc_ids) -> int:
+        """Tombstone docs (head rows zeroed, sealed rows mask-flipped)."""
+        return self._mutable_store().delete(doc_ids)
+
+    def update(self, doc_ids, idx: jax.Array, *, now: float = 0.0) -> None:
+        """Replace doc contents in place (ids survive; sealed docs relocate
+        into the counting head)."""
+        self._mutable_store().update(doc_ids, idx, backend=self.backend, now=now)
+
+    def retract_rows(self, doc_ids, idx: jax.Array) -> None:
+        """Decrement elements out of head-resident docs (counting sketch)."""
+        self._mutable_store().retract_rows(doc_ids, idx, backend=self.backend)
+
+    def seal(self):
+        """Freeze the counting head into a packed sealed segment."""
+        return self._mutable_store().seal()
+
+    def compact(self):
+        """Merge sealed segments, dropping tombstones; returns stats."""
+        return self._mutable_store().compact()
+
+    def expire(self, ttl: float, now: float) -> int:
+        """Tombstone docs older than ``ttl``."""
+        return self._mutable_store().expire(ttl, now)
 
     # ----------------------------------------------------------------- query
     def _sketch_queries(self, query_idx: jax.Array) -> jax.Array:
@@ -142,15 +218,20 @@ class SketchEngine:
         """(Q, P) padded query rows -> full (Q, C) similarity matrix.
 
         Materializes O(Q·C) — analysis/benchmark surface only; the serving
-        path is :meth:`query`. Query fills are left to the backend so the
+        path is :meth:`query`. On a segmented store, column ``j`` is the
+        j-th *live* doc in ascending global-id order
+        (``store.live_ids[j]``). Query fills are left to the backend so the
         popcount fuses into the jit'd scoring kernel instead of running
         eagerly out here. ``use_fill_cache=False`` forces the legacy
         per-query corpus popcount (benchmark baseline only)."""
         if query_idx.shape[0] == 0:
             return jnp.zeros((0, self.store.size), jnp.float32)
         out = []
-        corpus = self.store.sketches
-        fills = self.store.fills if use_fill_cache else None
+        if isinstance(self.store, SegmentedStore):
+            corpus, corpus_fills, _ = self.store.live()  # one gather, not two
+        else:
+            corpus, corpus_fills = self.store.sketches, self.store.fills
+        fills = corpus_fills if use_fill_cache else None
         for chunk in self.planner.plan(query_idx.shape[0]):
             qs = self._padded_query_sketches(
                 query_idx[chunk.start : chunk.start + chunk.rows], chunk.padded
@@ -161,29 +242,56 @@ class SketchEngine:
             out.append(s[: chunk.rows])
         return jnp.concatenate(out, axis=0)
 
+    def _views_topk(
+        self, qs: jax.Array, views, k: int, *, use_fill_cache: bool = True
+    ) -> Tuple[jax.Array, jax.Array]:
+        """Streaming top-k over a list of segment views + k-slot merge.
+
+        Each view runs ``Backend.topk`` (tombstones in as ``corpus_valid``,
+        fill cache in as ``corpus_fills``), local indices map to global doc
+        ids, and only the per-segment (Q, k) partials are merged — no
+        (Q, C) matrix, per segment or global, ever exists."""
+        if not views:
+            return (jnp.full((qs.shape[0], k), -jnp.inf, jnp.float32),
+                    jnp.full((qs.shape[0], k), -1, jnp.int32))
+        parts_s, parts_i = [], []
+        for v in views:
+            sc, ix = self.backend.topk(
+                qs, v.sketches, self.cfg.n_bins, self.measure, k,
+                corpus_fills=v.fills if use_fill_cache else None,
+                corpus_valid=v.valid,
+            )
+            if v.ids is not None:
+                ix = jnp.where(ix >= 0, jnp.take(v.ids, jnp.maximum(ix, 0)), -1)
+            parts_s.append(sc)
+            parts_i.append(ix)
+        if len(views) == 1:
+            return parts_s[0], parts_i[0]
+        return merge_segment_topk(parts_s, parts_i, k)
+
     def query(
         self, query_idx: jax.Array, k: int, *, use_fill_cache: bool = True
     ) -> Tuple[jax.Array, jax.Array]:
         """(Q, P) padded query rows -> (scores (Q, k), ids (Q, k)).
 
-        Streaming: each planner chunk runs ``Backend.topk``, so only
-        O(Q·k) scores ever leave the scoring kernel — the (Q, C) matrix is
-        never materialized (DESIGN.md §7). If ``k`` exceeds the corpus the
-        tail slots hold score -inf / id -1 (old behavior was an error).
+        Streaming: each planner chunk runs ``Backend.topk`` per segment
+        view, so only O(Q·k) scores ever leave a scoring kernel — the
+        (Q, C) matrix is never materialized (DESIGN.md §7). Segmented
+        stores merge the per-segment k-slot partials with the lower-id
+        tie-break (DESIGN.md §9); ids in results are *global* doc ids,
+        stable across seal/compact. If ``k`` exceeds the live corpus the
+        tail slots hold score -inf / id -1.
         """
         if query_idx.shape[0] == 0:
             return (jnp.zeros((0, k), jnp.float32),
                     jnp.full((0, k), -1, jnp.int32))
         out_s, out_i = [], []
-        corpus = self.store.sketches
-        fills = self.store.fills if use_fill_cache else None
+        views = self.store.segment_views()
         for chunk in self.planner.plan(query_idx.shape[0]):
             qs = self._padded_query_sketches(
                 query_idx[chunk.start : chunk.start + chunk.rows], chunk.padded
             )
-            sc, ix = self.backend.topk(
-                qs, corpus, self.cfg.n_bins, self.measure, k, corpus_fills=fills,
-            )
+            sc, ix = self._views_topk(qs, views, k, use_fill_cache=use_fill_cache)
             out_s.append(sc[: chunk.rows])
             out_i.append(ix[: chunk.rows])
         return jnp.concatenate(out_s, axis=0), jnp.concatenate(out_i, axis=0)
@@ -198,22 +306,39 @@ class SketchEngine:
     ) -> Tuple[jax.Array, jax.Array]:
         """Candidate-sharded retrieval: local top-k then O(k·devices) merge.
 
-        The corpus is padded with zero sketches up to a multiple of the mesh
-        axis; pad rows score -inf and are masked out of the merged top-k
-        (no silent tail drop for non-divisible C).
+        Each segment view is padded with zero sketches up to a multiple of
+        the mesh axis; pad rows score -inf and are masked out of the merged
+        top-k (no silent tail drop for non-divisible C). A segmented store
+        runs the sharded pass per segment and k-slot-merges the partials,
+        same as the single-device path.
         """
-        c = self.store.size
+        views = self.store.segment_views()
+        qs = self._sketch_queries(query_idx)
+        if not views:
+            return (jnp.full((qs.shape[0], k), -jnp.inf, jnp.float32),
+                    jnp.full((qs.shape[0], k), -1, jnp.int32))
+        parts = [self._sharded_view_topk(mesh, axis, qs, v, k) for v in views]
+        if len(parts) == 1:
+            return parts[0]
+        return merge_segment_topk([p[0] for p in parts], [p[1] for p in parts], k)
+
+    def _sharded_view_topk(
+        self, mesh: Mesh, axis: str, qs: jax.Array, view: SegmentView, k: int
+    ) -> Tuple[jax.Array, jax.Array]:
+        c = int(view.sketches.shape[0])
         shards = mesh.shape[axis]
         n_local = -(-c // shards)
         c_pad = n_local * shards
-        corpus = self.store.sketches
-        fills = self.store.fills
+        corpus, fills = view.sketches, view.fills
+        in_range = jnp.arange(c_pad, dtype=jnp.int32) < c
+        ids = (jnp.arange(c_pad, dtype=jnp.int32) if view.ids is None
+               else jnp.pad(view.ids.astype(jnp.int32), (0, c_pad - c),
+                            constant_values=-1))
+        valid = (in_range if view.valid is None
+                 else in_range & (jnp.pad(view.valid, (0, c_pad - c)) != 0))
         if c_pad > c:
             corpus = jnp.pad(corpus, ((0, c_pad - c), (0, 0)))
             fills = jnp.pad(fills, (0, c_pad - c))
-        ids = jnp.arange(c_pad, dtype=jnp.int32)
-        valid = ids < c
-        qs = self._sketch_queries(query_idx)
         n_bins, measure = self.cfg.n_bins, self.measure
         backend = self.backend  # same scoring path as the single-device query
 

@@ -1,0 +1,807 @@
+"""SegmentedStore — LSM-style mutable corpus lifecycle (DESIGN.md §9).
+
+``SketchStore`` is append-only by construction: the OR-homomorphic ingest
+cannot be undone, so a live catalog could never delete or update a document
+without a full rebuild. This module lifts it into a mutable index with the
+classic log-structured layout:
+
+  * a **mutable head segment** backed by the *counting* BinSketch
+    (``core.counting``): per-doc, per-bin u16 occupancy counters over the
+    same Ψ-mapping. The binary sketch every estimator and kernel consumes
+    is ``counters > 0`` — bit-for-bit the paper's sketch — so insert is an
+    increment, element retraction a decrement, and document replacement a
+    counter overwrite, all in place;
+  * **sealed segments** that stay packed-only (C, W) + fill cache, exactly
+    a frozen ``SketchStore`` slab. Deletion there is a tombstone flip in a
+    host-side bitmap that feeds ``Backend.topk``'s ``corpus_valid`` mask —
+    the row never scores again but no data moves;
+  * a **compaction pass** that merges all sealed segments into one,
+    dropping tombstoned rows and re-gathering the fill caches — the only
+    time sealed bytes are rewritten, and still never a re-sketch;
+  * **TTL expiry** over per-doc ingest timestamps (tombstones, reclaimed
+    at the next compaction).
+
+Global doc ids are assigned once at insert and survive seal and compaction
+(query results stay stable across lifecycle events). Updating a *sealed*
+doc relocates it into the head under its old id — rows inside every
+segment are kept ascending in id (the head re-sorts lazily), and the
+cross-segment merge in the engine breaks score ties toward the lower id,
+so an arbitrarily mutated store is query-identical to a fresh batch build
+over the surviving documents.
+
+Snapshots ride the existing :class:`~repro.checkpoint.manager.CheckpointManager`
+(atomic, async, retention) — the store serializes to a pytree + aux dict
+and restores from cold without re-sketching anything.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import binsketch, counting
+from .store import SegmentView, _grow
+
+__all__ = ["SealedSegment", "SegmentedStore"]
+
+_HEAD = -1  # segment index of the mutable head in the location map
+
+
+def _check_rows_match(ids: np.ndarray, idx: jax.Array) -> None:
+    """One content row per doc id — jax's clamping gather would otherwise
+    turn a length mismatch into silent row duplication, not an error."""
+    if idx.shape[0] != len(ids):
+        raise ValueError(
+            f"got {idx.shape[0]} content rows for {len(ids)} doc ids"
+        )
+
+
+def _grow_host(arr: np.ndarray, new_capacity: int) -> np.ndarray:
+    out = np.zeros((new_capacity,) + arr.shape[1:], arr.dtype)
+    out[: arr.shape[0]] = arr
+    return out
+
+
+def _gather_live(parts):
+    """Live rows of segment ``parts`` merge-sorted by global id.
+
+    ``parts``: iterable of ``(sketches, fills, ids, valid, born)`` — device
+    arrays for the first two, host numpy for the rest. Returns
+    ``(sketches, fills, ids, born)`` or ``None`` if nothing is live. The
+    one implementation behind ``live()``, ``seal()`` and ``compact()`` so
+    the query view and the compaction output cannot drift apart.
+    """
+    sk, fl, ids, born = [], [], [], []
+    for sketches, fills, ids_np, valid_np, born_np in parts:
+        keep = np.nonzero(valid_np)[0]
+        if len(keep) == 0:
+            continue
+        rows = jnp.asarray(keep.astype(np.int32))
+        sk.append(jnp.take(sketches, rows, axis=0))
+        fl.append(jnp.take(fills, rows, axis=0))
+        ids.append(ids_np[keep])
+        born.append(born_np[keep])
+    if not ids:
+        return None
+    ids_c = np.concatenate(ids)
+    order = np.argsort(ids_c, kind="stable")
+    order_dev = jnp.asarray(order.astype(np.int32))
+    return (
+        jnp.take(jnp.concatenate(sk, axis=0), order_dev, axis=0),
+        jnp.take(jnp.concatenate(fl, axis=0), order_dev, axis=0),
+        ids_c[order],
+        np.concatenate(born)[order],
+    )
+
+
+@dataclasses.dataclass
+class SealedSegment:
+    """Immutable packed slab + tombstone bitmap; rows ascend in global id."""
+
+    sketches: jax.Array  # (n, W) uint32
+    fills: jax.Array  # (n,) int32
+    ids: np.ndarray  # (n,) int64 global doc ids, ascending
+    valid: np.ndarray  # (n,) bool — False = tombstoned
+    born: np.ndarray  # (n,) float64 ingest timestamps
+
+    def __post_init__(self):
+        self._ids_dev: Optional[jax.Array] = None
+        self._valid_dev: Optional[jax.Array] = None
+        # ids are fixed at construction: compute the identity-mapping flag
+        # once so a freshly compacted, gap-free segment skips the id gather
+        self._ids_identity = bool(
+            np.array_equal(self.ids, np.arange(len(self.ids)))
+        )
+        self._all_valid = bool(self.valid.all())
+
+    @property
+    def n_rows(self) -> int:
+        return len(self.ids)
+
+    @property
+    def n_live(self) -> int:
+        return int(self.valid.sum())
+
+    def tombstone(self, row: int) -> None:
+        self.valid[row] = False
+        self._valid_dev = None  # invalidate the device-side mask cache
+        self._all_valid = False
+
+    def view(self) -> SegmentView:
+        """Tombstone-free segments pass ``valid=None`` (no per-score mask in
+        the kernels) and identity-id segments pass ``ids=None`` (no gather)
+        — a compacted corpus queries at append-only speed."""
+        if self._ids_identity:
+            ids_dev = None
+        elif self._ids_dev is None:
+            ids_dev = self._ids_dev = jnp.asarray(self.ids.astype(np.int32))
+        else:
+            ids_dev = self._ids_dev
+        if self._all_valid:
+            valid_dev = None
+        elif self._valid_dev is None:
+            valid_dev = self._valid_dev = jnp.asarray(self.valid.astype(np.int32))
+        else:
+            valid_dev = self._valid_dev
+        return SegmentView(self.sketches, self.fills, ids_dev, valid_dev)
+
+
+@dataclasses.dataclass
+class _Head:
+    """Mutable counting segment: u16 occupancy counters + derived packed rows.
+
+    ``counters/packed/fills`` live on device; the per-row metadata
+    (``ids/valid/born/exact``) is host numpy — mutation bookkeeping, not
+    kernel data. ``exact`` marks rows whose counters carry true element
+    multiplicity (built from indices); rows re-entered from packed form
+    (sealed relocation, ``add_sketches``) are occupancy-1 approximations
+    whose binary sketch is exact but whose counters cannot support
+    element-level retraction.
+    """
+
+    counters: jax.Array  # (cap, N) uint16
+    packed: jax.Array  # (cap, W) uint32
+    fills: jax.Array  # (cap,) int32
+    ids: np.ndarray  # (cap,) int64
+    valid: np.ndarray  # (cap,) bool
+    born: np.ndarray  # (cap,) float64
+    exact: np.ndarray  # (cap,) bool
+    size: int = 0
+    is_sorted: bool = True  # ids[:size] ascending?
+    # query-view (ids, valid) device pair incl. fast-path Nones; rebuilt on
+    # mutation (see meta_dev)
+    _meta_cache: Optional[Tuple] = dataclasses.field(
+        default=None, init=False, repr=False
+    )
+
+    @classmethod
+    def create(cls, n_bins: int, n_words: int, capacity: int) -> "_Head":
+        capacity = max(int(capacity), 1)
+        return cls(
+            jnp.zeros((capacity, n_bins), counting.COUNTER_DTYPE),
+            jnp.zeros((capacity, n_words), jnp.uint32),
+            jnp.zeros((capacity,), jnp.int32),
+            np.zeros((capacity,), np.int64),
+            np.zeros((capacity,), bool),
+            np.zeros((capacity,), np.float64),
+            np.zeros((capacity,), bool),
+        )
+
+    @property
+    def capacity(self) -> int:
+        return int(self.counters.shape[0])
+
+    def ensure_capacity(self, n: int) -> None:
+        cap = self.capacity
+        if n <= cap:
+            return
+        while cap < n:
+            cap *= 2
+        self.counters = _grow(self.counters, cap)
+        self.packed = _grow(self.packed, cap)
+        self.fills = _grow(self.fills, cap)
+        for name in ("ids", "valid", "born", "exact"):
+            setattr(self, name, _grow_host(getattr(self, name), cap))
+
+    def _write_rows(self, rows: jax.Array, counts: jax.Array) -> None:
+        """Overwrite counter rows (unique positions) and refresh the derived
+        packed sketches + fill cache for exactly those rows."""
+        clamped = jnp.clip(counts, 0, counting.COUNTER_MAX).astype(
+            counting.COUNTER_DTYPE
+        )
+        self.counters = self.counters.at[rows].set(clamped)
+        self.packed = self.packed.at[rows].set(counting.counters_to_packed(clamped))
+        self.fills = self.fills.at[rows].set(counting.counter_fills(clamped))
+
+    def append(
+        self, counts: jax.Array, ids: np.ndarray, born, exact: bool
+    ) -> range:
+        """``born`` may be a scalar (fresh inserts) or a (B,) array (sealed
+        relocations carrying their original birth time)."""
+        b = int(counts.shape[0])
+        if b == 0:
+            return range(self.size, self.size)
+        self.ensure_capacity(self.size + b)
+        lo = self.size
+        rows = jnp.arange(lo, lo + b)
+        self._write_rows(rows, counts.astype(jnp.int32))
+        self.ids[lo : lo + b] = ids
+        self.valid[lo : lo + b] = True
+        self.born[lo : lo + b] = born
+        self.exact[lo : lo + b] = exact
+        if self.is_sorted:
+            # appends only extend the tail: the batch itself ascending plus
+            # batch[0] above the previous tail keeps the invariant — O(b),
+            # not a full-prefix rescan per add
+            ok = bool(np.all(np.diff(ids) > 0)) if b > 1 else True
+            if lo > 0:
+                ok = ok and self.ids[lo - 1] < ids[0]
+            self.is_sorted = ok
+        self.size += b
+        self._meta_cache = None
+        return range(lo, lo + b)
+
+    def add_counts(self, rows: np.ndarray, deltas: jax.Array) -> None:
+        """Saturating ``counters[rows] += deltas`` (unique rows) + refresh."""
+        rows_dev = jnp.asarray(rows.astype(np.int32))
+        cur = self.counters[rows_dev].astype(jnp.int32) + deltas
+        self._write_rows(rows_dev, cur)
+
+    def set_counts(self, rows: np.ndarray, counts: jax.Array) -> None:
+        self._write_rows(jnp.asarray(rows.astype(np.int32)), counts.astype(jnp.int32))
+
+    def zero_rows(self, rows: np.ndarray) -> None:
+        rows_dev = jnp.asarray(rows.astype(np.int32))
+        self._write_rows(rows_dev, jnp.zeros((len(rows), self.counters.shape[1]), jnp.int32))
+        self.valid[rows] = False
+        self._meta_cache = None
+
+    def meta_dev(self) -> Tuple[Optional[jax.Array], Optional[jax.Array]]:
+        """(ids, valid) for the head's query view, cached across queries and
+        invalidated on mutation (mirrors ``SealedSegment.view``) — with the
+        same fast paths: ``None`` ids when row index == global id, ``None``
+        valid when nothing is tombstoned. The flags are cached with the
+        device arrays so an unmutated head pays no per-query host scan."""
+        if self._meta_cache is None:
+            ids = self.ids[: self.size]
+            ids_dev = (None if np.array_equal(ids, np.arange(self.size))
+                       else jnp.asarray(ids.astype(np.int32)))
+            valid = self.valid[: self.size]
+            valid_dev = (None if valid.all()
+                         else jnp.asarray(valid.astype(np.int32)))
+            self._meta_cache = (ids_dev, valid_dev)
+        return self._meta_cache
+
+
+@dataclasses.dataclass
+class SegmentedStore:
+    """Mutable, segmented drop-in for :class:`SketchStore`.
+
+    Same ``add`` / ``add_sketches`` / ``merge`` / ``merge_rows`` /
+    fill-cache surface, plus the lifecycle verbs: ``delete`` / ``update`` /
+    ``retract_rows`` / ``seal`` / ``compact`` / ``expire``. Doc ids are
+    global, assigned at insert, and never reused.
+    """
+
+    cfg: binsketch.BinSketchConfig
+    mapping: jax.Array
+    sealed: List[SealedSegment]
+    head: _Head
+    next_id: int = 0
+    seal_rows: Optional[int] = None  # auto-seal head when it reaches this many rows
+    _loc: Dict[int, Tuple[int, int]] = dataclasses.field(default_factory=dict)
+    _n_live: int = 0
+
+    # ------------------------------------------------------------ construct
+    @classmethod
+    def create(
+        cls,
+        cfg: binsketch.BinSketchConfig,
+        mapping: jax.Array,
+        capacity: int = 1024,
+        seal_rows: Optional[int] = None,
+    ) -> "SegmentedStore":
+        return cls(
+            cfg, mapping, [], _Head.create(cfg.n_bins, cfg.n_words, capacity),
+            seal_rows=seal_rows,
+        )
+
+    @classmethod
+    def from_indices(
+        cls,
+        cfg: binsketch.BinSketchConfig,
+        mapping: jax.Array,
+        corpus_idx: jax.Array,
+        *,
+        backend=None,
+        batch: int = 4096,
+        now: float = 0.0,
+        seal_rows: Optional[int] = None,
+    ) -> "SegmentedStore":
+        store = cls.create(
+            cfg, mapping, capacity=max(int(corpus_idx.shape[0]), 1),
+            seal_rows=seal_rows,
+        )
+        store.add(corpus_idx, backend=backend, batch=batch, now=now)
+        return store
+
+    # ------------------------------------------------------------ properties
+    @property
+    def size(self) -> int:
+        """Number of *live* (retrievable) documents."""
+        return self._n_live
+
+    @property
+    def sketches(self) -> jax.Array:
+        """(size, W) packed rows of every live doc, ascending id order.
+
+        Materializes the concatenation — analysis surface (``score_all``,
+        tests); the serving path iterates :meth:`segment_views` instead.
+        """
+        return self.live()[0]
+
+    @property
+    def fills(self) -> jax.Array:
+        return self.live()[1]
+
+    @property
+    def live_ids(self) -> np.ndarray:
+        return self.live()[2]
+
+    def _parts(self, *, sealed: bool = True, head: bool = True):
+        parts = [
+            (seg.sketches, seg.fills, seg.ids, seg.valid, seg.born)
+            for seg in (self.sealed if sealed else ())
+        ]
+        if head:
+            h = self.head
+            parts.append((h.packed[: h.size], h.fills[: h.size],
+                          h.ids[: h.size], h.valid[: h.size], h.born[: h.size]))
+        return parts
+
+    def live(self) -> Tuple[jax.Array, jax.Array, np.ndarray]:
+        """(sketches (L, W), fills (L,), ids (L,) int64) of live docs, id-ordered."""
+        got = _gather_live(self._parts())
+        if got is None:
+            return (jnp.zeros((0, self.cfg.n_words), jnp.uint32),
+                    jnp.zeros((0,), jnp.int32), np.zeros((0,), np.int64))
+        return got[0], got[1], got[2]
+
+    def segment_views(self) -> List[SegmentView]:
+        """Sealed slabs then the (id-sorted) head — the engine's query list."""
+        views = [seg.view() for seg in self.sealed if seg.n_rows > 0]
+        h = self.head
+        if h.size > 0:
+            self._sort_head()
+            ids_dev, valid_dev = h.meta_dev()
+            views.append(SegmentView(
+                h.packed[: h.size], h.fills[: h.size], ids_dev, valid_dev,
+            ))
+        return views
+
+    # ---------------------------------------------------------------- ingest
+    def _count_rows(self, idx: jax.Array, backend) -> jax.Array:
+        if backend is not None:
+            return backend.count(self.cfg, self.mapping, idx)
+        return counting.count_indices_dense(self.cfg, self.mapping, idx)
+
+    def _insert_counts(
+        self,
+        counts: jax.Array,
+        *,
+        ids: Optional[np.ndarray] = None,
+        now,  # scalar timestamp, or (B,) array to carry per-row birth times
+        exact: bool,
+    ) -> range:
+        b = int(counts.shape[0])
+        if b == 0:
+            return range(self.next_id, self.next_id)
+        if ids is None:
+            ids = np.arange(self.next_id, self.next_id + b, dtype=np.int64)
+            self.next_id += b
+        rows = self.head.append(counts, ids, now, exact)
+        for gid, row in zip(ids, rows):
+            self._loc[int(gid)] = (_HEAD, row)
+        self._n_live += b
+        if self.seal_rows is not None and self.head.size >= self.seal_rows:
+            self.seal()
+        return rows
+
+    def add(
+        self,
+        idx: jax.Array,
+        *,
+        backend=None,
+        batch: int = 4096,
+        now: float = 0.0,
+    ) -> range:
+        """Count-sketch (B, P) padded sparse rows into the head; returns the
+        assigned (contiguous, fresh) global doc ids."""
+        lo = self.next_id
+        for s in range(0, idx.shape[0], batch):
+            self._insert_counts(
+                self._count_rows(idx[s : s + batch], backend), now=now, exact=True
+            )
+        return range(lo, self.next_id)
+
+    def add_sketches(self, sketches: jax.Array, *, now: float = 0.0) -> range:
+        """Append pre-packed rows (occupancy-1 counters: binary sketch exact,
+        element retraction unavailable on these rows)."""
+        lo = self.next_id
+        counts = counting.packed_to_counters(sketches.astype(jnp.uint32), self.cfg.n_bins)
+        self._insert_counts(counts, now=now, exact=False)
+        return range(lo, self.next_id)
+
+    # ------------------------------------------------------------- mutation
+    def _locate(self, gid: int) -> Tuple[int, int]:
+        try:
+            return self._loc[int(gid)]
+        except KeyError:
+            raise KeyError(f"doc id {int(gid)} is not live in this store") from None
+
+    def _gather_packed(self, doc_ids: np.ndarray) -> jax.Array:
+        """(B, W) current packed rows of live docs, in doc_ids order.
+
+        Rows group by owning segment — one batched ``jnp.take`` per segment
+        touched, not one device dispatch per document."""
+        if len(doc_ids) == 0:
+            return jnp.zeros((0, self.cfg.n_words), jnp.uint32)
+        locs = [self._locate(gid) for gid in doc_ids]
+        by_seg: Dict[int, Tuple[list, list]] = {}
+        for i, (seg_i, row) in enumerate(locs):
+            by_seg.setdefault(seg_i, ([], []))[0].append(i)
+            by_seg[seg_i][1].append(row)
+        parts, order = [], []
+        for seg_i, (positions, rows) in by_seg.items():
+            src = self.head.packed if seg_i == _HEAD else self.sealed[seg_i].sketches
+            parts.append(jnp.take(src, jnp.asarray(rows, jnp.int32), axis=0))
+            order.extend(positions)
+        inv = np.empty(len(doc_ids), np.int32)
+        inv[np.asarray(order)] = np.arange(len(doc_ids), dtype=np.int32)
+        return jnp.take(jnp.concatenate(parts, axis=0), jnp.asarray(inv), axis=0)
+
+    def delete(self, doc_ids: Sequence[int]) -> int:
+        """Tombstone documents. Head rows are zeroed (counters and packed),
+        sealed rows flip their bitmap bit; ids are never reused. Returns the
+        number of docs deleted. Unknown/already-deleted ids raise KeyError
+        — resolved up front, before any state mutates, so a bad id in the
+        batch leaves the store untouched."""
+        uniq = list(dict.fromkeys(int(g) for g in np.asarray(doc_ids, np.int64)))
+        locs = [self._locate(g) for g in uniq]
+        head_rows = []
+        for gid, (seg_i, row) in zip(uniq, locs):
+            del self._loc[gid]
+            if seg_i == _HEAD:
+                head_rows.append(row)
+            else:
+                self.sealed[seg_i].tombstone(row)
+        if head_rows:
+            self.head.zero_rows(np.asarray(head_rows, np.int64))
+        self._n_live -= len(uniq)
+        return len(uniq)
+
+    def update(
+        self,
+        doc_ids: Sequence[int],
+        idx: jax.Array,
+        *,
+        backend=None,
+        now: float = 0.0,
+    ) -> None:
+        """Replace document contents, keeping global ids.
+
+        Head-resident docs are overwritten in place (counter rows reset to
+        the new exact occupancy). Sealed docs relocate: the sealed row is
+        tombstoned and the new content enters the head under the old id —
+        the LSM move; reclaimed at the next compaction."""
+        ids = np.asarray(doc_ids, np.int64)
+        if len(np.unique(ids)) != len(ids):
+            raise ValueError("duplicate doc ids in one update batch are ambiguous")
+        _check_rows_match(ids, idx)
+        counts = self._count_rows(idx, backend)
+        locs = [self._locate(g) for g in ids]
+        in_head = np.array([s == _HEAD for s, _ in locs], bool)
+        if in_head.any():
+            sel = np.nonzero(in_head)[0]
+            rows = np.asarray([locs[i][1] for i in sel], np.int64)
+            self.head.set_counts(rows, counts[jnp.asarray(sel.astype(np.int32))])
+            self.head.born[rows] = now
+            self.head.exact[rows] = True
+        if (~in_head).any():
+            sel = np.nonzero(~in_head)[0]
+            for i in sel:
+                seg_i, row = locs[i]
+                self.sealed[seg_i].tombstone(row)
+                del self._loc[int(ids[i])]
+            self._n_live -= len(sel)
+            self._insert_counts(
+                counts[jnp.asarray(sel.astype(np.int32))],
+                ids=ids[sel], now=now, exact=True,
+            )
+
+    def merge_rows(
+        self,
+        doc_ids: Sequence[int],
+        idx: jax.Array,
+        *,
+        backend=None,
+    ) -> None:
+        """OR new content into existing docs (``SketchStore.merge_rows``
+        surface). Head docs take a counter increment in place; sealed docs
+        relocate into the head carrying their old bits as occupancy-1
+        counters plus the new exact increments. A merge grows a doc rather
+        than re-creating it, so birth timestamps are preserved (TTL clocks
+        do not restart). Either way the merged row loses its
+        exact-multiplicity mark: the new content may overlap the old (a
+        shared element would be double-counted), so retraction on a merged
+        row is refused — ``update`` restores exactness."""
+        ids = np.asarray(doc_ids, np.int64)
+        _check_rows_match(ids, idx)
+        deltas = self._count_rows(idx, backend)
+        # duplicate ids in one batch: combine their deltas first (segment-sum)
+        uniq, inv = np.unique(ids, return_inverse=True)
+        if len(uniq) < len(ids):
+            deltas = jax.ops.segment_sum(deltas, jnp.asarray(inv), len(uniq))
+            ids = uniq
+        locs = [self._locate(g) for g in ids]
+        in_head = np.array([s == _HEAD for s, _ in locs], bool)
+        if in_head.any():
+            sel = np.nonzero(in_head)[0]
+            rows = np.asarray([locs[i][1] for i in sel], np.int64)
+            self.head.add_counts(rows, deltas[jnp.asarray(sel.astype(np.int32))])
+            self.head.exact[rows] = False
+        if (~in_head).any():
+            sel = np.nonzero(~in_head)[0]
+            old = self._gather_packed(ids[sel])
+            base = counting.packed_to_counters(old, self.cfg.n_bins)
+            merged = base + deltas[jnp.asarray(sel.astype(np.int32))]
+            # a merge grows a doc, it doesn't re-create it: relocated rows
+            # keep their original birth time so TTL expiry is unaffected
+            born = np.array([self.sealed[locs[i][0]].born[locs[i][1]] for i in sel])
+            for i in sel:
+                seg_i, row = locs[i]
+                self.sealed[seg_i].tombstone(row)
+                del self._loc[int(ids[i])]
+            self._n_live -= len(sel)
+            self._insert_counts(merged, ids=ids[sel], now=born, exact=False)
+
+    def retract_rows(self, doc_ids: Sequence[int], idx: jax.Array, *, backend=None) -> None:
+        """Decrement elements out of head-resident docs — the counting
+        sketch's signature move: a bin clears exactly when its last mapped
+        element is retracted, so the binary sketch tracks the shrunken set.
+
+        Only exact head rows support this (sealed rows lost multiplicity);
+        ``update`` or delete+re-add covers the rest."""
+        ids = np.asarray(doc_ids, np.int64)
+        _check_rows_match(ids, idx)
+        deltas = self._count_rows(idx, backend)
+        uniq, inv = np.unique(ids, return_inverse=True)
+        if len(uniq) < len(ids):
+            deltas = jax.ops.segment_sum(deltas, jnp.asarray(inv), len(uniq))
+            ids = uniq
+        rows = []
+        for gid in ids:
+            seg_i, row = self._locate(gid)
+            if seg_i != _HEAD or not self.head.exact[row]:
+                raise ValueError(
+                    f"doc {int(gid)} is not an exact head row; retraction needs "
+                    "element multiplicity (use update() for full replacement)"
+                )
+            rows.append(row)
+        self.head.add_counts(np.asarray(rows, np.int64), -deltas)
+
+    def merge(self, other: "SegmentedStore", *, now: float = 0.0) -> "SegmentedStore":
+        """OR-merge by global doc id (the shard-local ingestion story of
+        ``SketchStore.merge``, keyed on ids instead of row alignment).
+        Shared ids OR together (relocating into the head); ids only in
+        ``other`` are inserted under their original global id."""
+        sk_o, _, ids_o = other.live()
+        if len(ids_o) == 0:
+            return self
+        counts_o = counting.packed_to_counters(sk_o, self.cfg.n_bins)
+        known = np.array([int(g) in self._loc for g in ids_o], bool)
+        if known.any():
+            sel = np.nonzero(known)[0]
+            ours = self._gather_packed(ids_o[sel])
+            merged = (counting.packed_to_counters(ours, self.cfg.n_bins)
+                      + counts_o[jnp.asarray(sel.astype(np.int32))])
+            self.delete(ids_o[sel])
+            self._insert_counts(merged, ids=ids_o[sel], now=now, exact=False)
+        if (~known).any():
+            sel = np.nonzero(~known)[0]
+            self._insert_counts(
+                counts_o[jnp.asarray(sel.astype(np.int32))],
+                ids=ids_o[sel], now=now, exact=False,
+            )
+        self.next_id = max(self.next_id, int(ids_o.max()) + 1)
+        return self
+
+    # -------------------------------------------------------------- lifecycle
+    def _sort_head(self) -> None:
+        """Restore the ascending-id invariant after a sealed-doc relocation
+        (lazy: queries and seals sort; plain appends never need it)."""
+        h = self.head
+        if h.is_sorted or h.size <= 1:
+            return
+        perm = np.argsort(h.ids[: h.size], kind="stable")
+        p = jnp.asarray(perm.astype(np.int32))
+        h.counters = h.counters.at[: h.size].set(jnp.take(h.counters[: h.size], p, axis=0))
+        h.packed = h.packed.at[: h.size].set(jnp.take(h.packed[: h.size], p, axis=0))
+        h.fills = h.fills.at[: h.size].set(jnp.take(h.fills[: h.size], p, axis=0))
+        for name in ("ids", "valid", "born", "exact"):
+            arr = getattr(self.head, name)
+            arr[: h.size] = arr[: h.size][perm]
+        h.is_sorted = True
+        h._meta_cache = None
+        for row in range(h.size):
+            if h.valid[row]:
+                self._loc[int(h.ids[row])] = (_HEAD, row)
+
+    def seal(self) -> Optional[SealedSegment]:
+        """Freeze the head into a sealed segment (tombstoned head rows are
+        dropped here — a free mini-compaction) and start a fresh head.
+        Counters are discarded: sealed rows live packed-only from now on."""
+        h = self.head
+        if h.size == 0:
+            return None
+        got = _gather_live(self._parts(sealed=False))
+        seg = None
+        if got is not None:
+            sk, fl, ids, born = got
+            seg = SealedSegment(sk, fl, ids, np.ones(len(ids), bool), born)
+            self.sealed.append(seg)
+            seg_i = len(self.sealed) - 1
+            for row, gid in enumerate(seg.ids):
+                self._loc[int(gid)] = (seg_i, row)
+        self.head = _Head.create(self.cfg.n_bins, self.cfg.n_words, h.capacity)
+        return seg
+
+    def compact(self) -> Dict[str, int]:
+        """Merge every sealed segment into one, dropping tombstoned rows and
+        re-gathering the fill caches; rows come out merge-sorted by global
+        id. The head is untouched (seal first for a full major compaction)."""
+        stats = {
+            "segments_in": len(self.sealed),
+            "rows_in": sum(s.n_rows for s in self.sealed),
+            "rows_out": 0,
+        }
+        if not self.sealed:
+            return stats
+        got = _gather_live(self._parts(head=False))
+        if got is None:
+            self.sealed = []
+            return stats
+        sk, fl, ids, born = got
+        seg = SealedSegment(sk, fl, ids, np.ones(len(ids), bool), born)
+        self.sealed = [seg]
+        for row, gid in enumerate(seg.ids):
+            self._loc[int(gid)] = (0, row)
+        stats["rows_out"] = seg.n_rows
+        return stats
+
+    def expire(self, ttl: float, now: float) -> int:
+        """Tombstone every live doc older than ``ttl`` (age ``now - born``
+        strictly greater). Space comes back at the next seal/compact."""
+        h = self.head
+        hits = np.nonzero(h.valid[: h.size] & (now - h.born[: h.size] > ttl))[0]
+        dead = [int(g) for g in h.ids[: h.size][hits]]
+        for seg in self.sealed:
+            hits = np.nonzero(seg.valid & (now - seg.born > ttl))[0]
+            dead.extend(int(g) for g in seg.ids[hits])
+        if dead:
+            self.delete(dead)
+        return len(dead)
+
+    # ------------------------------------------------------------ checkpoint
+    def checkpoint_tree(self) -> Tuple[dict, dict]:
+        """(pytree of arrays, aux metadata) for ``CheckpointManager.save``.
+
+        ``born`` timestamps travel in aux (json doubles are exact float64;
+        tree leaves get device_put on restore, which demotes 64-bit dtypes
+        under default-precision jax and would blunt TTL resolution)."""
+        self._sort_head()
+        h = self.head
+        tree = {
+            "mapping": self.mapping,
+            "head": {
+                "counters": h.counters[: h.size],
+                "packed": h.packed[: h.size],
+                "fills": h.fills[: h.size],
+                "ids": h.ids[: h.size].copy(),
+                "valid": h.valid[: h.size].copy(),
+                "exact": h.exact[: h.size].copy(),
+            },
+            "sealed": [
+                {
+                    "sketches": s.sketches,
+                    "fills": s.fills,
+                    "ids": s.ids.copy(),
+                    "valid": s.valid.copy(),
+                }
+                for s in self.sealed
+            ],
+        }
+        aux = {
+            "kind": "segmented_store",
+            "cfg": {"d": self.cfg.d, "n_bins": self.cfg.n_bins, "mode": self.cfg.mode},
+            "next_id": int(self.next_id),
+            "seal_rows": self.seal_rows,
+            "head_rows": int(h.size),
+            "sealed_rows": [s.n_rows for s in self.sealed],
+            "head_born": h.born[: h.size].tolist(),
+            "sealed_born": [s.born.tolist() for s in self.sealed],
+        }
+        return tree, aux
+
+    def save(self, manager, step: int, blocking: bool = True) -> None:
+        tree, aux = self.checkpoint_tree()
+        manager.save(step, tree, aux=aux, blocking=blocking)
+
+    @classmethod
+    def restore(cls, manager, step: Optional[int] = None) -> "SegmentedStore":
+        """Cold-restore from a checkpoint: shapes come from the aux manifest
+        (no live store needed), nothing is re-sketched, and the location
+        map / live count rebuild from the restored tombstone bitmaps."""
+        aux = manager.load_aux(step)
+        if aux.get("kind") != "segmented_store":
+            raise ValueError(f"checkpoint is not a SegmentedStore snapshot: {aux.get('kind')!r}")
+        cfg = binsketch.BinSketchConfig(**aux["cfg"])
+        w, n = cfg.n_words, cfg.n_bins
+        hr = int(aux["head_rows"])
+        map_shape = (cfg.d,) if cfg.mode == "table" else (2,)
+        map_dtype = jnp.int32 if cfg.mode == "table" else jnp.uint32
+        target = {
+            "mapping": jnp.zeros(map_shape, map_dtype),
+            "head": {
+                "counters": jnp.zeros((hr, n), counting.COUNTER_DTYPE),
+                "packed": jnp.zeros((hr, w), jnp.uint32),
+                "fills": jnp.zeros((hr,), jnp.int32),
+                "ids": np.zeros((hr,), np.int64),
+                "valid": np.zeros((hr,), bool),
+                "exact": np.zeros((hr,), bool),
+            },
+            "sealed": [
+                {
+                    "sketches": jnp.zeros((r, w), jnp.uint32),
+                    "fills": jnp.zeros((r,), jnp.int32),
+                    "ids": np.zeros((r,), np.int64),
+                    "valid": np.zeros((r,), bool),
+                }
+                for r in aux["sealed_rows"]
+            ],
+        }
+        tree, _ = manager.restore(step, target)
+        store = cls.create(cfg, tree["mapping"], capacity=max(hr, 1),
+                           seal_rows=aux["seal_rows"])
+        store.next_id = int(aux["next_id"])
+        ht = tree["head"]
+        h = store.head
+        h.counters = h.counters.at[:hr].set(ht["counters"].astype(counting.COUNTER_DTYPE))
+        h.packed = h.packed.at[:hr].set(ht["packed"].astype(jnp.uint32))
+        h.fills = h.fills.at[:hr].set(ht["fills"].astype(jnp.int32))
+        h.ids[:hr] = np.asarray(ht["ids"])
+        h.valid[:hr] = np.asarray(ht["valid"])
+        h.born[:hr] = np.asarray(aux["head_born"], np.float64)
+        h.exact[:hr] = np.asarray(ht["exact"])
+        h.size = hr
+        for st, born in zip(tree["sealed"], aux["sealed_born"]):
+            store.sealed.append(SealedSegment(
+                sketches=st["sketches"].astype(jnp.uint32),
+                fills=st["fills"].astype(jnp.int32),
+                # np.array copies: device buffers come back read-only, and
+                # the tombstone bitmap must stay mutable
+                ids=np.array(st["ids"], np.int64),
+                valid=np.array(st["valid"], bool),
+                born=np.asarray(born, np.float64),
+            ))
+        for seg_i, seg in enumerate(store.sealed):
+            for row in np.nonzero(seg.valid)[0]:
+                store._loc[int(seg.ids[row])] = (seg_i, int(row))
+        for row in np.nonzero(h.valid[:hr])[0]:
+            store._loc[int(h.ids[row])] = (_HEAD, int(row))
+        store._n_live = len(store._loc)
+        return store

@@ -18,7 +18,7 @@ merges of two shard-local stores are both plain bitwise ORs (``merge_rows``,
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, TYPE_CHECKING
+from typing import List, NamedTuple, Optional, TYPE_CHECKING
 
 import jax
 import jax.numpy as jnp
@@ -28,7 +28,22 @@ from ..core import binsketch, packed as pk
 if TYPE_CHECKING:  # pragma: no cover - typing only
     from .backends import Backend
 
-__all__ = ["SketchStore"]
+__all__ = ["SegmentView", "SketchStore"]
+
+
+class SegmentView(NamedTuple):
+    """One scoreable slab of corpus, as the query path sees it.
+
+    Both store kinds speak this: ``SketchStore`` is a single view whose row
+    index *is* the doc id; a ``SegmentedStore`` yields one view per sealed
+    segment plus the mutable head. ``ids is None`` means identity mapping;
+    ``valid is None`` means no tombstones (all rows retrievable).
+    """
+
+    sketches: jax.Array  # (n, W) uint32 packed rows
+    fills: jax.Array  # (n,) int32 ingest-time fill cache
+    ids: Optional[jax.Array]  # (n,) int32 global doc ids, or None
+    valid: Optional[jax.Array]  # (n,) int32/bool tombstone mask, or None
 
 
 def _grow(arr: jax.Array, new_capacity: int) -> jax.Array:
@@ -103,6 +118,12 @@ class SketchStore:
     def fills(self) -> jax.Array:
         """(size,) cached |row_s| fill counts — computed at ingest."""
         return self._fills[: self.size]
+
+    def segment_views(self) -> List[SegmentView]:
+        """The whole store as one segment (row index == doc id, no mask)."""
+        if self.size == 0:
+            return []
+        return [SegmentView(self.sketches, self.fills, None, None)]
 
     # ---------------------------------------------------------------- ingest
     def _ensure_capacity(self, n: int) -> None:

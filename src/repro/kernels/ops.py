@@ -14,10 +14,10 @@ import jax
 import jax.numpy as jnp
 
 from ..core import packed as pk
-from . import hash_build, popcount_sim, sketch_build, topk_stream
+from . import count_update, hash_build, popcount_sim, sketch_build, topk_stream
 
-__all__ = ["build_sketch", "hash_build_sketch", "sketch_score", "sketch_topk",
-           "score_counts"]
+__all__ = ["build_sketch", "count_bins", "hash_build_sketch", "sketch_score",
+           "sketch_topk", "score_counts"]
 
 
 def _interpret_default() -> bool:
@@ -66,6 +66,41 @@ def build_sketch(
         interpret=interpret,
     )
     return out[:bsz, :n_words]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_bins", "block_rows", "tile_bins", "interpret")
+)
+def count_bins(
+    bins: jax.Array,
+    n_bins: int,
+    *,
+    block_rows: int = 8,
+    tile_bins: int = 512,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Pre-mapped padded bin ids (B, P) -> dense occupancy counters (B, n_bins).
+
+    The counting-BinSketch construction (``core.counting``) as a batched
+    compare-reduce histogram — insert/retract deltas for the mutable head
+    segment come from here. Pads rows to ``block_rows`` (pad rows are all
+    -1 -> zero counters) and the bin axis to ``tile_bins``; crops both on
+    return. int32 out; the store clamps into u16 occupancy.
+    """
+    if interpret is None:
+        interpret = _interpret_default()
+    bsz = bins.shape[0]
+    tile_bins = min(tile_bins, n_bins)
+    padded_rows = _pad_to(bins.astype(jnp.int32), 0, block_rows, -1)
+    n_bins_padded = -(-n_bins // tile_bins) * tile_bins
+    out = count_update.count_bins_kernel(
+        padded_rows,
+        n_bins_padded,
+        block_rows=block_rows,
+        tile_bins=tile_bins,
+        interpret=interpret,
+    )
+    return out[:bsz, :n_bins]
 
 
 @functools.partial(

@@ -179,6 +179,20 @@ def test_engine_query_ragged_batches_match():
         np.testing.assert_allclose(np.asarray(sc), np.asarray(full_sc[lo:hi]), rtol=1e-6)
 
 
+# ------------------------------------------------------------ legacy shim
+def test_sketch_index_emits_deprecation_warning():
+    """The shim must announce itself: both the raw constructor and the
+    ``build`` classmethod path warn, and the warning names the replacement."""
+    from repro.core.index import SketchIndex
+
+    cfg, mapping, idx = _fixture()
+    corpus = sketch_indices(cfg, mapping, jnp.asarray(idx[:4]))
+    with pytest.warns(DeprecationWarning, match="SketchEngine"):
+        SketchIndex(cfg, mapping, corpus)
+    with pytest.warns(DeprecationWarning, match="SketchEngine"):
+        SketchIndex.build(cfg, mapping, jnp.asarray(idx[:4]))
+
+
 # ---------------------------------------------------------------- backends
 def test_backend_registry():
     names = available_backends()

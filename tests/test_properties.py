@@ -109,6 +109,74 @@ def test_packed_roundtrip_prop(seed, n):
 
 
 @settings(max_examples=10, deadline=None)
+@given(st.data())
+def test_segmented_store_interleaving_query_identical(data):
+    """Acceptance property (ISSUE 3): a SegmentedStore after an *arbitrary*
+    interleaving of insert/delete/update/seal/compact answers queries —
+    scores AND ids, every measure, oracle and pallas-interpret backends —
+    exactly like a fresh batch-built SketchStore over the surviving docs
+    (mapped through the survivors' global ids)."""
+    from repro.engine import SegmentedStore, SketchEngine, SketchStore, get_backend
+
+    store = SegmentedStore.create(CFG, MAPPING, capacity=4)
+    engine = SketchEngine(store, get_backend("oracle"))
+    contents = {}
+
+    def draw_rows(n):
+        return _pad_rows([data.draw(sets_st) for _ in range(n)])
+
+    for _ in range(data.draw(st.integers(2, 8))):
+        live = sorted(contents)
+        op = data.draw(st.sampled_from(
+            ["insert", "insert", "delete", "update", "seal", "compact"]
+        ))
+        if op == "insert" or not live:
+            rows = draw_rows(data.draw(st.integers(1, 3)))
+            ids = engine.add(rows)
+            contents.update({int(g): np.asarray(rows[j]) for j, g in enumerate(ids)})
+        elif op == "delete":
+            g = data.draw(st.sampled_from(live))
+            engine.delete([g])
+            contents.pop(g)
+        elif op == "update":
+            g = data.draw(st.sampled_from(live))
+            rows = draw_rows(1)
+            engine.update([g], rows)
+            contents[g] = np.asarray(rows[0])
+        elif op == "seal":
+            engine.seal()
+        else:
+            engine.compact()
+
+    surv = np.asarray(sorted(contents))
+    queries = _pad_rows([data.draw(sets_st) for _ in range(2)])
+    if len(surv):  # a live doc's own content guarantees ties and hits
+        queries = jnp.concatenate([queries, contents[int(surv[0])][None]], axis=0)
+        fresh_rows = jnp.asarray(np.stack([contents[int(g)] for g in surv]))
+    k = 4
+    for backend in ("oracle", "pallas-interpret"):
+        be = get_backend(backend)
+        fresh_store = (SketchStore.from_indices(CFG, MAPPING, fresh_rows, backend=be)
+                       if len(surv) else SketchStore.create(CFG, MAPPING))
+        for measure in ("jaccard", "ip", "cosine", "hamming"):
+            sc_m, id_m = SketchEngine(store, be, measure).query(queries, k)
+            sc_f, id_f = SketchEngine(fresh_store, be, measure).query(queries, k)
+            id_f = np.where(
+                np.asarray(id_f) >= 0,
+                surv[np.maximum(np.asarray(id_f), 0)] if len(surv) else -1,
+                -1,
+            )
+            np.testing.assert_array_equal(
+                np.asarray(id_m), id_f, err_msg=f"{backend}/{measure}"
+            )
+            np.testing.assert_allclose(
+                np.asarray(sc_m), np.asarray(sc_f), rtol=1e-5, atol=1e-6,
+                err_msg=f"{backend}/{measure}",
+            )
+    assert store.size == len(contents)
+
+
+@settings(max_examples=10, deadline=None)
 @given(st.integers(0, 2**31 - 1))
 def test_pipeline_replay_property(seed):
     """Restarted pipeline replays the identical batch stream."""
