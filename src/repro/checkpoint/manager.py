@@ -36,9 +36,52 @@ from typing import Any, Callable, Dict, Optional, Tuple
 import jax
 import numpy as np
 
-__all__ = ["CheckpointManager"]
+__all__ = ["BackgroundJob", "CheckpointManager"]
 
 PyTree = Any
+
+
+class BackgroundJob:
+    """One background unit of work on a daemon thread — the async pattern
+    shared by checkpoint writes and segment compaction.
+
+    The contract mirrors ``CheckpointManager.save(blocking=False)``:
+
+      1. the caller snapshots whatever state the job needs *synchronously*
+         (host copies — cheap) before constructing the job;
+      2. ``fn`` runs on a daemon thread and touches only that snapshot,
+         never live state, so no locks are needed anywhere;
+      3. the caller retrieves the result on *its own* thread via
+         :meth:`result` (or checks :meth:`done` first) and performs the
+         atomic swap / publish step there.
+
+    An exception raised by ``fn`` is stored and re-raised from
+    :meth:`result` — background failures are never silently swallowed.
+    """
+
+    def __init__(self, fn: Callable[[], Any]):
+        self._result: Any = None
+        self._error: Optional[BaseException] = None
+
+        def run():
+            try:
+                self._result = fn()
+            except BaseException as e:  # re-raised on the caller's thread
+                self._error = e
+
+        self._thread = threading.Thread(target=run, daemon=True)
+        self._thread.start()
+
+    def done(self) -> bool:
+        """True once ``fn`` has finished (successfully or not)."""
+        return not self._thread.is_alive()
+
+    def result(self) -> Any:
+        """Join the worker and return ``fn``'s result (or raise its error)."""
+        self._thread.join()
+        if self._error is not None:
+            raise self._error
+        return self._result
 
 
 def _leaf_paths(tree: PyTree):
@@ -51,7 +94,7 @@ class CheckpointManager:
         self.root = root
         self.keep = keep
         os.makedirs(root, exist_ok=True)
-        self._pending: Optional[threading.Thread] = None
+        self._pending: Optional[BackgroundJob] = None
 
     # -- save -----------------------------------------------------------------
     def save(self, step: int, tree: PyTree, aux: Optional[Dict] = None, blocking: bool = True):
@@ -99,13 +142,14 @@ class CheckpointManager:
         if blocking:
             write()
         else:
-            self._pending = threading.Thread(target=write, daemon=True)
-            self._pending.start()
+            self._pending = BackgroundJob(write)
 
     def wait(self):
         if self._pending is not None:
-            self._pending.join()
-            self._pending = None
+            try:
+                self._pending.result()
+            finally:
+                self._pending = None
 
     def _gc(self):
         steps = sorted(self.all_steps())

@@ -35,11 +35,33 @@ __all__ = [
     "count_indices_dense",
     "counters_to_packed",
     "counter_fills",
+    "dedup_padded",
     "packed_to_counters",
 ]
 
 COUNTER_DTYPE = jnp.uint16
 COUNTER_MAX = 65535  # saturating add/sub clamp
+
+
+def dedup_padded(idx: jax.Array) -> jax.Array:
+    """Collapse duplicate indices within each padded sparse row to one.
+
+    Documents are *sets*; a producer that pads a multiset (repeated tokens,
+    un-deduplicated feature lists) into ``(B, P)`` rows would otherwise have
+    every duplicate counted with multiplicity by the occupancy scatter —
+    harmless for the OR-sketch (OR is idempotent) but corrupting for the
+    counting head: an insert of ``[x, x]`` followed by a retract of ``[x]``
+    leaves a phantom count and a wrong binary sketch. Sorting each row and
+    blanking repeats to the pad value makes every counting entry point
+    set-semantic; element order is irrelevant to the scatter, so the sort
+    is free of semantic consequence.
+    """
+    s = jnp.sort(idx, axis=-1)
+    dup = jnp.concatenate(
+        [jnp.zeros_like(s[..., :1], bool), (s[..., 1:] == s[..., :-1]) & (s[..., 1:] >= 0)],
+        axis=-1,
+    )
+    return jnp.where(dup, -1, s)
 
 
 def count_indices_dense(
@@ -50,8 +72,9 @@ def count_indices_dense(
     Scatter-add reference (cf. the scatter-max of
     :func:`~repro.core.binsketch.sketch_indices_dense`); the TPU-native
     compare-reduce construction is ``kernels.count_update``. Elements are
-    counted with multiplicity — callers feeding *sets* must deduplicate
-    rows first (the synthetic corpora already are unique-sorted).
+    counted with multiplicity — callers feeding *sets* must run rows
+    through :func:`dedup_padded` first (``SegmentedStore._count_rows``
+    does; the synthetic corpora already are unique-sorted).
     """
     bsz = idx.shape[0]
     bins = binsketch.map_indices(cfg, mapping, idx)

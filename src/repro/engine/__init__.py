@@ -3,7 +3,8 @@
 | piece | file | role |
 |---|---|---|
 | SketchStore | store.py | packed corpus, incremental OR-ingest, fill cache |
-| SegmentedStore | segments.py | mutable lifecycle: counting head, sealed segments, tombstones, compaction |
+| SegmentedStore | segments.py | mutable lifecycle: counting head, sealed segments, tombstones, (background) compaction, TTL |
+| SegmentPlacer | placement.py | segment-as-shard device placement for the sharded query path |
 | Backend registry | backends.py | oracle / pallas / pallas-interpret behind one name |
 | QueryPlanner | planner.py | ragged batches -> bounded set of jit shapes |
 | SketchEngine | engine.py | build + query + sharded query on the pieces above |
@@ -20,6 +21,7 @@ from .backends import (
     register_backend,
 )
 from .engine import SketchEngine, merge_segment_topk, shard_topk
+from .placement import SegmentPlacement, SegmentPlacer
 from .planner import QueryChunk, QueryPlanner
 from .segments import SealedSegment, SegmentedStore
 from .store import SegmentView, SketchStore
@@ -29,6 +31,8 @@ __all__ = [
     "QueryChunk",
     "QueryPlanner",
     "SealedSegment",
+    "SegmentPlacement",
+    "SegmentPlacer",
     "SegmentView",
     "SegmentedStore",
     "SketchEngine",

@@ -13,17 +13,25 @@ run as a service:
 Both query paths are streaming end-to-end (DESIGN.md §7): single-device
 ``query`` and the per-shard body of ``query_sharded`` go through
 ``Backend.topk``, so no (Q, C) — or (Q, C_loc) — score matrix is ever
-materialized; only O(Q·k) leaves each scoring kernel. The sharded path
-lifts ``SketchIndex.query_sharded``'s local-top-k + O(k·devices)
-all-gather merge into the engine and fixes its tail bug: a corpus whose
-size is not divisible by the mesh axis is *padded* with zero sketches whose
-slots are masked to -inf / -1, instead of silently dropping the tail docs.
+materialized; only O(Q·k) leaves each scoring kernel.
+
+``query_sharded`` on a :class:`SegmentedStore` uses **segment placement**
+(DESIGN.md §10): a :class:`~repro.engine.placement.SegmentPlacer` assigns
+whole sealed segments to mesh devices (balanced by live-row count, head
+replicated), resident slabs are uploaded once per placement epoch, and
+each query runs the fused streaming top-k per device over only its
+resident rows — one all-gather of O(k) rows per device, not one collective
+(plus a corpus re-shard) per segment. On an append-only
+:class:`SketchStore` — a single slab with nothing to place — the original
+row-sharded path remains: the corpus is sliced across the mesh, padded
+with zero sketches whose slots are masked to -inf / -1 (no silent tail
+drop for non-divisible C).
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -33,6 +41,7 @@ from ..core import binsketch
 from ..parallel.sharding import shard_map
 from . import backends as backends_mod
 from .backends import Backend
+from .placement import SegmentPlacement, SegmentPlacer
 from .planner import QueryPlanner
 from .segments import SegmentedStore
 from .store import SegmentView, SketchStore
@@ -113,6 +122,10 @@ class SketchEngine:
     backend: Backend
     measure: str = "jaccard"
     planner: QueryPlanner = dataclasses.field(default_factory=QueryPlanner)
+    placer: SegmentPlacer = dataclasses.field(default_factory=SegmentPlacer)
+    _placement: Optional[SegmentPlacement] = dataclasses.field(
+        default=None, init=False, repr=False
+    )
 
     # ------------------------------------------------------------ construct
     @classmethod
@@ -129,19 +142,22 @@ class SketchEngine:
         batch: int = 4096,
         mutable: bool = False,
         seal_rows: Optional[int] = None,
+        ttl: Optional[float] = None,
     ) -> "SketchEngine":
         """Create an engine; ``corpus_idx`` (C, P) is ingested if given,
         otherwise the engine starts empty and is fed via :meth:`add`.
         ``mutable=True`` builds over a :class:`SegmentedStore` (counting
         head + sealed segments) so the corpus also supports ``delete`` /
         ``update`` / ``seal`` / ``compact`` / ``expire``; ``seal_rows``
-        auto-seals the head at that many rows."""
+        auto-seals the head at that many rows; ``ttl`` arms lazy expiry —
+        queries carrying a ``now`` mask out docs older than ``ttl`` without
+        waiting for an ``expire()`` sweep."""
         be = backends_mod.get_backend(backend)
-        if seal_rows is not None and not mutable:
-            raise ValueError("seal_rows requires mutable=True (append-only "
-                             "SketchStore has no head to seal)")
+        if (seal_rows is not None or ttl is not None) and not mutable:
+            raise ValueError("seal_rows/ttl require mutable=True (append-only "
+                             "SketchStore has no head to seal, no clock)")
         store_cls = SegmentedStore if mutable else SketchStore
-        kw = {"seal_rows": seal_rows} if mutable else {}
+        kw = {"seal_rows": seal_rows, "ttl": ttl} if mutable else {}
         if corpus_idx is not None:
             store = store_cls.from_indices(
                 cfg, mapping, corpus_idx, backend=be, batch=batch, **kw
@@ -193,9 +209,40 @@ class SketchEngine:
         """Freeze the counting head into a packed sealed segment."""
         return self._mutable_store().seal()
 
-    def compact(self):
-        """Merge sealed segments, dropping tombstones; returns stats."""
-        return self._mutable_store().compact()
+    def compact(self, *, background: bool = False, _hold=None):
+        """Merge sealed segments, dropping tombstones.
+
+        ``background=False`` (default): synchronous global merge; returns
+        stats. ``background=True``: start the merge on the checkpoint-style
+        worker thread and return immediately (None) — serving continues on
+        the old segments and the query paths swap the result in the moment
+        it is ready (or call :meth:`wait_compaction` for the stats). When a
+        placement is live (a ``query_sharded`` ran), the background merge
+        is **device-local**: one group per mesh device over exactly its
+        resident segments, so each merged segment lands back on its device
+        at the next placement instead of one global slab hot-spotting one
+        device."""
+        store = self._mutable_store()
+        if not background:
+            return store.compact()
+        # adopt any pending job *before* reading the placement: its swap
+        # reindexes the sealed list and bumps the layout epoch, so groups
+        # captured earlier would point at the wrong (or vanished) segments
+        store.wait_compaction()
+        groups = None
+        p = self._placement
+        if p is not None and p.layout_epoch == store._layout_epoch:
+            groups = [g for g in p.assign if g]
+        store.compact_async(groups=groups, _hold=_hold)
+        return None
+
+    def poll_compaction(self) -> bool:
+        """Non-blocking: swap in a finished background compaction."""
+        return self._mutable_store().poll_compaction()
+
+    def wait_compaction(self):
+        """Join + swap the background compaction; returns its stats."""
+        return self._mutable_store().wait_compaction()
 
     def expire(self, ttl: float, now: float) -> int:
         """Tombstone docs older than ``ttl``."""
@@ -270,7 +317,12 @@ class SketchEngine:
         return merge_segment_topk(parts_s, parts_i, k)
 
     def query(
-        self, query_idx: jax.Array, k: int, *, use_fill_cache: bool = True
+        self,
+        query_idx: jax.Array,
+        k: int,
+        *,
+        use_fill_cache: bool = True,
+        now: Optional[float] = None,
     ) -> Tuple[jax.Array, jax.Array]:
         """(Q, P) padded query rows -> (scores (Q, k), ids (Q, k)).
 
@@ -280,13 +332,18 @@ class SketchEngine:
         stores merge the per-segment k-slot partials with the lower-id
         tie-break (DESIGN.md §9); ids in results are *global* doc ids,
         stable across seal/compact. If ``k`` exceeds the live corpus the
-        tail slots hold score -inf / id -1.
+        tail slots hold score -inf / id -1. ``now`` is the query-time
+        clock for lazy TTL expiry on a mutable store with a ``ttl``:
+        docs with ``born + ttl <= now`` are masked out of every view,
+        no ``expire()`` sweep needed.
         """
         if query_idx.shape[0] == 0:
             return (jnp.zeros((0, k), jnp.float32),
                     jnp.full((0, k), -1, jnp.int32))
+        if isinstance(self.store, SegmentedStore):
+            self.store.poll_compaction()  # adopt a finished background merge
         out_s, out_i = [], []
-        views = self.store.segment_views()
+        views = self.store.segment_views(now=now)
         for chunk in self.planner.plan(query_idx.shape[0]):
             qs = self._padded_query_sketches(
                 query_idx[chunk.start : chunk.start + chunk.rows], chunk.padded
@@ -303,16 +360,30 @@ class SketchEngine:
         axis: str,
         query_idx: jax.Array,
         k: int,
+        *,
+        now: Optional[float] = None,
+        use_placement: bool = True,
     ) -> Tuple[jax.Array, jax.Array]:
         """Candidate-sharded retrieval: local top-k then O(k·devices) merge.
 
-        Each segment view is padded with zero sketches up to a multiple of
-        the mesh axis; pad rows score -inf and are masked out of the merged
-        top-k (no silent tail drop for non-divisible C). A segmented store
-        runs the sharded pass per segment and k-slot-merges the partials,
-        same as the single-device path.
+        On a :class:`SegmentedStore` the **segment is the shard unit**
+        (DESIGN.md §10): whole sealed segments are placed on devices
+        (balanced by live rows, resident across queries), the head is
+        replicated, and each device streams only its resident rows —
+        per query, the only cross-device traffic is the replicated query
+        sketches in and one O(k)-row partial per device out, all-gathered
+        and merged with the global lower-id tie-break. Results are
+        bit-identical to :meth:`query`. ``use_placement=False`` forces the
+        legacy slice-every-segment-across-the-mesh path (benchmark
+        baseline). An append-only :class:`SketchStore` always row-shards
+        its single slab; pad rows score -inf / id -1 (no silent tail drop
+        for non-divisible C).
         """
-        views = self.store.segment_views()
+        if isinstance(self.store, SegmentedStore):
+            self.store.poll_compaction()
+            if use_placement:
+                return self._query_placed(mesh, axis, query_idx, k, now=now)
+        views = self.store.segment_views(now=now)
         qs = self._sketch_queries(query_idx)
         if not views:
             return (jnp.full((qs.shape[0], k), -jnp.inf, jnp.float32),
@@ -321,6 +392,87 @@ class SketchEngine:
         if len(parts) == 1:
             return parts[0]
         return merge_segment_topk([p[0] for p in parts], [p[1] for p in parts], k)
+
+    def _ensure_placement(self, mesh: Mesh, axis: str) -> SegmentPlacement:
+        """Current placement, rebuilt only when the sealed-segment *set*
+        changed (seal/compact/background swap) or the mesh did; tombstone
+        flips alone never re-upload slabs — just the validity mask."""
+        store = self.store
+        p = self._placement
+        if (p is None or p.mesh != mesh or p.axis != axis
+                or p.layout_epoch != store._layout_epoch):
+            p = self.placer.place(store, mesh, axis)
+            self._placement = p
+        return p
+
+    def _query_placed(
+        self,
+        mesh: Mesh,
+        axis: str,
+        query_idx: jax.Array,
+        k: int,
+        *,
+        now: Optional[float] = None,
+    ) -> Tuple[jax.Array, jax.Array]:
+        """Segment-placed sharded query body (see :meth:`query_sharded`).
+
+        Why this is exact (scores *and* ids): each device's resident slab is
+        merge-sorted by global id at placement build, so ``Backend.topk``'s
+        positional tie-break *is* the id tie-break locally — among ties each
+        device keeps the lowest-id candidates, which are the only ones the
+        global (score desc, id asc) merge could ever need; the global top-k
+        holds at most k docs of any one device, so the union of per-device
+        top-k lists (plus the replicated head partial) always contains it.
+        """
+        store: SegmentedStore = self.store
+        placement = self._ensure_placement(mesh, axis)
+        qs = self._sketch_queries(query_idx)
+        hv = store.head_view(now)
+        if not any(placement.assign):
+            # no sealed rows anywhere: the head is the whole corpus
+            return self._views_topk(qs, [hv] if hv is not None else [], k)
+        valid = placement.valid_mask(store, now=now)
+        n_bins, measure, backend = self.cfg.n_bins, self.measure, self.backend
+        head_args, head_specs = (), ()
+        if hv is not None:
+            h_ids = (jnp.arange(hv.sketches.shape[0], dtype=jnp.int32)
+                     if hv.ids is None else hv.ids)
+            h_valid = (jnp.ones(hv.sketches.shape[0], jnp.int32)
+                       if hv.valid is None else hv.valid)
+            head_args = (hv.sketches, hv.fills, h_ids, h_valid)
+            head_specs = (P(), P(), P(), P())
+
+        def local(q_rep, slab, fills, ids, vmask, *head):
+            sc, ix = backend.topk(
+                q_rep, slab, n_bins, measure, k,
+                corpus_fills=fills, corpus_valid=vmask,
+            )
+            gids = jnp.where(ix >= 0, jnp.take(ids, jnp.maximum(ix, 0)), -1)
+            sc_all = jax.lax.all_gather(sc, axis, axis=1, tiled=True)
+            ids_all = jax.lax.all_gather(gids, axis, axis=1, tiled=True)
+            if head:
+                h_sk, h_fl, h_id, h_va = head  # replicated: counted once
+                h_sc, h_ix = backend.topk(
+                    q_rep, h_sk, n_bins, measure, k,
+                    corpus_fills=h_fl, corpus_valid=h_va,
+                )
+                h_gids = jnp.where(
+                    h_ix >= 0, jnp.take(h_id, jnp.maximum(h_ix, 0)), -1
+                )
+                sc_all = jnp.concatenate([sc_all, h_sc], axis=1)
+                ids_all = jnp.concatenate([ids_all, h_gids], axis=1)
+            return merge_segment_topk([sc_all], [ids_all], k)
+
+        fn = shard_map(
+            local,
+            mesh=mesh,
+            in_specs=(P(), P(axis, None), P(axis), P(axis), P(axis))
+            + head_specs,
+            out_specs=(P(), P()),
+            check_vma=False,
+        )
+        return fn(qs, placement.sketches, placement.fills, placement.ids,
+                  valid, *head_args)
 
     def _sharded_view_topk(
         self, mesh: Mesh, axis: str, qs: jax.Array, view: SegmentView, k: int

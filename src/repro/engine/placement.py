@@ -1,0 +1,191 @@
+"""SegmentPlacer — the segment is the unit of sharding (DESIGN.md §10).
+
+PR 1's sharded query path slices *every* segment across the full mesh: each
+segment — however small, however freshly born from a mutation — is padded
+to a multiple of the mesh axis, re-scattered to all devices, locally
+scored, and merged with its own O(k·devices) all-gather. Per query that is
+one collective per segment and a re-shard of the whole corpus; compaction
+likewise rewrites rows that live on every device at once.
+
+This module flips the layout: **whole segments are assigned to devices**.
+
+  * Sealed segments are balanced across the mesh axis by live-row count
+    (greedy longest-processing-time: heaviest segment first, onto the
+    currently lightest device) — the classic LSM-shard placement, cf. the
+    sharded counting-sketch serving layout in the related count-sketch
+    repro.
+  * The mutable head is *replicated*: it is small, churns on every
+    mutation, and re-placing it per insert would dominate; every device
+    scores the same head slab and the merge counts it once.
+  * Each device's resident rows are packed into one id-ascending local
+    slab, uploaded **once per placement epoch** with a
+    ``NamedSharding(mesh, P(axis))`` — queries move only the replicated
+    query sketches in and O(k) partial rows per device out. No corpus
+    bytes cross devices at query time.
+
+Why id-ascending matters: ``Backend.topk`` breaks score ties toward the
+lower *local position*. With the device slab merge-sorted by global id,
+positional order == id order, so the device's local top-k keeps exactly
+the lowest-id candidates among ties — the same set the global
+(score desc, id asc) merge needs. That makes the placed sharded path
+bit-identical (scores *and* ids) to the single-device streaming path for
+any mutation history; the property tests assert it.
+
+Tombstones and lazy TTL expiry do not move rows: the placement keeps
+host-side provenance ``(segment, row, born)`` per slab slot and refreshes
+only the device-side validity mask when the store's tombstone state (or
+the query-time ``now``) changes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from ..parallel.sharding import shard_put
+
+__all__ = ["SegmentPlacement", "SegmentPlacer"]
+
+
+@dataclasses.dataclass
+class SegmentPlacement:
+    """One frozen assignment of sealed segments to mesh devices.
+
+    ``sketches``/``fills``/``ids`` are (D·L, …) device arrays sharded along
+    ``axis`` (L = padded rows per device, pad slots id -1) and immutable
+    for the placement's lifetime; the validity mask is the only per-query-
+    time-varying piece and is rebuilt lazily from the host provenance via
+    :meth:`valid_mask`.
+    """
+
+    mesh: Mesh
+    axis: str
+    assign: List[List[int]]  # device -> sealed segment indices at build time
+    n_local: int  # L: padded rows per device
+    layout_epoch: int  # store._layout_epoch this placement was built from
+    sketches: jax.Array  # (D*L, W) uint32, sharded P(axis, None)
+    fills: jax.Array  # (D*L,) int32, sharded P(axis)
+    ids: jax.Array  # (D*L,) int32 global doc ids, -1 on pad slots
+    src_seg: np.ndarray  # (D*L,) host: source sealed index, -1 on pad slots
+    src_row: np.ndarray  # (D*L,) host: row within the source segment
+    born: np.ndarray  # (D*L,) host float64 ingest timestamps (0 on pads)
+    _valid_key: Optional[Tuple] = dataclasses.field(default=None, init=False, repr=False)
+    _valid_dev: Optional[jax.Array] = dataclasses.field(default=None, init=False, repr=False)
+
+    @property
+    def n_devices(self) -> int:
+        return int(self.mesh.shape[self.axis])
+
+    @property
+    def n_slots(self) -> int:
+        return int(self.src_seg.shape[0])
+
+    @property
+    def segments_per_device(self) -> int:
+        return max((len(g) for g in self.assign), default=0)
+
+    def valid_mask(self, store, now: Optional[float] = None) -> jax.Array:
+        """(D·L,) int32 sharded validity: tombstones ∧ lazy TTL, refreshed
+        only when the store's tombstone epoch or the query ``now`` moved.
+
+        Tombstone flips after placement (delete / update-relocation /
+        ``expire``) land here without touching the resident slabs; with a
+        store-level ``ttl`` and a query-time ``now``, rows whose
+        ``born + ttl <= now`` drop out of the mask exactly like the
+        single-device view path."""
+        ttl = getattr(store, "ttl", None)
+        key = (store._valid_epoch, now if ttl is not None else None)
+        if self._valid_key == key and self._valid_dev is not None:
+            return self._valid_dev
+        eff = np.zeros(self.n_slots, bool)
+        for seg_i in {int(s) for s in np.unique(self.src_seg) if s >= 0}:
+            sel = self.src_seg == seg_i
+            eff[sel] = store.sealed[seg_i].valid[self.src_row[sel]]
+        if ttl is not None and now is not None:
+            eff &= ~(self.born + ttl <= now)
+        self._valid_dev = shard_put(
+            jnp.asarray(eff.astype(np.int32)), self.mesh, P(self.axis)
+        )
+        self._valid_key = key
+        return self._valid_dev
+
+
+@dataclasses.dataclass
+class SegmentPlacer:
+    """Balanced whole-segment placement policy (LPT by live-row count)."""
+
+    def place(self, store, mesh: Mesh, axis: str) -> SegmentPlacement:
+        n_dev = int(mesh.shape[axis])
+        segs = [(i, s) for i, s in enumerate(store.sealed) if s.n_rows > 0]
+        # LPT: heaviest (by live rows) first, onto the lightest device
+        segs.sort(key=lambda t: (-t[1].n_live, t[0]))
+        loads = [0] * n_dev
+        assign: List[List[int]] = [[] for _ in range(n_dev)]
+        for i, seg in segs:
+            d = min(range(n_dev), key=lambda j: (loads[j], j))
+            assign[d].append(i)
+            loads[d] += seg.n_live
+        n_local = max(
+            (sum(store.sealed[i].n_rows for i in g) for g in assign), default=0
+        )
+        n_local = max(n_local, 1)  # keep shard_map shapes non-degenerate
+        w = store.cfg.n_words
+        slabs, fill_rows, id_rows = [], [], []
+        src_seg = np.full((n_dev, n_local), -1, np.int64)
+        src_row = np.full((n_dev, n_local), -1, np.int64)
+        born = np.zeros((n_dev, n_local), np.float64)
+        for d, group in enumerate(assign):
+            if not group:
+                slabs.append(jnp.zeros((n_local, w), jnp.uint32))
+                fill_rows.append(jnp.zeros((n_local,), jnp.int32))
+                id_rows.append(jnp.full((n_local,), -1, jnp.int32))
+                continue
+            ids_c = np.concatenate([store.sealed[i].ids for i in group])
+            # id-ascending within the device: Backend.topk's positional
+            # tie-break becomes the id tie-break (see module docstring)
+            order = np.argsort(ids_c, kind="stable")
+            n = len(ids_c)
+            order_dev = jnp.asarray(order.astype(np.int32))
+            sk = jnp.take(
+                jnp.concatenate([store.sealed[i].sketches for i in group], axis=0),
+                order_dev, axis=0,
+            )
+            fl = jnp.take(
+                jnp.concatenate([store.sealed[i].fills for i in group], axis=0),
+                order_dev, axis=0,
+            )
+            slabs.append(jnp.pad(sk, ((0, n_local - n), (0, 0))))
+            fill_rows.append(jnp.pad(fl, (0, n_local - n)))
+            id_rows.append(jnp.pad(
+                jnp.asarray(ids_c[order].astype(np.int32)),
+                (0, n_local - n), constant_values=-1,
+            ))
+            src_seg[d, :n] = np.concatenate(
+                [np.full(store.sealed[i].n_rows, i, np.int64) for i in group]
+            )[order]
+            src_row[d, :n] = np.concatenate(
+                [np.arange(store.sealed[i].n_rows, dtype=np.int64) for i in group]
+            )[order]
+            born[d, :n] = np.concatenate(
+                [store.sealed[i].born for i in group]
+            )[order]
+        return SegmentPlacement(
+            mesh=mesh,
+            axis=axis,
+            assign=assign,
+            n_local=n_local,
+            layout_epoch=store._layout_epoch,
+            sketches=shard_put(
+                jnp.concatenate(slabs, axis=0), mesh, P(axis, None)
+            ),
+            fills=shard_put(jnp.concatenate(fill_rows), mesh, P(axis)),
+            ids=shard_put(jnp.concatenate(id_rows), mesh, P(axis)),
+            src_seg=src_seg.reshape(-1),
+            src_row=src_row.reshape(-1),
+            born=born.reshape(-1),
+        )

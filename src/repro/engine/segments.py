@@ -15,11 +15,21 @@ classic log-structured layout:
     a frozen ``SketchStore`` slab. Deletion there is a tombstone flip in a
     host-side bitmap that feeds ``Backend.topk``'s ``corpus_valid`` mask —
     the row never scores again but no data moves;
-  * a **compaction pass** that merges all sealed segments into one,
-    dropping tombstoned rows and re-gathering the fill caches — the only
-    time sealed bytes are rewritten, and still never a re-sketch;
-  * **TTL expiry** over per-doc ingest timestamps (tombstones, reclaimed
-    at the next compaction).
+  * a **compaction pass** that merges sealed segments, dropping tombstoned
+    rows and re-gathering the fill caches — the only time sealed bytes are
+    rewritten, and still never a re-sketch. :meth:`SegmentedStore.compact`
+    is the synchronous global pass; :meth:`SegmentedStore.compact_async`
+    runs the same merge as a **background job** on the checkpoint-thread
+    pattern (snapshot-to-host, merge off-thread, atomic swap on the
+    caller's thread with tombstone reconciliation), optionally *grouped* —
+    one merge per placement device — so serving never stalls and each
+    device's resident set compacts locally (DESIGN.md §10);
+  * **TTL expiry** over per-doc ingest timestamps — eagerly via
+    :meth:`SegmentedStore.expire` (tombstones, reclaimed at the next
+    compaction), and **lazily** at query time: with a store-level ``ttl``,
+    passing ``now`` to the query path folds ``born + ttl <= now`` into the
+    ``corpus_valid`` mask, so expired docs vanish from results without
+    anyone sweeping.
 
 Global doc ids are assigned once at insert and survive seal and compaction
 (query results stay stable across lifecycle events). Updating a *sealed*
@@ -43,6 +53,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..checkpoint.manager import BackgroundJob
 from ..core import binsketch, counting
 from .store import SegmentView, _grow
 
@@ -111,6 +122,7 @@ class SealedSegment:
     def __post_init__(self):
         self._ids_dev: Optional[jax.Array] = None
         self._valid_dev: Optional[jax.Array] = None
+        self._ttl_cache: Optional[tuple] = None  # (now, ttl) -> device mask
         # ids are fixed at construction: compute the identity-mapping flag
         # once so a freshly compacted, gap-free segment skips the id gather
         self._ids_identity = bool(
@@ -128,19 +140,35 @@ class SealedSegment:
 
     def tombstone(self, row: int) -> None:
         self.valid[row] = False
-        self._valid_dev = None  # invalidate the device-side mask cache
+        self._valid_dev = None  # invalidate the device-side mask caches
+        self._ttl_cache = None
         self._all_valid = False
 
-    def view(self) -> SegmentView:
+    def view(
+        self, ttl: Optional[float] = None, now: Optional[float] = None
+    ) -> SegmentView:
         """Tombstone-free segments pass ``valid=None`` (no per-score mask in
         the kernels) and identity-id segments pass ``ids=None`` (no gather)
-        — a compacted corpus queries at append-only speed."""
+        — a compacted corpus queries at append-only speed. With ``ttl`` and
+        ``now``, rows aged out (``born + ttl <= now``) are masked lazily —
+        they never reach a top-k even before anyone calls ``expire()``; the
+        (now, ttl)-keyed single-slot cache makes repeated queries at the
+        same timestamp free."""
         if self._ids_identity:
             ids_dev = None
         elif self._ids_dev is None:
             ids_dev = self._ids_dev = jnp.asarray(self.ids.astype(np.int32))
         else:
             ids_dev = self._ids_dev
+        if ttl is not None and now is not None:
+            expired = self.born + ttl <= now
+            if expired.any():
+                if self._ttl_cache is None or self._ttl_cache[0] != (now, ttl):
+                    mask = jnp.asarray((self.valid & ~expired).astype(np.int32))
+                    self._ttl_cache = ((now, ttl), mask)
+                return SegmentView(
+                    self.sketches, self.fills, ids_dev, self._ttl_cache[1]
+                )
         if self._all_valid:
             valid_dev = None
         elif self._valid_dev is None:
@@ -160,7 +188,12 @@ class _Head:
     multiplicity (built from indices); rows re-entered from packed form
     (sealed relocation, ``add_sketches``) are occupancy-1 approximations
     whose binary sketch is exact but whose counters cannot support
-    element-level retraction.
+    element-level retraction. ``sat_dev`` marks rows where a bin counter
+    hit ``COUNTER_MAX`` and was clamped: the clamp loses the true
+    occupancy, so a later decrement would silently under-count — retraction
+    is refused on such rows rather than corrupting the sketch (flags stay
+    on device so the test never stalls the ingest dispatch stream; see the
+    field comment).
     """
 
     counters: jax.Array  # (cap, N) uint16
@@ -170,11 +203,21 @@ class _Head:
     valid: np.ndarray  # (cap,) bool
     born: np.ndarray  # (cap,) float64
     exact: np.ndarray  # (cap,) bool
+    # device-side, deliberately: a host flag would force a device->host
+    # sync on every ingest batch; instead the clamp test rides the same
+    # async dispatch as the counter write and is materialized to host only
+    # where it is consumed (retraction refusal, checkpoint)
+    sat_dev: jax.Array  # (cap,) bool — counters clamped, retraction unsafe
     size: int = 0
     is_sorted: bool = True  # ids[:size] ascending?
     # query-view (ids, valid) device pair incl. fast-path Nones; rebuilt on
     # mutation (see meta_dev)
     _meta_cache: Optional[Tuple] = dataclasses.field(
+        default=None, init=False, repr=False
+    )
+    # (now, ttl) -> device mask; separate from _meta_cache so a TTL query
+    # cannot pollute the TTL-free view
+    _ttl_cache: Optional[Tuple] = dataclasses.field(
         default=None, init=False, repr=False
     )
 
@@ -189,7 +232,13 @@ class _Head:
             np.zeros((capacity,), bool),
             np.zeros((capacity,), np.float64),
             np.zeros((capacity,), bool),
+            jnp.zeros((capacity,), jnp.bool_),
         )
+
+    @property
+    def saturated(self) -> np.ndarray:
+        """(cap,) host view of the clamp flags — one sync, consumers only."""
+        return np.asarray(self.sat_dev)
 
     @property
     def capacity(self) -> int:
@@ -204,18 +253,24 @@ class _Head:
         self.counters = _grow(self.counters, cap)
         self.packed = _grow(self.packed, cap)
         self.fills = _grow(self.fills, cap)
+        self.sat_dev = _grow(self.sat_dev, cap)
         for name in ("ids", "valid", "born", "exact"):
             setattr(self, name, _grow_host(getattr(self, name), cap))
 
-    def _write_rows(self, rows: jax.Array, counts: jax.Array) -> None:
+    def _write_rows(self, rows: jax.Array, counts: jax.Array) -> jax.Array:
         """Overwrite counter rows (unique positions) and refresh the derived
-        packed sketches + fill cache for exactly those rows."""
+        packed sketches + fill cache for exactly those rows. Returns the
+        per-row *device* flag of whether the clamp lost information (any
+        bin above ``COUNTER_MAX``) — the caller folds it into ``sat_dev``;
+        nothing here blocks the async dispatch stream."""
+        sat = jnp.any(counts > counting.COUNTER_MAX, axis=-1)
         clamped = jnp.clip(counts, 0, counting.COUNTER_MAX).astype(
             counting.COUNTER_DTYPE
         )
         self.counters = self.counters.at[rows].set(clamped)
         self.packed = self.packed.at[rows].set(counting.counters_to_packed(clamped))
         self.fills = self.fills.at[rows].set(counting.counter_fills(clamped))
+        return sat
 
     def append(
         self, counts: jax.Array, ids: np.ndarray, born, exact: bool
@@ -228,7 +283,8 @@ class _Head:
         self.ensure_capacity(self.size + b)
         lo = self.size
         rows = jnp.arange(lo, lo + b)
-        self._write_rows(rows, counts.astype(jnp.int32))
+        sat = self._write_rows(rows, counts.astype(jnp.int32))
+        self.sat_dev = self.sat_dev.at[rows].set(sat)
         self.ids[lo : lo + b] = ids
         self.valid[lo : lo + b] = True
         self.born[lo : lo + b] = born
@@ -243,22 +299,32 @@ class _Head:
             self.is_sorted = ok
         self.size += b
         self._meta_cache = None
+        self._ttl_cache = None
         return range(lo, lo + b)
 
     def add_counts(self, rows: np.ndarray, deltas: jax.Array) -> None:
-        """Saturating ``counters[rows] += deltas`` (unique rows) + refresh."""
+        """Saturating ``counters[rows] += deltas`` (unique rows) + refresh.
+        Saturation is *sticky* under increments: once clamped, the true
+        occupancy is unrecoverable, so the flag only an overwrite resets."""
         rows_dev = jnp.asarray(rows.astype(np.int32))
         cur = self.counters[rows_dev].astype(jnp.int32) + deltas
-        self._write_rows(rows_dev, cur)
+        sat = self._write_rows(rows_dev, cur)
+        self.sat_dev = self.sat_dev.at[rows_dev].set(self.sat_dev[rows_dev] | sat)
 
     def set_counts(self, rows: np.ndarray, counts: jax.Array) -> None:
-        self._write_rows(jnp.asarray(rows.astype(np.int32)), counts.astype(jnp.int32))
+        rows_dev = jnp.asarray(rows.astype(np.int32))
+        sat = self._write_rows(rows_dev, counts.astype(jnp.int32))
+        self.sat_dev = self.sat_dev.at[rows_dev].set(sat)
 
     def zero_rows(self, rows: np.ndarray) -> None:
         rows_dev = jnp.asarray(rows.astype(np.int32))
-        self._write_rows(rows_dev, jnp.zeros((len(rows), self.counters.shape[1]), jnp.int32))
+        sat = self._write_rows(
+            rows_dev, jnp.zeros((len(rows), self.counters.shape[1]), jnp.int32)
+        )
+        self.sat_dev = self.sat_dev.at[rows_dev].set(sat)  # zeros: all False
         self.valid[rows] = False
         self._meta_cache = None
+        self._ttl_cache = None
 
     def meta_dev(self) -> Tuple[Optional[jax.Array], Optional[jax.Array]]:
         """(ids, valid) for the head's query view, cached across queries and
@@ -278,6 +344,16 @@ class _Head:
 
 
 @dataclasses.dataclass
+class _CompactionJob:
+    """A pending background compaction: the worker plus the identity of the
+    sealed segments it snapshotted (so the swap can verify nothing restructured
+    them mid-flight and knows exactly which segments it replaces)."""
+
+    job: BackgroundJob
+    segments: List[SealedSegment]
+
+
+@dataclasses.dataclass
 class SegmentedStore:
     """Mutable, segmented drop-in for :class:`SketchStore`.
 
@@ -293,8 +369,19 @@ class SegmentedStore:
     head: _Head
     next_id: int = 0
     seal_rows: Optional[int] = None  # auto-seal head when it reaches this many rows
+    ttl: Optional[float] = None  # lazy query-time expiry horizon (seconds of `now`)
     _loc: Dict[int, Tuple[int, int]] = dataclasses.field(default_factory=dict)
     _n_live: int = 0
+    # epochs drive the placement caches (engine/placement.py): the layout
+    # epoch bumps when the *set* of sealed segments changes (seal, compact,
+    # background swap) and invalidates resident device slabs; the valid
+    # epoch bumps when only tombstone state changes (delete, update
+    # relocation, expire) and refreshes nothing but the device-side mask.
+    _layout_epoch: int = 0
+    _valid_epoch: int = 0
+    _compaction: Optional["_CompactionJob"] = dataclasses.field(
+        default=None, repr=False
+    )
 
     # ------------------------------------------------------------ construct
     @classmethod
@@ -304,10 +391,11 @@ class SegmentedStore:
         mapping: jax.Array,
         capacity: int = 1024,
         seal_rows: Optional[int] = None,
+        ttl: Optional[float] = None,
     ) -> "SegmentedStore":
         return cls(
             cfg, mapping, [], _Head.create(cfg.n_bins, cfg.n_words, capacity),
-            seal_rows=seal_rows,
+            seal_rows=seal_rows, ttl=ttl,
         )
 
     @classmethod
@@ -321,10 +409,11 @@ class SegmentedStore:
         batch: int = 4096,
         now: float = 0.0,
         seal_rows: Optional[int] = None,
+        ttl: Optional[float] = None,
     ) -> "SegmentedStore":
         store = cls.create(
             cfg, mapping, capacity=max(int(corpus_idx.shape[0]), 1),
-            seal_rows=seal_rows,
+            seal_rows=seal_rows, ttl=ttl,
         )
         store.add(corpus_idx, backend=backend, batch=batch, now=now)
         return store
@@ -371,20 +460,46 @@ class SegmentedStore:
                     jnp.zeros((0,), jnp.int32), np.zeros((0,), np.int64))
         return got[0], got[1], got[2]
 
-    def segment_views(self) -> List[SegmentView]:
-        """Sealed slabs then the (id-sorted) head — the engine's query list."""
-        views = [seg.view() for seg in self.sealed if seg.n_rows > 0]
-        h = self.head
-        if h.size > 0:
-            self._sort_head()
-            ids_dev, valid_dev = h.meta_dev()
-            views.append(SegmentView(
-                h.packed[: h.size], h.fills[: h.size], ids_dev, valid_dev,
-            ))
+    def segment_views(self, now: Optional[float] = None) -> List[SegmentView]:
+        """Sealed slabs then the (id-sorted) head — the engine's query list.
+
+        With a store-level ``ttl`` and a query-time ``now``, every view's
+        validity mask additionally drops rows whose ``born + ttl <= now`` —
+        lazy expiry: the doc is unretrievable the instant it ages out, with
+        no ``expire()`` sweep required (the sweep still reclaims space)."""
+        views = [
+            seg.view(self.ttl, now) for seg in self.sealed if seg.n_rows > 0
+        ]
+        hv = self.head_view(now)
+        if hv is not None:
+            views.append(hv)
         return views
+
+    def head_view(self, now: Optional[float] = None) -> Optional[SegmentView]:
+        """The mutable head as one scoreable view (None while empty)."""
+        h = self.head
+        if h.size == 0:
+            return None
+        self._sort_head()
+        ids_dev, valid_dev = h.meta_dev()
+        if self.ttl is not None and now is not None:
+            expired = h.born[: h.size] + self.ttl <= now
+            if expired.any():
+                if h._ttl_cache is None or h._ttl_cache[0] != (now, self.ttl):
+                    mask = jnp.asarray(
+                        (h.valid[: h.size] & ~expired).astype(np.int32)
+                    )
+                    h._ttl_cache = ((now, self.ttl), mask)
+                valid_dev = h._ttl_cache[1]
+        return SegmentView(h.packed[: h.size], h.fills[: h.size], ids_dev, valid_dev)
 
     # ---------------------------------------------------------------- ingest
     def _count_rows(self, idx: jax.Array, backend) -> jax.Array:
+        # documents are sets: collapse duplicate indices before they reach
+        # the occupancy scatter, or insert->retract round-trips on
+        # non-deduplicated rows would leave phantom counts (and a wrong
+        # binary sketch) behind
+        idx = counting.dedup_padded(idx)
         if backend is not None:
             return backend.count(self.cfg, self.mapping, idx)
         return counting.count_indices_dense(self.cfg, self.mapping, idx)
@@ -482,6 +597,7 @@ class SegmentedStore:
         if head_rows:
             self.head.zero_rows(np.asarray(head_rows, np.int64))
         self._n_live -= len(uniq)
+        self._valid_epoch += 1
         return len(uniq)
 
     def update(
@@ -511,6 +627,7 @@ class SegmentedStore:
             self.head.set_counts(rows, counts[jnp.asarray(sel.astype(np.int32))])
             self.head.born[rows] = now
             self.head.exact[rows] = True
+            self.head._ttl_cache = None  # born moved: lazy-expiry mask stale
         if (~in_head).any():
             sel = np.nonzero(~in_head)[0]
             for i in sel:
@@ -518,6 +635,7 @@ class SegmentedStore:
                 self.sealed[seg_i].tombstone(row)
                 del self._loc[int(ids[i])]
             self._n_live -= len(sel)
+            self._valid_epoch += 1
             self._insert_counts(
                 counts[jnp.asarray(sel.astype(np.int32))],
                 ids=ids[sel], now=now, exact=True,
@@ -567,6 +685,7 @@ class SegmentedStore:
                 self.sealed[seg_i].tombstone(row)
                 del self._loc[int(ids[i])]
             self._n_live -= len(sel)
+            self._valid_epoch += 1
             self._insert_counts(merged, ids=ids[sel], now=born, exact=False)
 
     def retract_rows(self, doc_ids: Sequence[int], idx: jax.Array, *, backend=None) -> None:
@@ -583,6 +702,7 @@ class SegmentedStore:
         if len(uniq) < len(ids):
             deltas = jax.ops.segment_sum(deltas, jnp.asarray(inv), len(uniq))
             ids = uniq
+        sat = self.head.saturated  # one device sync, only on this rare path
         rows = []
         for gid in ids:
             seg_i, row = self._locate(gid)
@@ -590,6 +710,13 @@ class SegmentedStore:
                 raise ValueError(
                     f"doc {int(gid)} is not an exact head row; retraction needs "
                     "element multiplicity (use update() for full replacement)"
+                )
+            if sat[row]:
+                raise ValueError(
+                    f"doc {int(gid)} has saturated counters (a bin occupancy "
+                    f"exceeded COUNTER_MAX={counting.COUNTER_MAX} and was "
+                    "clamped); a decrement would silently under-count — "
+                    "use update() for full replacement instead"
                 )
             rows.append(row)
         self.head.add_counts(np.asarray(rows, np.int64), -deltas)
@@ -632,11 +759,13 @@ class SegmentedStore:
         h.counters = h.counters.at[: h.size].set(jnp.take(h.counters[: h.size], p, axis=0))
         h.packed = h.packed.at[: h.size].set(jnp.take(h.packed[: h.size], p, axis=0))
         h.fills = h.fills.at[: h.size].set(jnp.take(h.fills[: h.size], p, axis=0))
+        h.sat_dev = h.sat_dev.at[: h.size].set(jnp.take(h.sat_dev[: h.size], p, axis=0))
         for name in ("ids", "valid", "born", "exact"):
             arr = getattr(self.head, name)
             arr[: h.size] = arr[: h.size][perm]
         h.is_sorted = True
         h._meta_cache = None
+        h._ttl_cache = None
         for row in range(h.size):
             if h.valid[row]:
                 self._loc[int(h.ids[row])] = (_HEAD, row)
@@ -658,20 +787,26 @@ class SegmentedStore:
             for row, gid in enumerate(seg.ids):
                 self._loc[int(gid)] = (seg_i, row)
         self.head = _Head.create(self.cfg.n_bins, self.cfg.n_words, h.capacity)
+        self._layout_epoch += 1
         return seg
 
     def compact(self) -> Dict[str, int]:
         """Merge every sealed segment into one, dropping tombstoned rows and
         re-gathering the fill caches; rows come out merge-sorted by global
-        id. The head is untouched (seal first for a full major compaction)."""
+        id. The head is untouched (seal first for a full major compaction).
+        Synchronous — serving waits; see :meth:`compact_async` for the
+        background (and per-device) variant."""
+        self.wait_compaction()  # never two compactions over the same slabs
         stats = {
             "segments_in": len(self.sealed),
             "rows_in": sum(s.n_rows for s in self.sealed),
             "rows_out": 0,
+            "groups": 1 if self.sealed else 0,
         }
         if not self.sealed:
             return stats
         got = _gather_live(self._parts(head=False))
+        self._layout_epoch += 1
         if got is None:
             self.sealed = []
             return stats
@@ -683,14 +818,204 @@ class SegmentedStore:
         stats["rows_out"] = seg.n_rows
         return stats
 
+    # ------------------------------------------------- background compaction
+    def compact_async(
+        self,
+        groups: Optional[Sequence[Sequence[int]]] = None,
+        *,
+        _hold=None,
+    ) -> bool:
+        """Start a compaction on a background thread; serving never stalls.
+
+        The checkpoint-thread pattern (``CheckpointManager.save``'s async
+        path, via the shared :class:`~repro.checkpoint.manager.BackgroundJob`):
+
+          1. **snapshot-to-host** — sealed slabs, fill caches and per-row
+             metadata are copied to host memory synchronously (the only
+             part the caller waits for);
+          2. **merge off-thread** — live rows of each group merge-sort by
+             global id in pure numpy against the snapshot, touching no live
+             state, so queries and mutations proceed concurrently against
+             the *old* segments with zero locking;
+          3. **atomic swap** — :meth:`poll_compaction` (called by the query
+             paths) or :meth:`wait_compaction` applies the result on the
+             caller's thread: tombstones and relocations that landed during
+             the merge are *reconciled* (a merged row stays live only if
+             the location map still points at its snapshot position), the
+             group's segments are replaced, and the location map rebuilds.
+
+        ``groups`` is a list of sealed-segment index groups, each merged
+        into one output segment — pass a placement's per-device assignment
+        (``SegmentPlacement.assign``) for **device-local** compaction: every
+        device's resident set merges into one segment that stays on that
+        device at the next placement. Default: one global group. Groups of
+        one tombstone-free segment are skipped (nothing to reclaim). Returns
+        False if there was nothing to do. ``_hold`` (test seam) is an event
+        the worker waits on before returning, pinning the job in the
+        "running" state so interleavings can be exercised deterministically.
+        """
+        self.wait_compaction()
+        if groups is None:
+            groups = [list(range(len(self.sealed)))]
+        groups = [[int(i) for i in g] for g in groups]
+        seen: set = set()
+        for g in groups:
+            for i in g:
+                if not 0 <= i < len(self.sealed) or i in seen:
+                    raise ValueError(
+                        f"compaction group index {i} is out of range or "
+                        "duplicated — groups must partition current sealed "
+                        "segments (a placement from a stale layout epoch?)"
+                    )
+                seen.add(i)
+        groups = [
+            g for g in groups
+            if g and not (len(g) == 1 and self.sealed[g[0]]._all_valid)
+        ]
+        if not groups:
+            return False
+        snap = []
+        for group in groups:
+            segs = [self.sealed[i] for i in group]
+            parts = [
+                (
+                    np.asarray(jax.device_get(s.sketches)),
+                    np.asarray(jax.device_get(s.fills)),
+                    s.ids.copy(),
+                    s.valid.copy(),
+                    s.born.copy(),
+                )
+                for s in segs
+            ]
+            snap.append((group, parts))
+
+        def work():
+            out = []
+            for group, parts in snap:
+                sk, fl, ids, valid, born, src_seg, src_row = (
+                    [], [], [], [], [], [], [],
+                )
+                for local_i, (s_sk, s_fl, s_ids, s_valid, s_born) in zip(
+                    group, parts
+                ):
+                    keep = np.nonzero(s_valid)[0]
+                    sk.append(s_sk[keep])
+                    fl.append(s_fl[keep])
+                    ids.append(s_ids[keep])
+                    born.append(s_born[keep])
+                    src_seg.append(np.full(len(keep), local_i, np.int64))
+                    src_row.append(keep.astype(np.int64))
+                ids_c = np.concatenate(ids)
+                order = np.argsort(ids_c, kind="stable")
+                out.append({
+                    "group": group,
+                    "rows_in": sum(len(p[2]) for p in parts),
+                    "sketches": np.concatenate(sk, axis=0)[order],
+                    "fills": np.concatenate(fl)[order],
+                    "ids": ids_c[order],
+                    "born": np.concatenate(born)[order],
+                    "src_seg": np.concatenate(src_seg)[order],
+                    "src_row": np.concatenate(src_row)[order],
+                })
+            if _hold is not None:
+                _hold.wait()
+            return out
+
+        self._compaction = _CompactionJob(
+            BackgroundJob(work), [self.sealed[i] for g in groups for i in g]
+        )
+        return True
+
+    def poll_compaction(self) -> bool:
+        """Swap in a *finished* background compaction, without blocking.
+        Called by the engine's query paths, so serving picks the result up
+        the moment it is ready; returns True when a swap happened."""
+        job = self._compaction
+        if job is None or not job.job.done():
+            return False
+        self.wait_compaction()
+        return True
+
+    def wait_compaction(self) -> Optional[Dict[str, int]]:
+        """Join the background compaction (if any) and apply its swap;
+        returns the compaction stats, or None if no job was pending."""
+        job = self._compaction
+        if job is None:
+            return None
+        self._compaction = None
+        results = job.job.result()
+        return self._swap_compaction(job, results)
+
+    def _swap_compaction(self, job, results) -> Dict[str, int]:
+        """Atomic swap on the caller's thread (step 3 of the pattern).
+
+        The merge ran against a snapshot; the store may have moved on. A
+        merged row is still live only if its *source* row is still live
+        right now: every mutation that kills a sealed doc mid-merge
+        (delete, relocating update/merge, expiry) flips exactly that
+        source bitmap bit, and a dead sealed row can never come back (ids
+        are never reused, relocation only tombstones) — so liveness is one
+        numpy gather per source segment, not a per-row location-map probe.
+        Mid-merge casualties therefore come out as tombstones in the new
+        segment (reclaimed by the *next* compaction), never as resurrected
+        rows; segments sealed after the snapshot are untouched. This runs
+        on the serving thread via ``poll_compaction``, hence the
+        vectorized reconcile and the batched location-map rebuild.
+        """
+        for seg in job.segments:  # seal() only appends, compact() is serialized
+            assert any(s is seg for s in self.sealed), (
+                "sealed segment vanished during background compaction"
+            )
+        replaced = {id(s) for s in job.segments}
+        stats = {
+            "segments_in": sum(len(r["group"]) for r in results),
+            "rows_in": sum(r["rows_in"] for r in results),
+            "rows_out": 0,
+            "groups": len(results),
+        }
+        new_sealed: List[SealedSegment] = []
+        for r in results:
+            n = len(r["ids"])
+            if n == 0:
+                continue
+            live = np.zeros(n, bool)
+            for s in np.unique(r["src_seg"]):
+                sel = r["src_seg"] == s
+                live[sel] = self.sealed[int(s)].valid[r["src_row"][sel]]
+            new_sealed.append(SealedSegment(
+                jnp.asarray(r["sketches"]),
+                jnp.asarray(r["fills"]),
+                r["ids"],
+                live,
+                r["born"],
+            ))
+            stats["rows_out"] += n
+        new_sealed.extend(s for s in self.sealed if id(s) not in replaced)
+        self.sealed = new_sealed
+        self._loc = {
+            g: loc for g, loc in self._loc.items() if loc[0] == _HEAD
+        }
+        for seg_i, seg in enumerate(self.sealed):
+            rows = np.nonzero(seg.valid)[0]
+            self._loc.update(
+                zip(seg.ids[rows].tolist(),
+                    ((seg_i, int(row)) for row in rows))
+            )
+        self._layout_epoch += 1
+        self._valid_epoch += 1
+        return stats
+
     def expire(self, ttl: float, now: float) -> int:
-        """Tombstone every live doc older than ``ttl`` (age ``now - born``
-        strictly greater). Space comes back at the next seal/compact."""
+        """Tombstone every live doc aged out at ``now`` — the *same*
+        ``born + ttl <= now`` predicate the lazy query-time mask applies,
+        so a doc on the boundary cannot be invisible to queries yet
+        unreclaimable by the sweep. Space comes back at the next
+        seal/compact."""
         h = self.head
-        hits = np.nonzero(h.valid[: h.size] & (now - h.born[: h.size] > ttl))[0]
+        hits = np.nonzero(h.valid[: h.size] & (h.born[: h.size] + ttl <= now))[0]
         dead = [int(g) for g in h.ids[: h.size][hits]]
         for seg in self.sealed:
-            hits = np.nonzero(seg.valid & (now - seg.born > ttl))[0]
+            hits = np.nonzero(seg.valid & (seg.born + ttl <= now))[0]
             dead.extend(int(g) for g in seg.ids[hits])
         if dead:
             self.delete(dead)
@@ -702,7 +1027,11 @@ class SegmentedStore:
 
         ``born`` timestamps travel in aux (json doubles are exact float64;
         tree leaves get device_put on restore, which demotes 64-bit dtypes
-        under default-precision jax and would blunt TTL resolution)."""
+        under default-precision jax and would blunt TTL resolution). A
+        finished background compaction is folded in first; a still-running
+        one is *not* waited for — the snapshot captures the consistent
+        pre-swap state."""
+        self.poll_compaction()
         self._sort_head()
         h = self.head
         tree = {
@@ -714,6 +1043,7 @@ class SegmentedStore:
                 "ids": h.ids[: h.size].copy(),
                 "valid": h.valid[: h.size].copy(),
                 "exact": h.exact[: h.size].copy(),
+                "saturated": h.sat_dev[: h.size],
             },
             "sealed": [
                 {
@@ -730,6 +1060,7 @@ class SegmentedStore:
             "cfg": {"d": self.cfg.d, "n_bins": self.cfg.n_bins, "mode": self.cfg.mode},
             "next_id": int(self.next_id),
             "seal_rows": self.seal_rows,
+            "ttl": self.ttl,
             "head_rows": int(h.size),
             "sealed_rows": [s.n_rows for s in self.sealed],
             "head_born": h.born[: h.size].tolist(),
@@ -763,6 +1094,7 @@ class SegmentedStore:
                 "ids": np.zeros((hr,), np.int64),
                 "valid": np.zeros((hr,), bool),
                 "exact": np.zeros((hr,), bool),
+                "saturated": jnp.zeros((hr,), jnp.bool_),
             },
             "sealed": [
                 {
@@ -776,7 +1108,7 @@ class SegmentedStore:
         }
         tree, _ = manager.restore(step, target)
         store = cls.create(cfg, tree["mapping"], capacity=max(hr, 1),
-                           seal_rows=aux["seal_rows"])
+                           seal_rows=aux["seal_rows"], ttl=aux.get("ttl"))
         store.next_id = int(aux["next_id"])
         ht = tree["head"]
         h = store.head
@@ -787,6 +1119,7 @@ class SegmentedStore:
         h.valid[:hr] = np.asarray(ht["valid"])
         h.born[:hr] = np.asarray(aux["head_born"], np.float64)
         h.exact[:hr] = np.asarray(ht["exact"])
+        h.sat_dev = h.sat_dev.at[:hr].set(jnp.asarray(ht["saturated"]))
         h.size = hr
         for st, born in zip(tree["sealed"], aux["sealed_born"]):
             store.sealed.append(SealedSegment(

@@ -119,8 +119,10 @@ class SketchStore:
         """(size,) cached |row_s| fill counts — computed at ingest."""
         return self._fills[: self.size]
 
-    def segment_views(self) -> List[SegmentView]:
-        """The whole store as one segment (row index == doc id, no mask)."""
+    def segment_views(self, now: Optional[float] = None) -> List[SegmentView]:
+        """The whole store as one segment (row index == doc id, no mask).
+        ``now`` is accepted for surface parity with ``SegmentedStore`` and
+        ignored — an append-only store has no lifecycle clock."""
         if self.size == 0:
             return []
         return [SegmentView(self.sketches, self.fills, None, None)]

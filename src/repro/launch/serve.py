@@ -81,6 +81,19 @@ def main(argv=None):
     ap.add_argument("--seal-rows", type=int, default=None,
                     help="auto-seal the counting head at this many rows "
                          "(mutable store only)")
+    ap.add_argument("--sharded", action="store_true",
+                    help="serve via query_sharded over a mesh of all local "
+                         "devices: segment-placed on a mutable store "
+                         "(segment = shard unit, resident slabs), "
+                         "row-sliced on an append-only one")
+    ap.add_argument("--background-compact", action="store_true",
+                    help="mutable store: run the post-mutation compaction "
+                         "as a background job and serve the first query "
+                         "batches while it is still merging")
+    ap.add_argument("--ttl", type=float, default=None,
+                    help="mutable store: lazy TTL (in ingest-batch ticks) — "
+                         "docs older than this at serve time drop out of "
+                         "results via the query-time mask, no sweep")
     ap.add_argument("--check-recall", action="store_true", default=True)
     args = ap.parse_args(argv)
 
@@ -91,7 +104,7 @@ def main(argv=None):
     spec = DATASETS[args.dataset]
     idx, lens = generate_corpus(spec, seed=0)
     n = idx.shape[0]
-    mutable = args.mutate_rate > 0.0
+    mutable = args.mutate_rate > 0.0 or args.ttl is not None
     print(f"corpus: {n} docs, d={spec.d}, psi={spec.max_nnz}"
           + (f", mutate-rate={args.mutate_rate}" if mutable else ""))
 
@@ -107,11 +120,19 @@ def main(argv=None):
         capacity=n,
         mutable=mutable,
         seal_rows=args.seal_rows,
+        ttl=args.ttl,
     )
     t0 = time.time()
     idx_dev = jnp.asarray(idx)
+    # the lifecycle clock ticks once per ingest batch: born stamps, the
+    # mutation phase, and lazy TTL expiry all measure age in these ticks
+    tick = 0
+    born = {}
     for s in range(0, n, args.ingest_batch):  # streaming ingest
-        engine.add(idx_dev[s : s + args.ingest_batch])
+        ids = engine.add(idx_dev[s : s + args.ingest_batch], now=float(tick))
+        if mutable:
+            born.update({int(g): tick for g in ids})
+        tick += 1
     # realize the ingest buffers themselves; store.sketches on a mutable
     # store would run a full live() gather and bill it to the build time
     jax.block_until_ready(engine.store.head.packed if mutable
@@ -120,13 +141,14 @@ def main(argv=None):
     print(f"build: {t_build:.2f}s ({n / t_build:.0f} docs/s, "
           f"backend={engine.backend.name}, fill cache primed at ingest)")
 
+    serve_now = None
     if mutable:
         # content per live doc id — mutations keep this in sync so the
         # exact-recall ground truth is computed over the surviving catalog
         contents = {i: idx[i] for i in range(n)}
         rng = np.random.default_rng(7)
         n_mut = int(round(args.mutate_rate * n))
-        victims = rng.choice(n, n_mut, replace=False)
+        victims = rng.choice(n, n_mut, replace=False) if n_mut else np.array([], int)
         dele, upd = victims[: n_mut // 2], victims[n_mut // 2 :]
         fresh_idx, _ = generate_corpus(spec, seed=1)
 
@@ -135,21 +157,41 @@ def main(argv=None):
         if len(dele):
             engine.delete(dele.tolist())
         if len(upd):
-            engine.update(upd.tolist(), jnp.asarray(fresh_idx[upd]))
+            engine.update(upd.tolist(), jnp.asarray(fresh_idx[upd]), now=float(tick))
         engine.seal()
-        stats = engine.compact()
-        if engine.store.sealed:
-            jax.block_until_ready(engine.store.sealed[0].sketches)
+        if args.background_compact:
+            # snapshot-to-host happens here; the merge runs on the worker
+            # thread while the serve phase below answers queries against
+            # the old segments — the swap lands at whichever query batch
+            # finds the job done
+            engine.compact(background=True)
+            stats = None
+        else:
+            stats = engine.compact()
+            if engine.store.sealed:
+                jax.block_until_ready(engine.store.sealed[0].sketches)
         t_mut = time.time() - t0
         for g in dele:
             contents.pop(int(g))
+            born.pop(int(g))
         for g in upd:
             contents[int(g)] = fresh_idx[g]
+            born[int(g)] = tick
+        compacted = (f"compacted {stats['rows_in']}->{stats['rows_out']} rows"
+                     if stats else "compaction running in background")
         print(f"mutate: {len(dele)} deleted, {len(upd)} updated, sealed + "
-              f"compacted {stats['rows_in']}->{stats['rows_out']} rows in "
-              f"{t_mut:.2f}s ({n_mut / max(t_mut, 1e-9):.0f} mutations/s); "
+              f"{compacted} in {t_mut:.2f}s "
+              f"({n_mut / max(t_mut, 1e-9):.0f} mutations/s); "
               f"live={engine.store.size}")
 
+        serve_now = float(tick + 1)
+        if args.ttl is not None:  # lazily expired docs leave the catalog too
+            dead = [g for g, b in born.items() if b + args.ttl <= serve_now]
+            for g in dead:
+                contents.pop(g)
+                born.pop(g)
+            print(f"ttl: {len(dead)} docs older than {args.ttl} ticks at "
+                  f"serve time (now={serve_now}) masked lazily — no sweep ran")
         surv_ids = np.asarray(sorted(contents))
         surv_rows = np.stack([contents[int(g)] for g in surv_ids])
     else:  # no mutation phase: the catalog is the corpus, verbatim
@@ -164,15 +206,34 @@ def main(argv=None):
     q_pick = rng.choice(len(surv_ids), args.queries, replace=False)
     queries = surv_rows[q_pick]
 
+    mesh = axis = None
+    if args.sharded:
+        mesh = jax.make_mesh((len(jax.devices()),), ("data",))
+        axis = "data"
+        print(f"sharded serve: {len(jax.devices())} device(s)"
+              + (", segment-placed (resident slabs, head replicated)"
+                 if mutable else ", row-sliced single slab"))
+
     t0 = time.time()
     all_ids = []
     for s in range(0, args.queries, args.batch):
-        scores, ids = engine.query(jnp.asarray(queries[s : s + args.batch]), args.topk)
+        qb = jnp.asarray(queries[s : s + args.batch])
+        if mesh is not None:
+            scores, ids = engine.query_sharded(mesh, axis, qb, args.topk,
+                                               now=serve_now)
+        else:
+            scores, ids = engine.query(qb, args.topk, now=serve_now)
         all_ids.append(np.asarray(ids))
     ids = np.concatenate(all_ids)
     t_serve = time.time() - t0
     print(f"serve: {args.queries} queries in {t_serve:.2f}s "
           f"({args.queries / t_serve:.0f} q/s, batch={args.batch})")
+    if mutable and args.background_compact:
+        stats = engine.wait_compaction()
+        if stats:
+            print(f"background compaction: {stats['groups']} group(s), "
+                  f"{stats['rows_in']}->{stats['rows_out']} rows "
+                  f"(served throughout)")
 
     if args.check_recall:
         truth = exact_topk_jaccard(surv_rows, queries, args.topk)

@@ -28,8 +28,8 @@ import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 __all__ = [
-    "RULES", "axis_size", "logical_to_spec", "named_sharding", "tree_shardings",
-    "shard_map",
+    "RULES", "axis_size", "logical_to_spec", "named_sharding", "shard_put",
+    "tree_shardings", "shard_map",
 ]
 
 PyTree = Any
@@ -60,6 +60,18 @@ def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
     return _shard_map(
         f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=check_vma
     )
+
+def shard_put(arr: jax.Array, mesh: Mesh, spec: P) -> jax.Array:
+    """Pin an array onto a mesh with an explicit PartitionSpec, once.
+
+    The resident-data idiom behind segment placement (``engine/placement``):
+    corpus slabs are ``shard_put`` at placement-build time, so per-query
+    ``shard_map`` calls whose ``in_specs`` match find the bytes already on
+    their devices — the per-query cross-device traffic drops to the
+    replicated queries in and the O(k) partials out.
+    """
+    return jax.device_put(arr, NamedSharding(mesh, spec))
+
 
 RULES: Dict[str, Tuple[str, ...]] = {
     "batch": ("pod", "data"),

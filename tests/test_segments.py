@@ -118,6 +118,63 @@ def test_retract_sealed_raises():
         store.retract_rows([2], jnp.asarray(idx[2:3]))
 
 
+def test_duplicate_indices_insert_retract_roundtrip():
+    """Rows are sets: duplicate indices in a padded row are collapsed at
+    every counting entry point, so insert->retract round-trips on
+    non-deduplicated rows leave neither phantom occupancy nor a wrong
+    binary sketch (the multiplicity-corruption bug)."""
+    cfg = BinSketchConfig(d=8, n_bins=4)
+    mapping = jnp.asarray([2, 2, 0, 1, 1, 3, 3, 0], jnp.int32)
+    store = SegmentedStore.create(cfg, mapping, capacity=2)
+    store.add(jnp.asarray([[0, 0, 0, 1, -1]], jnp.int32))  # {0, 1}, 0 thrice
+    # occupancy counts *distinct* elements: ids 0 and 1 share bin 2 -> 2
+    np.testing.assert_array_equal(np.asarray(store.head.counters[0]),
+                                  [0, 0, 2, 0])
+    store.retract_rows([0], jnp.asarray([[0, -1, -1, -1, -1]], jnp.int32))
+    np.testing.assert_array_equal(
+        np.asarray(packed.unpack_bits(store.sketches, 4)), [[0, 0, 1, 0]]
+    )
+    # duplicated retraction row decrements once, clearing the bin exactly
+    store.retract_rows([0], jnp.asarray([[1, 1, -1, -1, -1]], jnp.int32))
+    np.testing.assert_array_equal(
+        np.asarray(packed.unpack_bits(store.sketches, 4)), [[0, 0, 0, 0]]
+    )
+    assert np.asarray(store.head.counters[0]).sum() == 0  # no phantom counts
+
+
+def test_saturated_counters_refuse_retraction(monkeypatch, tmp_path):
+    """Once a bin clamps at COUNTER_MAX the true occupancy is gone, so a
+    decrement would silently under-count — retraction is refused on the
+    saturated row (and the flag survives a checkpoint), while update()
+    restores exactness."""
+    from repro.checkpoint.manager import CheckpointManager
+
+    monkeypatch.setattr(counting, "COUNTER_MAX", 3)
+    cfg = BinSketchConfig(d=8, n_bins=4)
+    all_bin0 = jnp.zeros(8, jnp.int32)  # every element maps to bin 0
+    store = SegmentedStore.create(cfg, all_bin0, capacity=2)
+    store.add(jnp.asarray([[0, 1, 2, 3, 4, -1]], jnp.int32))  # occupancy 5 > 3
+    store.add(jnp.asarray([[5, 6, -1, -1, -1, -1]], jnp.int32))  # occupancy 2
+    assert store.head.saturated[0] and not store.head.saturated[1]
+    with pytest.raises(ValueError, match="saturated"):
+        store.retract_rows([0], jnp.asarray([[0, -1, -1, -1, -1, -1]], jnp.int32))
+    # the healthy row still retracts fine
+    store.retract_rows([1], jnp.asarray([[5, -1, -1, -1, -1, -1]], jnp.int32))
+    # merge_rows pushing a row over the clamp marks it too (sticky)
+    store.merge_rows([1], jnp.asarray([[0, 1, 2, 7, -1, -1]], jnp.int32))
+    assert store.head.saturated[1]
+    # the flag rides the checkpoint: a restored store still refuses
+    mgr = CheckpointManager(str(tmp_path))
+    store.save(mgr, step=1)
+    back = SegmentedStore.restore(mgr)
+    with pytest.raises(ValueError, match="saturated"):
+        back.retract_rows([0], jnp.asarray([[0, -1, -1, -1, -1, -1]], jnp.int32))
+    # overwrite re-counts from scratch below the clamp: exact again
+    back.update([0], jnp.asarray([[0, 1, -1, -1, -1, -1]], jnp.int32))
+    assert not back.head.saturated[list(back.head.ids[: back.head.size]).index(0)]
+    back.retract_rows([0], jnp.asarray([[0, -1, -1, -1, -1, -1]], jnp.int32))
+
+
 # ----------------------------------------------------- store surface parity
 def test_segmented_add_matches_sketchstore():
     """Same ``add`` surface: the counting head's packed view and fill cache
@@ -298,6 +355,64 @@ def test_ttl_expiry():
     assert store.expire(ttl=5.0, now=11.0) == 0  # idempotent
     store.compact()
     assert store.sealed == []  # the fully-tombstoned sealed batch is gone
+
+
+def test_lazy_ttl_expiry_before_sweep():
+    """With a store-level ttl, a doc older than ttl at query time never
+    appears in top-k — even though nobody has called expire() — across the
+    head, sealed segments, and the sharded path; the eager sweep then
+    changes nothing about query results."""
+    cfg, mapping, idx = _fixture()
+    store = SegmentedStore.create(cfg, mapping, ttl=5.0)
+    engine = SketchEngine(store, get_backend("oracle"))
+    engine.add(jnp.asarray(idx[:4]), now=0.0)   # sealed, old
+    engine.seal()
+    engine.add(jnp.asarray(idx[4:6]), now=0.0)  # head, old
+    engine.add(jnp.asarray(idx[6:10]), now=10.0)  # head, fresh
+    q = jnp.asarray(idx[:10])
+
+    # no `now`: the clock is off, everything retrievable (k covers all)
+    _, ids_all = engine.query(q, 10)
+    assert set(np.asarray(ids_all).ravel().tolist()) == set(range(10))
+
+    # now=11: docs born at 0 have aged out (0 + 5 <= 11) — masked lazily
+    sc, ids = engine.query(q, 10, now=11.0)
+    got = set(np.asarray(ids).ravel().tolist()) - {-1}
+    assert got == {6, 7, 8, 9}, got
+    assert store.size == 10  # still live bookkeeping-wise: no sweep ran
+
+    # the sharded path applies the same mask (k covers every live doc, so
+    # per-row id *sets* are shape-wobble-proof; scores stay allclose)
+    mesh = jax.make_mesh((1,), ("data",))
+    sc_s, ids_s = engine.query_sharded(mesh, "data", q, 10, now=11.0)
+    np.testing.assert_allclose(np.sort(np.asarray(sc), axis=1),
+                               np.sort(np.asarray(sc_s), axis=1),
+                               rtol=1e-5, atol=1e-6)
+    for r in range(np.asarray(ids).shape[0]):
+        assert set(np.asarray(ids)[r].tolist()) == set(np.asarray(ids_s)[r].tolist())
+
+    # the eager sweep reclaims space but cannot change what queries see
+    assert engine.expire(ttl=5.0, now=11.0) == 6
+    sc2, ids2 = engine.query(q, 10, now=11.0)
+    np.testing.assert_array_equal(np.asarray(ids), np.asarray(ids2))
+    np.testing.assert_allclose(np.asarray(sc), np.asarray(sc2),
+                               rtol=1e-5, atol=1e-6)
+    assert store.size == 4
+
+
+def test_ttl_survives_checkpoint(tmp_path):
+    from repro.checkpoint.manager import CheckpointManager
+
+    cfg, mapping, idx = _fixture()
+    store = SegmentedStore.create(cfg, mapping, ttl=7.5)
+    store.add(jnp.asarray(idx[:4]), now=1.0)
+    mgr = CheckpointManager(str(tmp_path))
+    store.save(mgr, step=2)
+    back = SegmentedStore.restore(mgr)
+    assert back.ttl == 7.5
+    engine = SketchEngine(back, get_backend("oracle"))
+    _, ids = engine.query(jnp.asarray(idx[:2]), 4, now=9.0)  # 1 + 7.5 <= 9
+    assert (np.asarray(ids) == -1).all()
 
 
 def test_merge_rows_preserves_born():
