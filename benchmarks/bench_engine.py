@@ -3,8 +3,10 @@ with the ingest-time fill cache on vs off, the fused streaming top-k
 vs the materialize-(Q,C)-then-``lax.top_k`` baseline across corpus sizes,
 the mutable-corpus lifecycle (ingest -> delete -> compact -> query)
 against a fresh batch rebuild — including what serving pays during a
-background compaction — and the segment-placed sharded path against the
-slice-every-segment baseline (per-query cross-device payload + QPS).
+background compaction — the segment-placed sharded path against the
+slice-every-segment baseline (per-query cross-device payload + QPS), and
+segment distillation (bytes/doc + recall@k before/after each width tier,
+background-fold launch + swap stalls).
 
     PYTHONPATH=src python -m benchmarks.bench_engine [--dataset tiny]
     PYTHONPATH=src python -m benchmarks.bench_engine --smoke   # CI parity gate
@@ -303,6 +305,88 @@ def run_mutate_cycle(dataset="tiny", backend="oracle", queries=32, topk=10,
     }
 
 
+def run_distill(dataset="tiny", backend="oracle", queries=32, topk=10,
+                seed=0, tiers=(2, 4)):
+    """Segment distillation (DESIGN.md §11): bytes/doc and recall@k before
+    and after each width tier, plus what serving pays for the background
+    fold (launch stall = snapshot-to-host, swap stall = the poll that
+    adopts the result).
+
+    ``tiers`` are divisors of the base width: tier ``t`` re-sketches every
+    sealed segment to ``N // t``. Recall is against exact Jaccard over the
+    survivors (the serve driver's ground truth), so the recorded delta per
+    tier is the real accuracy price of the memory saved."""
+    from repro.core import BinSketchConfig, make_mapping
+    from repro.data.synthetic import DATASETS, generate_corpus
+    from repro.engine import QueryPlanner, SketchEngine
+    from repro.launch.serve import exact_topk_jaccard
+
+    spec = DATASETS[dataset]
+    idx, lens = generate_corpus(spec, seed=seed)
+    n = idx.shape[0]
+    cfg = BinSketchConfig.from_sparsity(spec.d, int(lens.max()), 0.05)
+    mapping = make_mapping(cfg, jax.random.PRNGKey(0))
+    planner = QueryPlanner(min_batch=8, max_batch=max(queries, 8))
+    seal_rows = max(n // 4, 8)
+
+    engine = SketchEngine.build(cfg, mapping, backend=backend, planner=planner,
+                                capacity=n, mutable=True, seal_rows=seal_rows)
+    for s in range(0, n, seal_rows):
+        engine.add(jnp.asarray(idx[s : s + seal_rows]))
+    engine.seal()
+    rng = np.random.default_rng(seed + 3)
+    dele = np.sort(rng.choice(n, n // 16, replace=False))
+    engine.delete(dele.tolist())
+    surv = np.setdiff1d(np.arange(n), dele)
+
+    q_rows = idx[surv[rng.choice(len(surv), queries, replace=False)]]
+    q = jnp.asarray(q_rows)
+    truth_ids = surv[exact_topk_jaccard(idx[surv], q_rows, topk)]
+
+    def recall():
+        ids = np.asarray(engine.query(q, topk)[1])
+        hits = sum(len(set(ids[i].tolist()) & set(truth_ids[i].tolist()))
+                   for i in range(queries))
+        return hits / (queries * topk)
+
+    def bytes_per_doc():
+        store = engine.store
+        sealed = sum(
+            s.n_live * (((s.n_bins or cfg.n_bins) + 31) // 32) * 4
+            for s in store.sealed
+        )
+        return sealed / max(sum(s.n_live for s in store.sealed), 1)
+
+    out = {
+        "corpus_docs": int(n),
+        "n_bins_base": int(cfg.n_bins),
+        "bytes_per_doc_base": bytes_per_doc(),
+        "recall_base": recall(),
+        "tiers": [],
+    }
+    for t in tiers:
+        n_new = max(cfg.n_bins // int(t), 32)
+        t0 = time.perf_counter()
+        started = engine.distill(widths=(n_new,))  # background launch
+        t_launch = time.perf_counter() - t0
+        assert started
+        engine.store._compaction.job.result()  # join the off-thread fold
+        t0 = time.perf_counter()
+        engine.poll_compaction()  # the swap: the only serving stall
+        t_swap = time.perf_counter() - t0
+        bpd, rec = bytes_per_doc(), recall()
+        out["tiers"].append({
+            "n_bins": int(n_new),
+            "bytes_per_doc": bpd,
+            "bytes_per_doc_reduction": out["bytes_per_doc_base"] / bpd,
+            "recall": rec,
+            "recall_delta_vs_base": rec - out["recall_base"],
+            "distill_launch_ms": t_launch * 1e3,
+            "swap_stall_ms": t_swap * 1e3,
+        })
+    return out
+
+
 def run(dataset="tiny", backend="oracle", queries=64, topk=10, repeats=5,
         seed=0, sweep_sizes=(4096, 16384, 65536)):
     from repro.core import BinSketchConfig, make_mapping
@@ -375,6 +459,10 @@ def run(dataset="tiny", backend="oracle", queries=64, topk=10, repeats=5,
     result["placement"] = run_placement(
         dataset, backend=backend, queries=queries, topk=topk,
         repeats=max(2, repeats - 2), seed=seed,
+    )
+    result["distill"] = run_distill(
+        dataset, backend=backend, queries=min(queries, 32), topk=topk,
+        seed=seed,
     )
     return result
 
@@ -508,6 +596,14 @@ def main(argv=None):
               "payload_shrink"):
         if k in plc:
             print(f"placement_{k},{plc[k]:.2f}")
+    dst = result.get("distill", {})
+    for tier in dst.get("tiers", ()):
+        print(f"distill_bytes_reduction@N={tier['n_bins']},"
+              f"{tier['bytes_per_doc_reduction']:.2f}")
+        print(f"distill_recall_delta@N={tier['n_bins']},"
+              f"{tier['recall_delta_vs_base']:+.3f}")
+        print(f"distill_swap_stall_ms@N={tier['n_bins']},"
+              f"{tier['swap_stall_ms']:.1f}")
     print(f"# bench_engine done in {result['wall_s']:.1f}s -> {args.out}")
     return result
 

@@ -1,10 +1,16 @@
-"""Quickstart: the whole paper in ~60 lines.
+"""Quickstart: the whole paper in ~60 lines, then the serving engine.
 
     PYTHONPATH=src python examples/quickstart.py
 
-Sketches a synthetic BoW corpus with BinSketch (Definition 4), then
-estimates Inner-Product / Hamming / Jaccard / Cosine for document pairs
-from the SAME sketch (Algorithms 1-4) and compares against exact values.
+Part 1 (the paper): sketches a synthetic BoW corpus with BinSketch
+(Definition 4), then estimates Inner-Product / Hamming / Jaccard / Cosine
+for document pairs from the SAME sketch (Algorithms 1-4) and compares
+against exact values.
+
+Part 2 (the system, README.md's quickstart block): build a mutable corpus
+-> query it -> mutate it (delete / update, no rebuild) -> distill sealed
+segments to half sketch width (DESIGN.md §11) -> query the mixed-width
+corpus. CI runs this file, so the README snippet cannot rot.
 """
 
 import jax
@@ -12,7 +18,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import BinSketchConfig, estimators, make_mapping, sketch_indices, theorem1_N
-from repro.data.synthetic import DATASETS, generate_similar_pairs
+from repro.data.synthetic import DATASETS, generate_corpus, generate_similar_pairs
 
 
 def main():
@@ -48,5 +54,48 @@ def main():
     print("\n(each cell: estimated/true, averaged over 16 pairs — one sketch, four measures)")
 
 
+def lifecycle():
+    """README's build -> query -> mutate -> distill block, executable."""
+    from repro.engine import SketchEngine
+
+    spec = DATASETS["tiny"]
+    idx, lens = generate_corpus(spec, seed=0)  # (C, P) padded sparse rows
+    cfg = BinSketchConfig.from_sparsity(spec.d, int(lens.max()), rho=0.1)
+    mapping = make_mapping(cfg, jax.random.PRNGKey(0))
+    w_bytes = cfg.n_words * 4
+
+    # build -> query: mutable store (counting head + sealed segments).
+    # backend="oracle" keeps this demo fast on CPU; "auto" compiles the
+    # Pallas kernels on TPU and interprets them elsewhere.
+    eng = SketchEngine.build(cfg, mapping, jnp.asarray(idx),
+                             backend="oracle", mutable=True, seal_rows=64)
+    q = jnp.asarray(idx[:8])
+    scores, ids = eng.query(q, k=5)  # fused streaming top-k
+    print(f"\nbuilt mutable corpus: {eng.store.size} docs at N={cfg.n_bins} "
+          f"({w_bytes} B/doc); query top-1 ids {np.asarray(ids)[:4, 0]}")
+
+    # mutate: tombstones + in-place updates — no rebuild, ids stable
+    eng.delete([3, 17])
+    eng.update([5], jnp.asarray(idx[100:101]))
+    eng.seal()
+    eng.compact()
+    print(f"mutated: deleted 2, updated 1 -> {eng.store.size} live docs")
+
+    # distill: re-sketch the sealed segments to half width — memory traded
+    # for recall per segment, raw documents never touched (DESIGN.md §11)
+    n_half = cfg.n_bins // 2
+    stats = eng.distill(widths=(n_half,), background=False)
+    scores2, ids2 = eng.query(q, k=5)  # mixed-width serving, same API
+    kept = np.mean([
+        len(set(a) & set(b)) / 5
+        for a, b in zip(np.asarray(ids).tolist(), np.asarray(ids2).tolist())
+    ])
+    print(f"distilled {stats['rows_out']} rows to N'={n_half} "
+          f"({(n_half + 31) // 32 * 4} B/doc, was {w_bytes}); "
+          f"top-5 overlap with full width: {kept:.2f}")
+    assert (np.asarray(ids2)[:, 0] >= 0).all()
+
+
 if __name__ == "__main__":
     main()
+    lifecycle()

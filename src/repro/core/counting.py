@@ -11,15 +11,30 @@ structure) stores, per document, the **occupancy counter** of every bin
 instead of the OR bit ``a_s[j] = [c_s[j] > 0]``. Insertion of an element
 increments its bin, removal decrements it, and the binary sketch — the one
 every estimator and both scoring kernels consume, bit-for-bit unchanged —
-is recovered as ``c_s > 0`` at any moment. u16 counters suffice: a bin's
-occupancy is bounded by the document sparsity psi (<< 65535 for every
-regime the paper considers; saturating arithmetic guards the pathological
-rest).
+is recovered as ``c_s > 0`` at any moment.
+
+**The u16 saturation contract.** Counters are ``COUNTER_DTYPE`` (u16)
+because a bin's occupancy is bounded by the document sparsity psi
+(<< 65535 for every regime the paper considers). Arithmetic is
+*saturating*: an increment past ``COUNTER_MAX`` clamps, and the clamp is
+**sticky and one-way** — once a counter has saturated, the true occupancy
+is unrecoverable, so a later decrement would silently under-count and
+could clear a bin that still has live elements. The head segment
+(``repro.engine.segments._Head``) therefore tracks a per-row saturation
+flag and *refuses retraction* on saturated rows (``update`` — a full
+counter overwrite — is the recovery path and resets the flag). The binary
+sketch itself is never wrong under saturation: ``clamped > 0`` iff
+``true > 0``; only element-level retraction loses meaning.
 
 This module is the pure-jnp oracle; the batched Pallas compare-reduce
 construction lives in ``repro.kernels.count_update`` (dispatch via
 ``Backend.count``). The mutable head segment in
-``repro.engine.segments`` is the consumer.
+``repro.engine.segments`` is the consumer. :func:`fold_counters` is the
+counter half of the N→N' re-bucketing identity (the packed half is
+``packed.fold_packed``) — a consistency oracle: distillation itself only
+ever folds *sealed* packed slabs (the counting head is never distilled),
+so this function exists to state, and let the tests check, that the
+counter and packed folds commute with ``counters > 0``.
 """
 
 from __future__ import annotations
@@ -36,6 +51,7 @@ __all__ = [
     "counters_to_packed",
     "counter_fills",
     "dedup_padded",
+    "fold_counters",
     "packed_to_counters",
 ]
 
@@ -97,6 +113,32 @@ def counters_to_packed(counters: jax.Array) -> jax.Array:
 def counter_fills(counters: jax.Array) -> jax.Array:
     """Occupancy ``(B, N)`` -> fill counts |a_s| ``(B,)`` int32 (bins occupied)."""
     return jnp.sum((counters > 0).astype(jnp.int32), axis=-1)
+
+
+def fold_counters(counters: jax.Array, n_bins_new: int) -> jax.Array:
+    """Re-bucket occupancy rows ``(B, N)`` to ``(B, N')`` by saturating-add
+    folding bin ``j`` into ``j mod N'``.
+
+    The counter image of ``packed.fold_packed``: occupancy under the
+    derived mapping ``pi'(i) = pi(i) mod N'`` is the *sum* of the
+    occupancies of the source bins that alias, clamped into the u16
+    contract. ``fold_counters(c) > 0`` packs to exactly
+    ``fold_packed(counters_to_packed(c))`` — the property the tests
+    assert; serving itself folds only sealed packed slabs (see the
+    module docstring).
+    """
+    n_bins = int(counters.shape[-1])
+    if n_bins_new > n_bins:
+        raise ValueError(f"cannot fold {n_bins} bins up to {n_bins_new}")
+    if n_bins_new == n_bins:
+        return counters
+    n_chunks = -(-n_bins // n_bins_new)
+    pad = n_chunks * n_bins_new - n_bins
+    wide = counters.astype(jnp.int32)
+    if pad:
+        wide = jnp.pad(wide, [(0, 0)] * (wide.ndim - 1) + [(0, pad)])
+    folded = wide.reshape(wide.shape[:-1] + (n_chunks, n_bins_new)).sum(axis=-2)
+    return jnp.clip(folded, 0, COUNTER_MAX).astype(counters.dtype)
 
 
 def packed_to_counters(packed: jax.Array, n_bins: int) -> jax.Array:

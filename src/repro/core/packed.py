@@ -21,6 +21,7 @@ __all__ = [
     "popcount",
     "row_popcount",
     "and_popcount_pairwise",
+    "fold_packed",
     "or_rows",
     "segment_or",
 ]
@@ -118,6 +119,35 @@ def segment_or(
     return jnp.where(
         present.reshape((num_segments,) + (1,) * (data.ndim - 1)), out, 0
     ).astype(data.dtype)
+
+
+def fold_packed(
+    packed: jnp.ndarray, n_bins: int, n_bins_new: int
+) -> jnp.ndarray:
+    """Re-bucket packed sketches from width ``n_bins`` to ``n_bins_new`` by
+    OR-folding bin ``j`` into bin ``j mod n_bins_new``.
+
+    This is the sketch-space image of composing the Ψ-mapping with
+    ``mod n_bins_new``: ``fold(sketch_N(x)) == sketch_{N'}(x)`` where the
+    N'-sketch uses the *derived* mapping ``pi'(i) = pi(i) mod N'`` — bit
+    j' of the fold is set iff some j ≡ j' (mod N') was set, iff some
+    element maps to j' under pi'. OR is exactly the paper's bin
+    aggregation, so the folded row *is* a legitimate BinSketch at N' (the
+    accuracy consequence of the smaller N is Thm. 4.2's, nothing extra).
+    Pure-jnp oracle for the funnel-shift Pallas kernel in
+    ``repro.kernels.rebucket``.
+    """
+    if n_bins_new > n_bins:
+        raise ValueError(f"cannot fold {n_bins} bins up to {n_bins_new}")
+    if n_bins_new == n_bins:
+        return packed.astype(jnp.uint32)
+    bits = unpack_bits(packed, n_bins)
+    n_chunks = -(-n_bins // n_bins_new)
+    pad = n_chunks * n_bins_new - n_bins
+    if pad:
+        bits = jnp.pad(bits, [(0, 0)] * (bits.ndim - 1) + [(0, pad)])
+    folded = bits.reshape(bits.shape[:-1] + (n_chunks, n_bins_new)).max(axis=-2)
+    return pack_bits(folded)
 
 
 def or_rows(packed: jnp.ndarray, axis: int = 0) -> jnp.ndarray:

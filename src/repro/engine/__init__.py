@@ -3,11 +3,12 @@
 | piece | file | role |
 |---|---|---|
 | SketchStore | store.py | packed corpus, incremental OR-ingest, fill cache |
-| SegmentedStore | segments.py | mutable lifecycle: counting head, sealed segments, tombstones, (background) compaction, TTL |
-| SegmentPlacer | placement.py | segment-as-shard device placement for the sharded query path |
+| SegmentedStore | segments.py | mutable lifecycle: counting head, sealed segments, tombstones, (background) compaction, TTL, distillation |
+| DistillPolicy | segments.py | which sealed segments drop to which smaller sketch width, and when |
+| SegmentPlacer | placement.py | segment-as-shard device placement (per-width resident slabs) for the sharded query path |
 | Backend registry | backends.py | oracle / pallas / pallas-interpret behind one name |
 | QueryPlanner | planner.py | ragged batches -> bounded set of jit shapes |
-| SketchEngine | engine.py | build + query + sharded query on the pieces above |
+| SketchEngine | engine.py | build + query + sharded query (mixed-width) on the pieces above |
 
 ``core.index.SketchIndex`` is the deprecated batch-era front-end, kept as a
 thin shim over this package.
@@ -21,13 +22,14 @@ from .backends import (
     register_backend,
 )
 from .engine import SketchEngine, merge_segment_topk, shard_topk
-from .placement import SegmentPlacement, SegmentPlacer
+from .placement import SegmentPlacement, SegmentPlacer, WidthSlab
 from .planner import QueryChunk, QueryPlanner
-from .segments import SealedSegment, SegmentedStore
+from .segments import DistillPolicy, SealedSegment, SegmentedStore
 from .store import SegmentView, SketchStore
 
 __all__ = [
     "Backend",
+    "DistillPolicy",
     "QueryChunk",
     "QueryPlanner",
     "SealedSegment",
@@ -37,6 +39,7 @@ __all__ = [
     "SegmentedStore",
     "SketchEngine",
     "SketchStore",
+    "WidthSlab",
     "available_backends",
     "from_legacy_scorer",
     "get_backend",

@@ -100,6 +100,19 @@ class Backend(Protocol):
         """
         ...
 
+    def rebucket(
+        self, packed: jax.Array, n_bins: int, n_bins_new: int
+    ) -> jax.Array:
+        """Packed (B, W) rows at ``n_bins`` -> (B, W') rows at the smaller
+        ``n_bins_new``, OR-folding bin ``j`` into ``j mod n_bins_new``.
+
+        The sketch-space re-bucketing identity (DESIGN.md §11): the result
+        equals sketching the underlying sets under ``pi mod n_bins_new``,
+        so mixed-width serving re-sketches a query batch once per distinct
+        segment width from the base-width sketch alone.
+        """
+        ...
+
 
 def _masked_topk_merge(parts_s, parts_i, k):
     """Final merge of per-chunk (Q, k) top-k lists; -inf slots get id -1."""
@@ -153,6 +166,9 @@ class OracleBackend:
             parts_i.append(jnp.pad(ix + lo, pad, constant_values=-1))
         return _masked_topk_merge(parts_s, parts_i, k)
 
+    def rebucket(self, packed, n_bins, n_bins_new):
+        return pk.fold_packed(packed, n_bins, n_bins_new)
+
 
 class PallasBackend:
     """Pallas kernel path; ``interpret=None`` resolves per-platform."""
@@ -191,6 +207,13 @@ class PallasBackend:
             interpret=self.interpret,
         )
 
+    def rebucket(self, packed, n_bins, n_bins_new):
+        from ..kernels import ops
+
+        return ops.rebucket(
+            packed, int(n_bins), int(n_bins_new), interpret=self.interpret
+        )
+
 
 class _LegacyScorerBackend:
     """Adapter for the deprecated ``SketchIndex.scorer`` callable (sketching
@@ -224,6 +247,9 @@ class _LegacyScorerBackend:
         sc = jnp.pad(sc, pad, constant_values=-jnp.inf)
         ix = jnp.pad(ix, pad, constant_values=-1)
         return sc, jnp.where(jnp.isneginf(sc), -1, ix)
+
+    def rebucket(self, packed, n_bins, n_bins_new):
+        return self._oracle.rebucket(packed, n_bins, n_bins_new)
 
 
 _REGISTRY: Dict[str, Callable[[], Backend]] = {}

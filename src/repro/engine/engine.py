@@ -26,6 +26,12 @@ resident rows — one all-gather of O(k) rows per device, not one collective
 row-sharded path remains: the corpus is sliced across the mesh, padded
 with zero sketches whose slots are masked to -inf / -1 (no silent tail
 drop for non-divisible C).
+
+Serving is **mixed-width** (DESIGN.md §11): distilled segments live at a
+smaller sketch width N', and every query path re-buckets the query batch
+once per distinct resident width (``Backend.rebucket``, cached per plan)
+before streaming that width's slabs — the fold identity makes the folded
+queries exactly the N'-sketches of the raw queries.
 """
 
 from __future__ import annotations
@@ -43,7 +49,7 @@ from . import backends as backends_mod
 from .backends import Backend
 from .placement import SegmentPlacement, SegmentPlacer
 from .planner import QueryPlanner
-from .segments import SegmentedStore
+from .segments import DistillPolicy, SegmentedStore
 from .store import SegmentView, SketchStore
 
 __all__ = ["SketchEngine", "merge_segment_topk", "shard_topk"]
@@ -248,6 +254,39 @@ class SketchEngine:
         """Tombstone docs older than ``ttl``."""
         return self._mutable_store().expire(ttl, now)
 
+    def distill(
+        self,
+        policy: Optional[DistillPolicy] = None,
+        *,
+        widths=None,
+        now: float = 0.0,
+        background: bool = True,
+        _hold=None,
+    ):
+        """Re-sketch policy-eligible sealed segments to their next smaller
+        width tier (DESIGN.md §11) — memory traded for recall per segment.
+
+        ``policy`` (or the ``widths`` shorthand: an unconditional
+        :class:`~repro.engine.segments.DistillPolicy` over those tiers)
+        decides which segments drop. ``background=True`` (default) starts
+        the fold on the checkpoint-style worker thread and returns whether
+        a job started — serving continues on the old segments and the
+        query paths swap the result in the moment it is ready;
+        ``background=False`` additionally waits and returns the swap stats
+        (None if nothing was eligible). Queries after the swap are served
+        mixed-width automatically: the engine re-buckets each query batch
+        once per distinct resident width.
+        """
+        store = self._mutable_store()
+        if policy is None:
+            if widths is None:
+                raise ValueError("pass a DistillPolicy or widths=(N', ...)")
+            policy = DistillPolicy(widths=tuple(widths))
+        started = store.distill_async(policy, now=now, _hold=_hold)
+        if not background:
+            return store.wait_compaction() if started else None
+        return started
+
     # ----------------------------------------------------------------- query
     def _sketch_queries(self, query_idx: jax.Array) -> jax.Array:
         return self.backend.sketch(self.cfg, self.store.mapping, query_idx)
@@ -289,22 +328,51 @@ class SketchEngine:
             out.append(s[: chunk.rows])
         return jnp.concatenate(out, axis=0)
 
+    def _rebucket_queries(
+        self, qs: jax.Array, n_bins: int, cache: Optional[dict]
+    ) -> jax.Array:
+        """Base-width query sketches folded to ``n_bins``, computed once
+        per distinct width per plan (``cache``: width -> folded batch).
+
+        The §11 identity makes this exact: ``Backend.rebucket`` of the
+        base sketch equals sketching the raw query under the derived
+        mapping ``pi mod n_bins`` — the same construction a distilled
+        segment's rows went through — so no second pass over the query's
+        raw indices is ever needed."""
+        if n_bins == self.cfg.n_bins:
+            return qs
+        if cache is None:
+            return self.backend.rebucket(qs, self.cfg.n_bins, n_bins)
+        got = cache.get(n_bins)
+        if got is None:
+            got = cache[n_bins] = self.backend.rebucket(
+                qs, self.cfg.n_bins, n_bins
+            )
+        return got
+
     def _views_topk(
-        self, qs: jax.Array, views, k: int, *, use_fill_cache: bool = True
+        self, qs: jax.Array, views, k: int, *, use_fill_cache: bool = True,
+        width_cache: Optional[dict] = None,
     ) -> Tuple[jax.Array, jax.Array]:
         """Streaming top-k over a list of segment views + k-slot merge.
 
-        Each view runs ``Backend.topk`` (tombstones in as ``corpus_valid``,
-        fill cache in as ``corpus_fills``), local indices map to global doc
-        ids, and only the per-segment (Q, k) partials are merged — no
-        (Q, C) matrix, per segment or global, ever exists."""
+        Each view runs ``Backend.topk`` at the *view's* sketch width
+        (tombstones in as ``corpus_valid``, fill cache in as
+        ``corpus_fills``; distilled views score against the re-bucketed
+        query batch), local indices map to global doc ids, and only the
+        per-segment (Q, k) partials are merged — no (Q, C) matrix, per
+        segment or global, ever exists."""
         if not views:
             return (jnp.full((qs.shape[0], k), -jnp.inf, jnp.float32),
                     jnp.full((qs.shape[0], k), -1, jnp.int32))
+        if width_cache is None:
+            width_cache = {}
         parts_s, parts_i = [], []
         for v in views:
+            nb = v.n_bins if v.n_bins is not None else self.cfg.n_bins
             sc, ix = self.backend.topk(
-                qs, v.sketches, self.cfg.n_bins, self.measure, k,
+                self._rebucket_queries(qs, nb, width_cache),
+                v.sketches, nb, self.measure, k,
                 corpus_fills=v.fills if use_fill_cache else None,
                 corpus_valid=v.valid,
             )
@@ -388,7 +456,11 @@ class SketchEngine:
         if not views:
             return (jnp.full((qs.shape[0], k), -jnp.inf, jnp.float32),
                     jnp.full((qs.shape[0], k), -1, jnp.int32))
-        parts = [self._sharded_view_topk(mesh, axis, qs, v, k) for v in views]
+        cache: dict = {}
+        parts = [
+            self._sharded_view_topk(mesh, axis, qs, v, k, width_cache=cache)
+            for v in views
+        ]
         if len(parts) == 1:
             return parts[0]
         return merge_segment_topk([p[0] for p in parts], [p[1] for p in parts], k)
@@ -416,66 +488,64 @@ class SketchEngine:
     ) -> Tuple[jax.Array, jax.Array]:
         """Segment-placed sharded query body (see :meth:`query_sharded`).
 
-        Why this is exact (scores *and* ids): each device's resident slab is
+        One shard_map pass per resident sketch **width** (base + every
+        distilled tier): each device streams the fused top-k over its
+        width slab against the query batch re-bucketed to that width, and
+        the per-device (Q, k) partials are all-gathered. The head partial
+        (replicated — computed once, outside the mesh) and all width
+        partials then merge under the global (score desc, id asc)
+        tie-break.
+
+        Why this is exact (scores *and* ids): each device/width slab is
         merge-sorted by global id at placement build, so ``Backend.topk``'s
-        positional tie-break *is* the id tie-break locally — among ties each
-        device keeps the lowest-id candidates, which are the only ones the
-        global (score desc, id asc) merge could ever need; the global top-k
-        holds at most k docs of any one device, so the union of per-device
-        top-k lists (plus the replicated head partial) always contains it.
+        positional tie-break *is* the id tie-break locally — among ties
+        each slab keeps exactly the lowest-id candidates, which are the
+        only ones the global merge could ever need; the global top-k holds
+        at most k docs of any one slab shard, so the union of per-shard
+        top-k lists (plus the head partial) always contains it.
         """
         store: SegmentedStore = self.store
         placement = self._ensure_placement(mesh, axis)
         qs = self._sketch_queries(query_idx)
         hv = store.head_view(now)
-        if not any(placement.assign):
+        if not placement.slabs:
             # no sealed rows anywhere: the head is the whole corpus
             return self._views_topk(qs, [hv] if hv is not None else [], k)
-        valid = placement.valid_mask(store, now=now)
-        n_bins, measure, backend = self.cfg.n_bins, self.measure, self.backend
-        head_args, head_specs = (), ()
-        if hv is not None:
-            h_ids = (jnp.arange(hv.sketches.shape[0], dtype=jnp.int32)
-                     if hv.ids is None else hv.ids)
-            h_valid = (jnp.ones(hv.sketches.shape[0], jnp.int32)
-                       if hv.valid is None else hv.valid)
-            head_args = (hv.sketches, hv.fills, h_ids, h_valid)
-            head_specs = (P(), P(), P(), P())
+        measure, backend = self.measure, self.backend
+        cache: dict = {}
+        parts_s, parts_i = [], []
+        for slab in placement.slabs:
+            q_w = self._rebucket_queries(qs, slab.n_bins, cache)
+            valid = slab.valid_mask(store, now=now)
 
-        def local(q_rep, slab, fills, ids, vmask, *head):
-            sc, ix = backend.topk(
-                q_rep, slab, n_bins, measure, k,
-                corpus_fills=fills, corpus_valid=vmask,
+            def local(q_rep, sl, fills, ids, vmask, nb=slab.n_bins):
+                sc, ix = backend.topk(
+                    q_rep, sl, nb, measure, k,
+                    corpus_fills=fills, corpus_valid=vmask,
+                )
+                gids = jnp.where(ix >= 0, jnp.take(ids, jnp.maximum(ix, 0)), -1)
+                return (jax.lax.all_gather(sc, axis, axis=1, tiled=True),
+                        jax.lax.all_gather(gids, axis, axis=1, tiled=True))
+
+            fn = shard_map(
+                local,
+                mesh=mesh,
+                in_specs=(P(), P(axis, None), P(axis), P(axis), P(axis)),
+                out_specs=(P(), P()),
+                check_vma=False,
             )
-            gids = jnp.where(ix >= 0, jnp.take(ids, jnp.maximum(ix, 0)), -1)
-            sc_all = jax.lax.all_gather(sc, axis, axis=1, tiled=True)
-            ids_all = jax.lax.all_gather(gids, axis, axis=1, tiled=True)
-            if head:
-                h_sk, h_fl, h_id, h_va = head  # replicated: counted once
-                h_sc, h_ix = backend.topk(
-                    q_rep, h_sk, n_bins, measure, k,
-                    corpus_fills=h_fl, corpus_valid=h_va,
-                )
-                h_gids = jnp.where(
-                    h_ix >= 0, jnp.take(h_id, jnp.maximum(h_ix, 0)), -1
-                )
-                sc_all = jnp.concatenate([sc_all, h_sc], axis=1)
-                ids_all = jnp.concatenate([ids_all, h_gids], axis=1)
-            return merge_segment_topk([sc_all], [ids_all], k)
-
-        fn = shard_map(
-            local,
-            mesh=mesh,
-            in_specs=(P(), P(axis, None), P(axis), P(axis), P(axis))
-            + head_specs,
-            out_specs=(P(), P()),
-            check_vma=False,
-        )
-        return fn(qs, placement.sketches, placement.fills, placement.ids,
-                  valid, *head_args)
+            sc_all, ids_all = fn(q_w, slab.sketches, slab.fills, slab.ids, valid)
+            parts_s.append(sc_all)
+            parts_i.append(ids_all)
+        if hv is not None:  # replicated head: scored once, counted once
+            h_sc, h_ids = self._views_topk(qs, [hv], k, width_cache=cache)
+            parts_s.append(h_sc)
+            parts_i.append(h_ids)
+        return merge_segment_topk(parts_s, parts_i, k)
 
     def _sharded_view_topk(
-        self, mesh: Mesh, axis: str, qs: jax.Array, view: SegmentView, k: int
+        self, mesh: Mesh, axis: str, qs: jax.Array, view: SegmentView, k: int,
+        *, width_cache: Optional[dict] = None,
     ) -> Tuple[jax.Array, jax.Array]:
         c = int(view.sketches.shape[0])
         shards = mesh.shape[axis]
@@ -491,7 +561,9 @@ class SketchEngine:
         if c_pad > c:
             corpus = jnp.pad(corpus, ((0, c_pad - c), (0, 0)))
             fills = jnp.pad(fills, (0, c_pad - c))
-        n_bins, measure = self.cfg.n_bins, self.measure
+        n_bins = view.n_bins if view.n_bins is not None else self.cfg.n_bins
+        qs = self._rebucket_queries(qs, n_bins, width_cache)
+        measure = self.measure
         backend = self.backend  # same scoring path as the single-device query
 
         def local(q_rep, cand, cand_fills, cand_ids, cand_valid):

@@ -1,4 +1,4 @@
-"""SegmentPlacer — the segment is the unit of sharding (DESIGN.md §10).
+"""SegmentPlacer — the segment is the unit of sharding (DESIGN.md §10/§11).
 
 PR 1's sharded query path slices *every* segment across the full mesh: each
 segment — however small, however freshly born from a mutation — is padded
@@ -17,24 +17,33 @@ This module flips the layout: **whole segments are assigned to devices**.
   * The mutable head is *replicated*: it is small, churns on every
     mutation, and re-placing it per insert would dominate; every device
     scores the same head slab and the merge counts it once.
-  * Each device's resident rows are packed into one id-ascending local
-    slab, uploaded **once per placement epoch** with a
+  * Each device's resident rows are packed into **one id-ascending local
+    slab per sketch width**, uploaded once per placement epoch with a
     ``NamedSharding(mesh, P(axis))`` — queries move only the replicated
     query sketches in and O(k) partial rows per device out. No corpus
-    bytes cross devices at query time.
+    bytes cross devices at query time. Widths differ because distilled
+    segments (DESIGN.md §11) live at a smaller N'; rows of different
+    widths cannot share a slab, so the placement keeps one
+    :class:`WidthSlab` per distinct width and the engine streams the fused
+    top-k per (device, width), re-bucketing the query batch once per
+    width.
 
 Why id-ascending matters: ``Backend.topk`` breaks score ties toward the
-lower *local position*. With the device slab merge-sorted by global id,
-positional order == id order, so the device's local top-k keeps exactly
+lower *local position*. With each device/width slab merge-sorted by global
+id, positional order == id order, so the slab's local top-k keeps exactly
 the lowest-id candidates among ties — the same set the global
 (score desc, id asc) merge needs. That makes the placed sharded path
-bit-identical (scores *and* ids) to the single-device streaming path for
-any mutation history; the property tests assert it.
+equivalent (scores *and* ids, up to provable float ties) to the
+single-device streaming path for any mutation + distillation history; the
+property tests assert it.
 
-Tombstones and lazy TTL expiry do not move rows: the placement keeps
-host-side provenance ``(segment, row, born)`` per slab slot and refreshes
-only the device-side validity mask when the store's tombstone state (or
-the query-time ``now``) changes.
+**Valid-mask predicate.** Tombstones and lazy TTL expiry do not move rows:
+every slab keeps host-side provenance ``(segment, row, born)`` per slot
+and refreshes only the device-side validity mask when the store's
+tombstone epoch (or the query-time ``now``) changes. The mask is the
+same predicate every query view applies —
+``source row valid ∧ (ttl is None ∨ now is None ∨ born + ttl > now)`` —
+with pad slots (id -1) always invalid.
 """
 
 from __future__ import annotations
@@ -49,26 +58,25 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from ..parallel.sharding import shard_put
 
-__all__ = ["SegmentPlacement", "SegmentPlacer"]
+__all__ = ["SegmentPlacement", "SegmentPlacer", "WidthSlab"]
 
 
 @dataclasses.dataclass
-class SegmentPlacement:
-    """One frozen assignment of sealed segments to mesh devices.
+class WidthSlab:
+    """All resident rows of one sketch width, packed per device.
 
     ``sketches``/``fills``/``ids`` are (D·L, …) device arrays sharded along
-    ``axis`` (L = padded rows per device, pad slots id -1) and immutable
-    for the placement's lifetime; the validity mask is the only per-query-
-    time-varying piece and is rebuilt lazily from the host provenance via
-    :meth:`valid_mask`.
+    ``axis`` (L = padded rows per device at this width, pad slots id -1)
+    and immutable for the placement's lifetime; the validity mask is the
+    only per-query-time-varying piece and is rebuilt lazily from the host
+    provenance via :meth:`valid_mask`.
     """
 
     mesh: Mesh
     axis: str
-    assign: List[List[int]]  # device -> sealed segment indices at build time
+    n_bins: int  # sketch width of every row in this slab (base or a tier)
     n_local: int  # L: padded rows per device
-    layout_epoch: int  # store._layout_epoch this placement was built from
-    sketches: jax.Array  # (D*L, W) uint32, sharded P(axis, None)
+    sketches: jax.Array  # (D*L, W_w) uint32, sharded P(axis, None)
     fills: jax.Array  # (D*L,) int32, sharded P(axis)
     ids: jax.Array  # (D*L,) int32 global doc ids, -1 on pad slots
     src_seg: np.ndarray  # (D*L,) host: source sealed index, -1 on pad slots
@@ -78,16 +86,8 @@ class SegmentPlacement:
     _valid_dev: Optional[jax.Array] = dataclasses.field(default=None, init=False, repr=False)
 
     @property
-    def n_devices(self) -> int:
-        return int(self.mesh.shape[self.axis])
-
-    @property
     def n_slots(self) -> int:
         return int(self.src_seg.shape[0])
-
-    @property
-    def segments_per_device(self) -> int:
-        return max((len(g) for g in self.assign), default=0)
 
     def valid_mask(self, store, now: Optional[float] = None) -> jax.Array:
         """(D·L,) int32 sharded validity: tombstones ∧ lazy TTL, refreshed
@@ -116,13 +116,45 @@ class SegmentPlacement:
 
 
 @dataclasses.dataclass
+class SegmentPlacement:
+    """One frozen assignment of sealed segments to mesh devices.
+
+    ``assign`` is the per-device list of sealed-segment indices at build
+    time (all widths together — it feeds device-local compaction grouping,
+    which re-splits by width); ``slabs`` holds one :class:`WidthSlab` per
+    distinct resident sketch width, base width first then descending.
+    """
+
+    mesh: Mesh
+    axis: str
+    assign: List[List[int]]  # device -> sealed segment indices at build time
+    layout_epoch: int  # store._layout_epoch this placement was built from
+    slabs: List[WidthSlab]
+
+    @property
+    def n_devices(self) -> int:
+        return int(self.mesh.shape[self.axis])
+
+    @property
+    def segments_per_device(self) -> int:
+        return max((len(g) for g in self.assign), default=0)
+
+    @property
+    def widths(self) -> List[int]:
+        return [s.n_bins for s in self.slabs]
+
+
+@dataclasses.dataclass
 class SegmentPlacer:
     """Balanced whole-segment placement policy (LPT by live-row count)."""
 
     def place(self, store, mesh: Mesh, axis: str) -> SegmentPlacement:
         n_dev = int(mesh.shape[axis])
+        base = store.cfg.n_bins
         segs = [(i, s) for i, s in enumerate(store.sealed) if s.n_rows > 0]
-        # LPT: heaviest (by live rows) first, onto the lightest device
+        # LPT: heaviest (by live rows) first, onto the lightest device.
+        # Mixed widths share the device budget — a live row costs query
+        # work whatever its width, so the load metric stays row count.
         segs.sort(key=lambda t: (-t[1].n_live, t[0]))
         loads = [0] * n_dev
         assign: List[List[int]] = [[] for _ in range(n_dev)]
@@ -130,18 +162,49 @@ class SegmentPlacer:
             d = min(range(n_dev), key=lambda j: (loads[j], j))
             assign[d].append(i)
             loads[d] += seg.n_live
+        widths: List[int] = []
+        for _, seg in segs:  # base first, then tiers descending (§11 order)
+            w_s = seg.n_bins if seg.n_bins is not None else base
+            if w_s not in widths:
+                widths.append(w_s)
+        widths.sort(key=lambda w_s: (w_s != base, -w_s))
+        slabs = [
+            self._build_slab(store, mesh, axis, assign, w_s)
+            for w_s in widths
+        ]
+        return SegmentPlacement(
+            mesh=mesh,
+            axis=axis,
+            assign=assign,
+            layout_epoch=store._layout_epoch,
+            slabs=slabs,
+        )
+
+    def _build_slab(
+        self, store, mesh: Mesh, axis: str, assign, n_bins: int
+    ) -> WidthSlab:
+        """Pack every device's resident rows *of one width* into its local
+        id-ascending slab (see module docstring for why ascending)."""
+        base = store.cfg.n_bins
+        n_dev = len(assign)
+        groups = [
+            [i for i in g
+             if (store.sealed[i].n_bins or base) == n_bins
+             and store.sealed[i].n_rows > 0]
+            for g in assign
+        ]
         n_local = max(
-            (sum(store.sealed[i].n_rows for i in g) for g in assign), default=0
+            (sum(store.sealed[i].n_rows for i in g) for g in groups), default=0
         )
         n_local = max(n_local, 1)  # keep shard_map shapes non-degenerate
-        w = store.cfg.n_words
-        slabs, fill_rows, id_rows = [], [], []
+        w = (n_bins + 31) // 32
+        slab_rows, fill_rows, id_rows = [], [], []
         src_seg = np.full((n_dev, n_local), -1, np.int64)
         src_row = np.full((n_dev, n_local), -1, np.int64)
         born = np.zeros((n_dev, n_local), np.float64)
-        for d, group in enumerate(assign):
+        for d, group in enumerate(groups):
             if not group:
-                slabs.append(jnp.zeros((n_local, w), jnp.uint32))
+                slab_rows.append(jnp.zeros((n_local, w), jnp.uint32))
                 fill_rows.append(jnp.zeros((n_local,), jnp.int32))
                 id_rows.append(jnp.full((n_local,), -1, jnp.int32))
                 continue
@@ -159,7 +222,7 @@ class SegmentPlacer:
                 jnp.concatenate([store.sealed[i].fills for i in group], axis=0),
                 order_dev, axis=0,
             )
-            slabs.append(jnp.pad(sk, ((0, n_local - n), (0, 0))))
+            slab_rows.append(jnp.pad(sk, ((0, n_local - n), (0, 0))))
             fill_rows.append(jnp.pad(fl, (0, n_local - n)))
             id_rows.append(jnp.pad(
                 jnp.asarray(ids_c[order].astype(np.int32)),
@@ -174,14 +237,13 @@ class SegmentPlacer:
             born[d, :n] = np.concatenate(
                 [store.sealed[i].born for i in group]
             )[order]
-        return SegmentPlacement(
+        return WidthSlab(
             mesh=mesh,
             axis=axis,
-            assign=assign,
+            n_bins=n_bins,
             n_local=n_local,
-            layout_epoch=store._layout_epoch,
             sketches=shard_put(
-                jnp.concatenate(slabs, axis=0), mesh, P(axis, None)
+                jnp.concatenate(slab_rows, axis=0), mesh, P(axis, None)
             ),
             fills=shard_put(jnp.concatenate(fill_rows), mesh, P(axis)),
             ids=shard_put(jnp.concatenate(id_rows), mesh, P(axis)),

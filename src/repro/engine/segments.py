@@ -29,15 +29,46 @@ classic log-structured layout:
     compaction), and **lazily** at query time: with a store-level ``ttl``,
     passing ``now`` to the query path folds ``born + ttl <= now`` into the
     ``corpus_valid`` mask, so expired docs vanish from results without
-    anyone sweeping.
+    anyone sweeping;
+  * **distillation** (:meth:`SegmentedStore.distill_async`, DESIGN.md §11):
+    a background re-sketch of a sealed segment from the base width N to a
+    smaller N', trading recall for memory *per segment*. Because
+    re-bucketing composes in sketch space (bin ``j`` folds into
+    ``j mod N'`` — ``core.packed.fold_packed``), the fold runs over the
+    packed slab alone, never the raw documents; a :class:`DistillPolicy`
+    picks which segments drop to which width tier, and serving becomes
+    mixed-width (every :class:`~repro.engine.store.SegmentView` carries
+    its ``n_bins``).
 
-Global doc ids are assigned once at insert and survive seal and compaction
-(query results stay stable across lifecycle events). Updating a *sealed*
-doc relocates it into the head under its old id — rows inside every
-segment are kept ascending in id (the head re-sorts lazily), and the
-cross-segment merge in the engine breaks score ties toward the lower id,
-so an arbitrarily mutated store is query-identical to a fresh batch build
-over the surviving documents.
+**Invariants the rest of the stack leans on.**
+
+  * *Location map*: ``_loc[gid] == (segment, row)`` for exactly the live
+    documents — every mutation that kills a row removes (or repoints) its
+    entry *and* flips the row's validity in the same call, so "live" has
+    one definition. Background swaps (compaction *and* distillation)
+    reconcile against the **source tombstone bitmaps**, not ``_loc``: a
+    merged/folded row stays live iff its snapshot source row is still
+    valid, and a dead sealed row can never come back (ids are never
+    reused; relocation only tombstones) — mid-job casualties surface as
+    tombstones in the new segment, never as resurrected rows.
+  * *Valid-mask predicate*: a row is retrievable iff
+    ``valid[row] and (ttl is None or now is None or born[row] + ttl > now)``
+    — the same predicate, evaluated lazily by every query view and
+    eagerly by :meth:`SegmentedStore.expire`, so a doc on the TTL boundary
+    cannot be invisible to queries yet unreclaimable by the sweep.
+  * *u16 saturation*: head counters clamp at ``counting.COUNTER_MAX`` and
+    the clamp is sticky — retraction is refused on saturated rows (the
+    true occupancy is gone; ``update``'s overwrite is the recovery path).
+    See ``core.counting``'s module docstring for the full contract.
+
+Global doc ids are assigned once at insert and survive seal, compaction
+and distillation (query results stay stable across lifecycle events).
+Updating a *sealed* doc relocates it into the head under its old id —
+rows inside every segment are kept ascending in id (the head re-sorts
+lazily), and the cross-segment merge in the engine breaks score ties
+toward the lower id, so an arbitrarily mutated store is query-identical
+to a fresh batch build over the surviving documents (at each segment's
+own width).
 
 Snapshots ride the existing :class:`~repro.checkpoint.manager.CheckpointManager`
 (atomic, async, retention) — the store serializes to a pytree + aux dict
@@ -55,9 +86,10 @@ import numpy as np
 
 from ..checkpoint.manager import BackgroundJob
 from ..core import binsketch, counting
+from ..core import packed as pk
 from .store import SegmentView, _grow
 
-__all__ = ["SealedSegment", "SegmentedStore"]
+__all__ = ["DistillPolicy", "SealedSegment", "SegmentedStore"]
 
 _HEAD = -1  # segment index of the mutable head in the location map
 
@@ -75,6 +107,72 @@ def _grow_host(arr: np.ndarray, new_capacity: int) -> np.ndarray:
     out = np.zeros((new_capacity,) + arr.shape[1:], arr.dtype)
     out[: arr.shape[0]] = arr
     return out
+
+
+def _fold_packed_host(sk: np.ndarray, n_bins: int, n_bins_new: int):
+    """Numpy twin of ``core.packed.fold_packed`` + fill re-gather, for the
+    distillation worker thread (pure host math, no device dispatch that
+    could contend with serving). Returns ``(folded (n, W') uint32,
+    fills (n,) int32)``. Little-endian byte order assumed (bin ``j`` lives
+    at byte ``j // 8`` bit ``j % 8`` of the uint32-word row — true on
+    every platform this repo targets)."""
+    raw = np.ascontiguousarray(sk).view(np.uint8)
+    bits = np.unpackbits(raw, axis=1, bitorder="little")[:, :n_bins]
+    n_chunks = -(-n_bins // n_bins_new)
+    pad = n_chunks * n_bins_new - n_bins
+    if pad:
+        bits = np.pad(bits, ((0, 0), (0, pad)))
+    folded = bits.reshape(-1, n_chunks, n_bins_new).max(axis=1)
+    out = np.packbits(folded, axis=1, bitorder="little")
+    w_bytes = pk.num_words(n_bins_new) * 4
+    if out.shape[1] < w_bytes:
+        out = np.pad(out, ((0, 0), (0, w_bytes - out.shape[1])))
+    return (np.ascontiguousarray(out).view(np.uint32),
+            folded.sum(axis=1, dtype=np.int32))
+
+
+@dataclasses.dataclass(frozen=True)
+class DistillPolicy:
+    """Which sealed segments drop to which smaller sketch width, and when.
+
+    ``widths`` are the tiers (any order; applied descending): an eligible
+    segment at current width ``w`` is re-sketched to the *largest* tier
+    strictly below ``w`` — one tier per distillation pass, so a segment
+    walks down the ladder as it keeps qualifying. Eligibility is
+    age/size-tiered: a segment qualifies when its **youngest live row** is
+    at least ``min_age`` old (the whole segment is cold), or when its live
+    rows have dwindled to ``live_floor`` or fewer (mostly-dead segments
+    are cheap to shrink). With both thresholds ``None`` every sealed
+    segment is eligible — the explicit "distill now" call.
+    """
+
+    widths: Tuple[int, ...]
+    min_age: Optional[float] = None
+    live_floor: Optional[int] = None
+
+    def __post_init__(self):
+        if not self.widths or any(int(w) < 1 for w in self.widths):
+            raise ValueError(f"widths must be positive ints, got {self.widths}")
+        object.__setattr__(
+            self, "widths", tuple(sorted((int(w) for w in self.widths),
+                                         reverse=True))
+        )
+
+    def target_width(
+        self, n_bins_cur: int, age: float, n_live: int
+    ) -> Optional[int]:
+        """Next tier for a segment, or None if ineligible / already at the
+        bottom of the ladder."""
+        gated = self.min_age is not None or self.live_floor is not None
+        if gated and not (
+            (self.min_age is not None and age >= self.min_age)
+            or (self.live_floor is not None and n_live <= self.live_floor)
+        ):
+            return None
+        for w in self.widths:
+            if w < n_bins_cur:
+                return w
+        return None
 
 
 def _gather_live(parts):
@@ -111,13 +209,19 @@ def _gather_live(parts):
 
 @dataclasses.dataclass
 class SealedSegment:
-    """Immutable packed slab + tombstone bitmap; rows ascend in global id."""
+    """Immutable packed slab + tombstone bitmap; rows ascend in global id.
+
+    ``n_bins`` is None for a segment at the store's base sketch width and
+    the smaller width for a *distilled* segment — its ``sketches`` then
+    have ``num_words(n_bins)`` words per row and queries must be
+    re-bucketed to match (the engine does, via ``Backend.rebucket``)."""
 
     sketches: jax.Array  # (n, W) uint32
     fills: jax.Array  # (n,) int32
     ids: np.ndarray  # (n,) int64 global doc ids, ascending
     valid: np.ndarray  # (n,) bool — False = tombstoned
     born: np.ndarray  # (n,) float64 ingest timestamps
+    n_bins: Optional[int] = None  # sketch width; None = store base width
 
     def __post_init__(self):
         self._ids_dev: Optional[jax.Array] = None
@@ -167,7 +271,8 @@ class SealedSegment:
                     mask = jnp.asarray((self.valid & ~expired).astype(np.int32))
                     self._ttl_cache = ((now, ttl), mask)
                 return SegmentView(
-                    self.sketches, self.fills, ids_dev, self._ttl_cache[1]
+                    self.sketches, self.fills, ids_dev, self._ttl_cache[1],
+                    self.n_bins,
                 )
         if self._all_valid:
             valid_dev = None
@@ -175,7 +280,9 @@ class SealedSegment:
             valid_dev = self._valid_dev = jnp.asarray(self.valid.astype(np.int32))
         else:
             valid_dev = self._valid_dev
-        return SegmentView(self.sketches, self.fills, ids_dev, valid_dev)
+        return SegmentView(
+            self.sketches, self.fills, ids_dev, valid_dev, self.n_bins
+        )
 
 
 @dataclasses.dataclass
@@ -452,8 +559,28 @@ class SegmentedStore:
                           h.ids[: h.size], h.valid[: h.size], h.born[: h.size]))
         return parts
 
+    def _assert_base_width(self, what: str) -> None:
+        # n_live, not n_rows: a fully-tombstoned distilled segment
+        # contributes nothing to a live-row gather and is no hazard
+        off = [i for i, s in enumerate(self.sealed)
+               if s.n_bins is not None and s.n_live > 0]
+        if off:
+            raise ValueError(
+                f"{what} needs every row at the base width N={self.cfg.n_bins},"
+                f" but sealed segment(s) {off} are distilled to a smaller N'"
+                " (the fold is lossy; rows cannot be widened back). Use the"
+                " engine's mixed-width query path, or update()/delete() the"
+                " docs instead."
+            )
+
     def live(self) -> Tuple[jax.Array, jax.Array, np.ndarray]:
-        """(sketches (L, W), fills (L,), ids (L,) int64) of live docs, id-ordered."""
+        """(sketches (L, W), fills (L,), ids (L,) int64) of live docs, id-ordered.
+
+        Base-width only: a store holding distilled segments has no common
+        row width to concatenate — the analysis surfaces built on this
+        (``score_all``, ``merge``) raise rather than mix widths silently.
+        """
+        self._assert_base_width("live()")
         got = _gather_live(self._parts())
         if got is None:
             return (jnp.zeros((0, self.cfg.n_words), jnp.uint32),
@@ -568,6 +695,14 @@ class SegmentedStore:
         locs = [self._locate(gid) for gid in doc_ids]
         by_seg: Dict[int, Tuple[list, list]] = {}
         for i, (seg_i, row) in enumerate(locs):
+            if seg_i != _HEAD and self.sealed[seg_i].n_bins is not None:
+                raise ValueError(
+                    f"doc {int(doc_ids[i])} lives in a distilled segment "
+                    f"(width {self.sealed[seg_i].n_bins} < base "
+                    f"{self.cfg.n_bins}); its base-width bits are gone, so "
+                    "merge_rows/merge cannot grow it — use update() for a "
+                    "full replacement"
+                )
             by_seg.setdefault(seg_i, ([], []))[0].append(i)
             by_seg[seg_i][1].append(row)
         parts, order = [], []
@@ -790,32 +925,50 @@ class SegmentedStore:
         self._layout_epoch += 1
         return seg
 
+    def _widths_present(self) -> List[Optional[int]]:
+        """Distinct sealed sketch widths, base (None) first then descending
+        — the deterministic group order compaction and placement share."""
+        seen = {s.n_bins for s in self.sealed}
+        return [w for w in (None, *sorted(
+            (x for x in seen if x is not None), reverse=True)) if w in seen]
+
     def compact(self) -> Dict[str, int]:
-        """Merge every sealed segment into one, dropping tombstoned rows and
-        re-gathering the fill caches; rows come out merge-sorted by global
-        id. The head is untouched (seal first for a full major compaction).
-        Synchronous — serving waits; see :meth:`compact_async` for the
-        background (and per-device) variant."""
+        """Merge sealed segments, dropping tombstoned rows and re-gathering
+        the fill caches; rows come out merge-sorted by global id. Segments
+        merge **per sketch width** (a distilled N' slab cannot concatenate
+        with a base-N one), so a mixed-width store compacts to one segment
+        per width tier. The head is untouched (seal first for a full major
+        compaction). Synchronous — serving waits; see :meth:`compact_async`
+        for the background (and per-device) variant."""
         self.wait_compaction()  # never two compactions over the same slabs
         stats = {
             "segments_in": len(self.sealed),
             "rows_in": sum(s.n_rows for s in self.sealed),
             "rows_out": 0,
-            "groups": 1 if self.sealed else 0,
+            "groups": 0,
         }
         if not self.sealed:
             return stats
-        got = _gather_live(self._parts(head=False))
+        new_sealed: List[SealedSegment] = []
+        for width in self._widths_present():
+            stats["groups"] += 1
+            parts = [
+                (seg.sketches, seg.fills, seg.ids, seg.valid, seg.born)
+                for seg in self.sealed if seg.n_bins == width
+            ]
+            got = _gather_live(parts)
+            if got is None:
+                continue
+            sk, fl, ids, born = got
+            new_sealed.append(SealedSegment(
+                sk, fl, ids, np.ones(len(ids), bool), born, n_bins=width
+            ))
         self._layout_epoch += 1
-        if got is None:
-            self.sealed = []
-            return stats
-        sk, fl, ids, born = got
-        seg = SealedSegment(sk, fl, ids, np.ones(len(ids), bool), born)
-        self.sealed = [seg]
-        for row, gid in enumerate(seg.ids):
-            self._loc[int(gid)] = (0, row)
-        stats["rows_out"] = seg.n_rows
+        self.sealed = new_sealed
+        for seg_i, seg in enumerate(self.sealed):
+            for row, gid in enumerate(seg.ids):
+                self._loc[int(gid)] = (seg_i, row)
+            stats["rows_out"] += seg.n_rows
         return stats
 
     # ------------------------------------------------- background compaction
@@ -848,11 +1001,14 @@ class SegmentedStore:
         into one output segment — pass a placement's per-device assignment
         (``SegmentPlacement.assign``) for **device-local** compaction: every
         device's resident set merges into one segment that stays on that
-        device at the next placement. Default: one global group. Groups of
-        one tombstone-free segment are skipped (nothing to reclaim). Returns
-        False if there was nothing to do. ``_hold`` (test seam) is an event
-        the worker waits on before returning, pinning the job in the
-        "running" state so interleavings can be exercised deterministically.
+        device at the next placement. Default: one global group. Groups are
+        split by sketch width first (a device holding both base-N and
+        distilled-N' residents merges each tier separately — the slabs
+        cannot concatenate); groups of one tombstone-free segment are
+        skipped (nothing to reclaim). Returns False if there was nothing
+        to do. ``_hold`` (test seam) is an event the worker waits on before
+        returning, pinning the job in the "running" state so interleavings
+        can be exercised deterministically.
         """
         self.wait_compaction()
         if groups is None:
@@ -868,8 +1024,14 @@ class SegmentedStore:
                         "segments (a placement from a stale layout epoch?)"
                     )
                 seen.add(i)
+        by_width: List[List[int]] = []
+        for g in groups:
+            tiers: Dict[Optional[int], List[int]] = {}
+            for i in g:
+                tiers.setdefault(self.sealed[i].n_bins, []).append(i)
+            by_width.extend(tiers.values())
         groups = [
-            g for g in groups
+            g for g in by_width
             if g and not (len(g) == 1 and self.sealed[g[0]]._all_valid)
         ]
         if not groups:
@@ -887,11 +1049,11 @@ class SegmentedStore:
                 )
                 for s in segs
             ]
-            snap.append((group, parts))
+            snap.append((group, parts, segs[0].n_bins))
 
         def work():
             out = []
-            for group, parts in snap:
+            for group, parts, width in snap:
                 sk, fl, ids, valid, born, src_seg, src_row = (
                     [], [], [], [], [], [], [],
                 )
@@ -909,6 +1071,7 @@ class SegmentedStore:
                 order = np.argsort(ids_c, kind="stable")
                 out.append({
                     "group": group,
+                    "n_bins": width,
                     "rows_in": sum(len(p[2]) for p in parts),
                     "sketches": np.concatenate(sk, axis=0)[order],
                     "fills": np.concatenate(fl)[order],
@@ -923,6 +1086,79 @@ class SegmentedStore:
 
         self._compaction = _CompactionJob(
             BackgroundJob(work), [self.sealed[i] for g in groups for i in g]
+        )
+        return True
+
+    # ------------------------------------------------ background distillation
+    def distill_async(
+        self,
+        policy: DistillPolicy,
+        *,
+        now: float = 0.0,
+        _hold=None,
+    ) -> bool:
+        """Re-sketch policy-eligible sealed segments to their next smaller
+        width tier, off-thread, and atomically swap them in — trading
+        memory for recall **per segment** (DESIGN.md §11).
+
+        A distillation is a compaction whose merge step also re-buckets:
+        the same checkpoint-thread pattern as :meth:`compact_async`
+        (snapshot-to-host → work off-thread → swap with tombstone
+        reconciliation on the caller's thread via :meth:`poll_compaction` /
+        :meth:`wait_compaction`), with the off-thread work being *drop dead
+        rows, OR-fold N→N' (``j -> j mod N'``), re-gather fill counts* —
+        pure host math over the snapshot, never the raw documents. Each
+        eligible segment folds independently (no cross-segment merge: the
+        inputs may sit at different tiers), tombstones that land mid-fold
+        reconcile exactly like mid-merge deletes, and the swap bumps the
+        layout epoch so placements rebuild with the new widths. Returns
+        False when no segment is eligible.
+        """
+        self.wait_compaction()  # one background job over the slabs at a time
+        base = self.cfg.n_bins
+        plan: List[Tuple[int, int]] = []
+        for i, seg in enumerate(self.sealed):
+            if seg.n_live == 0:
+                continue
+            cur = seg.n_bins if seg.n_bins is not None else base
+            age = float(now) - float(seg.born[seg.valid].max())
+            tgt = policy.target_width(cur, age, seg.n_live)
+            if tgt is not None and tgt < cur:
+                plan.append((i, tgt))
+        if not plan:
+            return False
+        snap = []
+        for i, tgt in plan:
+            seg = self.sealed[i]
+            cur = seg.n_bins if seg.n_bins is not None else base
+            snap.append((
+                i, cur, tgt,
+                np.asarray(jax.device_get(seg.sketches)),
+                seg.ids.copy(), seg.valid.copy(), seg.born.copy(),
+            ))
+
+        def work():
+            out = []
+            for i, cur, tgt, sk, ids, valid, born in snap:
+                keep = np.nonzero(valid)[0]  # ids ascend within one segment:
+                folded, fills = _fold_packed_host(sk[keep], cur, tgt)
+                out.append({  # keep-order == id order, no re-sort needed
+                    "group": [i],
+                    "n_bins": tgt,
+                    "rows_in": len(ids),
+                    "sketches": folded,
+                    "fills": fills,
+                    "ids": ids[keep],
+                    "born": born[keep],
+                    "src_seg": np.full(len(keep), i, np.int64),
+                    "src_row": keep.astype(np.int64),
+                })
+            if _hold is not None:
+                _hold.wait()
+            return out
+
+        self._compaction = _CompactionJob(
+            BackgroundJob(work), [self.sealed[i] for i, _ in plan]
         )
         return True
 
@@ -988,6 +1224,7 @@ class SegmentedStore:
                 r["ids"],
                 live,
                 r["born"],
+                n_bins=r.get("n_bins"),
             ))
             stats["rows_out"] += n
         new_sealed.extend(s for s in self.sealed if id(s) not in replaced)
@@ -1063,6 +1300,9 @@ class SegmentedStore:
             "ttl": self.ttl,
             "head_rows": int(h.size),
             "sealed_rows": [s.n_rows for s in self.sealed],
+            # per-segment sketch width (null = base): a distilled corpus
+            # cold-restores mixed-width — shapes below depend on this
+            "sealed_n_bins": [s.n_bins for s in self.sealed],
             "head_born": h.born[: h.size].tolist(),
             "sealed_born": [s.born.tolist() for s in self.sealed],
         }
@@ -1083,6 +1323,8 @@ class SegmentedStore:
         cfg = binsketch.BinSketchConfig(**aux["cfg"])
         w, n = cfg.n_words, cfg.n_bins
         hr = int(aux["head_rows"])
+        # pre-distillation checkpoints have no width manifest: all base
+        seg_widths = aux.get("sealed_n_bins") or [None] * len(aux["sealed_rows"])
         map_shape = (cfg.d,) if cfg.mode == "table" else (2,)
         map_dtype = jnp.int32 if cfg.mode == "table" else jnp.uint32
         target = {
@@ -1098,12 +1340,14 @@ class SegmentedStore:
             },
             "sealed": [
                 {
-                    "sketches": jnp.zeros((r, w), jnp.uint32),
+                    "sketches": jnp.zeros(
+                        (r, pk.num_words(nb) if nb else w), jnp.uint32
+                    ),
                     "fills": jnp.zeros((r,), jnp.int32),
                     "ids": np.zeros((r,), np.int64),
                     "valid": np.zeros((r,), bool),
                 }
-                for r in aux["sealed_rows"]
+                for r, nb in zip(aux["sealed_rows"], seg_widths)
             ],
         }
         tree, _ = manager.restore(step, target)
@@ -1121,7 +1365,7 @@ class SegmentedStore:
         h.exact[:hr] = np.asarray(ht["exact"])
         h.sat_dev = h.sat_dev.at[:hr].set(jnp.asarray(ht["saturated"]))
         h.size = hr
-        for st, born in zip(tree["sealed"], aux["sealed_born"]):
+        for st, born, nb in zip(tree["sealed"], aux["sealed_born"], seg_widths):
             store.sealed.append(SealedSegment(
                 sketches=st["sketches"].astype(jnp.uint32),
                 fills=st["fills"].astype(jnp.int32),
@@ -1130,6 +1374,7 @@ class SegmentedStore:
                 ids=np.array(st["ids"], np.int64),
                 valid=np.array(st["valid"], bool),
                 born=np.asarray(born, np.float64),
+                n_bins=int(nb) if nb else None,
             ))
         for seg_i, seg in enumerate(store.sealed):
             for row in np.nonzero(seg.valid)[0]:

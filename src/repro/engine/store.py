@@ -38,12 +38,16 @@ class SegmentView(NamedTuple):
     index *is* the doc id; a ``SegmentedStore`` yields one view per sealed
     segment plus the mutable head. ``ids is None`` means identity mapping;
     ``valid is None`` means no tombstones (all rows retrievable).
+    ``n_bins is None`` means the store's base sketch width; a *distilled*
+    segment (DESIGN.md §11) carries its smaller width here, and the engine
+    re-buckets the query sketches to match before scoring the view.
     """
 
     sketches: jax.Array  # (n, W) uint32 packed rows
     fills: jax.Array  # (n,) int32 ingest-time fill cache
     ids: Optional[jax.Array]  # (n,) int32 global doc ids, or None
     valid: Optional[jax.Array]  # (n,) int32/bool tombstone mask, or None
+    n_bins: Optional[int] = None  # sketch width, or None = store base width
 
 
 def _grow(arr: jax.Array, new_capacity: int) -> jax.Array:

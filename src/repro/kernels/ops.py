@@ -14,10 +14,17 @@ import jax
 import jax.numpy as jnp
 
 from ..core import packed as pk
-from . import count_update, hash_build, popcount_sim, sketch_build, topk_stream
+from . import (
+    count_update,
+    hash_build,
+    popcount_sim,
+    rebucket as rebucket_mod,
+    sketch_build,
+    topk_stream,
+)
 
-__all__ = ["build_sketch", "count_bins", "hash_build_sketch", "sketch_score",
-           "sketch_topk", "score_counts"]
+__all__ = ["build_sketch", "count_bins", "hash_build_sketch", "rebucket",
+           "sketch_score", "sketch_topk", "score_counts"]
 
 
 def _interpret_default() -> bool:
@@ -135,6 +142,53 @@ def hash_build_sketch(
         interpret=interpret,
     )
     return out[:bsz, :n_words]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_bins", "n_bins_new", "block_rows", "interpret")
+)
+def rebucket(
+    packed: jax.Array,
+    n_bins: int,
+    n_bins_new: int,
+    *,
+    block_rows: int = 8,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Packed (B, W) sketches at ``n_bins`` -> (B, W') sketches at the
+    smaller ``n_bins_new``, OR-folding bin ``j`` into ``j mod n_bins_new``.
+
+    The sketch-space re-bucketing identity behind segment distillation
+    (DESIGN.md §11): the result equals sketching the raw documents under
+    the derived mapping ``pi'(i) = pi(i) mod n_bins_new`` — so a query
+    sketched once at the base width serves every distilled width via this
+    op, never via a second pass over the query's raw indices. Source pad
+    bits (>= n_bins in the last word) are zeroed here defensively; fill
+    counts of folded rows change and must be re-popcounted by the caller.
+    """
+    if interpret is None:
+        interpret = _interpret_default()
+    if packed.dtype != jnp.uint32:
+        raise TypeError(f"packed sketches must be uint32, got {packed.dtype}")
+    if not 1 <= n_bins_new <= n_bins:
+        raise ValueError(f"need 1 <= n_bins_new <= n_bins, got {n_bins_new} vs {n_bins}")
+    if n_bins_new == n_bins:
+        return packed
+    bsz, w = packed.shape
+    if n_bins % 32:
+        packed = packed.at[:, -1].set(
+            packed[:, -1] & jnp.uint32((1 << (n_bins % 32)) - 1)
+        )
+    w_new = pk.num_words(n_bins_new)
+    n_chunks = -(-n_bins // n_bins_new)
+    w_need = ((n_chunks - 1) * n_bins_new) // 32 + w_new + 1
+    src = _pad_to(packed, 0, block_rows, 0)
+    if w_need > w:
+        src = jnp.pad(src, ((0, 0), (0, w_need - w)))
+    out = rebucket_mod.rebucket_kernel(
+        src, n_bins, n_bins_new, block_rows=block_rows, interpret=interpret
+    )
+    return out[:bsz]
 
 
 @functools.partial(

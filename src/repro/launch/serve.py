@@ -94,6 +94,15 @@ def main(argv=None):
                     help="mutable store: lazy TTL (in ingest-batch ticks) — "
                          "docs older than this at serve time drop out of "
                          "results via the query-time mask, no sweep")
+    ap.add_argument("--distill", default=None, metavar="N1,N2,...",
+                    help="mutable store: after the mutation phase, distill "
+                         "sealed segments down the given width tiers "
+                         "(DESIGN.md §11) and serve mixed-width; recall is "
+                         "then the distilled corpus's recall")
+    ap.add_argument("--distill-age", type=float, default=None,
+                    help="only distill segments whose youngest live doc is "
+                         "at least this many ticks old (default: all sealed "
+                         "segments are eligible)")
     ap.add_argument("--check-recall", action="store_true", default=True)
     args = ap.parse_args(argv)
 
@@ -104,7 +113,8 @@ def main(argv=None):
     spec = DATASETS[args.dataset]
     idx, lens = generate_corpus(spec, seed=0)
     n = idx.shape[0]
-    mutable = args.mutate_rate > 0.0 or args.ttl is not None
+    mutable = (args.mutate_rate > 0.0 or args.ttl is not None
+               or args.distill is not None)
     print(f"corpus: {n} docs, d={spec.d}, psi={spec.max_nnz}"
           + (f", mutate-rate={args.mutate_rate}" if mutable else ""))
 
@@ -183,6 +193,32 @@ def main(argv=None):
               f"{compacted} in {t_mut:.2f}s "
               f"({n_mut / max(t_mut, 1e-9):.0f} mutations/s); "
               f"live={engine.store.size}")
+
+        if args.distill:
+            from repro.engine import DistillPolicy
+
+            widths = tuple(int(w) for w in args.distill.split(",") if w)
+            policy = DistillPolicy(widths=widths, min_age=args.distill_age)
+            t0 = time.time()
+            n_tiers = 0  # one pass per tier: segments walk down the ladder;
+            # distill() returns swap stats (truthy) per pass, False once
+            # nothing is eligible anymore
+            while engine.distill(policy, now=float(tick), background=False):
+                n_tiers += 1
+            t_dist = time.time() - t0
+            store = engine.store
+            by_w = {}
+            live_bytes = sealed_live = 0
+            for seg in store.sealed:
+                w = seg.n_bins or cfg.n_bins
+                by_w[w] = by_w.get(w, 0) + 1
+                live_bytes += seg.n_live * ((w + 31) // 32) * 4
+                sealed_live += seg.n_live
+            print(f"distill: {n_tiers} tier pass(es) in {t_dist:.2f}s -> "
+                  f"segments by width {sorted(by_w.items(), reverse=True)}, "
+                  f"{live_bytes / max(sealed_live, 1):.1f} B/doc over "
+                  f"{sealed_live} sealed docs (base width: "
+                  f"{cfg.n_words * 4} B/doc); serving is mixed-width from here")
 
         serve_now = float(tick + 1)
         if args.ttl is not None:  # lazily expired docs leave the catalog too

@@ -1,0 +1,322 @@
+"""Segment distillation (DESIGN.md §11): the N→N' re-bucketing fold, the
+DistillPolicy tiering, background distill with mid-job mutations, the
+query-parity property against a fresh N' build, mixed-width placed serving,
+and checkpoint→cold-restore of a mixed-width corpus."""
+
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import BinSketchConfig, make_mapping
+from repro.core import counting, packed as pk
+from repro.core.binsketch import sketch_indices
+from repro.data.synthetic import DATASETS, generate_corpus
+from repro.engine import DistillPolicy, SegmentedStore, SketchEngine, get_backend
+from repro.engine.testing import assert_topk_equivalent, topk_truth
+from repro.kernels import ops
+
+SPEC = DATASETS["tiny"]
+
+
+def _fixture(seed=0, rho=0.05):
+    idx, lens = generate_corpus(SPEC, seed=seed)
+    cfg = BinSketchConfig.from_sparsity(SPEC.d, int(lens.max()), rho)
+    mapping = make_mapping(cfg, jax.random.PRNGKey(0))
+    return cfg, mapping, idx
+
+
+def _sealed_engine(cfg, mapping, idx, n=96, seal_rows=24, backend="oracle"):
+    eng = SketchEngine.build(cfg, mapping, backend=backend, mutable=True,
+                             seal_rows=seal_rows)
+    for s in range(0, n, seal_rows):
+        eng.add(jnp.asarray(idx[s : s + seal_rows]))
+    return eng
+
+
+# ------------------------------------------------------------ rebucket op
+def test_fold_matches_derived_mapping_sketch():
+    """The fold identity: fold(sketch_N(x)) == sketch_{N'}(x) under the
+    derived mapping pi' = pi mod N' — for awkward non-divisible widths."""
+    cfg, mapping, idx = _fixture()
+    rows = jnp.asarray(idx[:17])
+    sk = sketch_indices(cfg, mapping, rows)
+    for n_new in (cfg.n_bins // 2, cfg.n_bins // 3 + 1, 65, 32, 7):
+        cfg2 = BinSketchConfig(d=cfg.d, n_bins=n_new)
+        want = sketch_indices(cfg2, mapping % n_new, rows)
+        np.testing.assert_array_equal(
+            np.asarray(pk.fold_packed(sk, cfg.n_bins, n_new)),
+            np.asarray(want), err_msg=f"N'={n_new}",
+        )
+
+
+def test_rebucket_kernel_matches_oracle():
+    """Pallas funnel-shift fold == pure-jnp fold, random bits, both via the
+    backend dispatch and raw ops."""
+    rng = np.random.default_rng(3)
+    be = get_backend("pallas-interpret")
+    for n_bins, n_new in [(512, 256), (512, 100), (101, 33), (300, 7),
+                          (96, 96), (33, 32)]:
+        w = pk.num_words(n_bins)
+        x = jnp.asarray(
+            rng.integers(0, 2**32, (13, w), dtype=np.uint64).astype(np.uint32)
+        )
+        if n_bins % 32:  # stores keep pad bits zero; match that contract
+            x = x.at[:, -1].set(x[:, -1] & np.uint32((1 << (n_bins % 32)) - 1))
+        want = np.asarray(pk.fold_packed(x, n_bins, n_new))
+        np.testing.assert_array_equal(
+            np.asarray(be.rebucket(x, n_bins, n_new)), want,
+            err_msg=f"{n_bins}->{n_new}",
+        )
+        np.testing.assert_array_equal(
+            np.asarray(ops.rebucket(x, n_bins, n_new, interpret=True)), want,
+        )
+
+
+def test_fold_counters_consistent_with_fold_packed():
+    cfg, mapping, idx = _fixture()
+    cnt = counting.count_indices_dense(cfg, mapping, jnp.asarray(idx[:9]))
+    sk = counting.counters_to_packed(cnt.astype(counting.COUNTER_DTYPE))
+    for n_new in (150, 64):
+        fc = counting.fold_counters(cnt.astype(counting.COUNTER_DTYPE), n_new)
+        np.testing.assert_array_equal(
+            np.asarray(counting.counters_to_packed(fc)),
+            np.asarray(pk.fold_packed(sk, cfg.n_bins, n_new)),
+        )
+    # saturating: folding many saturated bins together clamps, not wraps
+    big = jnp.full((2, 8), counting.COUNTER_MAX, counting.COUNTER_DTYPE)
+    out = counting.fold_counters(big, 2)
+    assert int(np.asarray(out).max()) == counting.COUNTER_MAX
+
+
+def test_rebucket_rejects_widening():
+    with pytest.raises(ValueError):
+        pk.fold_packed(jnp.zeros((2, 2), jnp.uint32), 64, 128)
+    with pytest.raises(ValueError, match="n_bins_new"):
+        ops.rebucket(jnp.zeros((2, 2), jnp.uint32), 64, 128, interpret=True)
+
+
+# ---------------------------------------------------------------- policy
+def test_distill_policy_tiering():
+    p = DistillPolicy(widths=(128, 256), min_age=10.0, live_floor=4)
+    assert p.widths == (256, 128)  # normalized descending
+    # age-eligible: next tier strictly below the current width
+    assert p.target_width(512, age=10.0, n_live=100) == 256
+    assert p.target_width(256, age=12.0, n_live=100) == 128
+    assert p.target_width(128, age=99.0, n_live=100) is None  # ladder bottom
+    # ineligible: young and well-populated
+    assert p.target_width(512, age=9.9, n_live=100) is None
+    # size-eligible even when young
+    assert p.target_width(512, age=0.0, n_live=4) == 256
+    # ungated policy: everything eligible
+    assert DistillPolicy(widths=(64,)).target_width(512, 0.0, 10**6) == 64
+    with pytest.raises(ValueError):
+        DistillPolicy(widths=())
+
+
+def test_distill_policy_drives_store(monkeypatch=None):
+    """Age/size tiering end to end: only the old (or nearly-dead) segments
+    drop a tier; the others stay at base width."""
+    cfg, mapping, idx = _fixture()
+    store = SegmentedStore.create(cfg, mapping)
+    store.add(jnp.asarray(idx[:24]), now=0.0)   # old segment
+    store.seal()
+    store.add(jnp.asarray(idx[24:48]), now=50.0)  # young segment
+    store.seal()
+    store.add(jnp.asarray(idx[48:72]), now=50.0)  # young but nearly dead
+    store.seal()
+    store.delete(list(range(48, 70)))  # 2 live rows left in segment 2
+    n_new = cfg.n_bins // 2
+    policy = DistillPolicy(widths=(n_new,), min_age=30.0, live_floor=4)
+    assert store.distill_async(policy, now=60.0) is True
+    store.wait_compaction()
+    widths = [s.n_bins for s in store.sealed]
+    assert sorted(w for w in widths if w) == [n_new, n_new]
+    assert widths.count(None) == 1  # the young, populated one survived
+
+
+# ------------------------------------------------------- parity property
+def test_distilled_queries_equal_fresh_build_at_narrow_width():
+    """The acceptance property: distill(N→N') over a mutated store is
+    query-identical (scores AND ids, all 4 measures, oracle +
+    pallas-interpret) to a fresh batch build at N' (derived mapping) over
+    the surviving documents."""
+    cfg, mapping, idx = _fixture()
+    n_new = cfg.n_bins // 2
+    for backend in ("oracle", "pallas-interpret"):
+        eng = _sealed_engine(cfg, mapping, idx, backend=backend)
+        contents = {i: idx[i] for i in range(96)}
+        eng.delete([3, 30, 70])
+        for g in (3, 30, 70):
+            contents.pop(g)
+        eng.update([50], jnp.asarray(idx[200:201]))  # sealed -> head
+        contents[50] = idx[200]
+        eng.seal()  # head back into sealed so *everything* distills
+        stats = eng.distill(widths=(n_new,), background=False)
+        assert stats is not None and stats["rows_out"] == len(contents)
+        assert all(s.n_bins == n_new for s in eng.store.sealed)
+
+        surv = np.asarray(sorted(contents))
+        cfg2 = BinSketchConfig(d=cfg.d, n_bins=n_new)
+        fresh = SketchEngine.build(
+            cfg2, mapping % n_new,
+            jnp.asarray(np.stack([contents[int(g)] for g in surv])),
+            backend=backend,
+        )
+        q = jnp.asarray(idx[100:108])
+        truth = topk_truth(fresh, q, id_map=surv)
+        for measure in ("jaccard", "ip", "cosine", "hamming"):
+            eng.measure = fresh.measure = measure
+            sc_m, id_m = eng.query(q, 5)
+            sc_f, id_f = fresh.query(q, 5)
+            id_f = np.where(np.asarray(id_f) >= 0,
+                            surv[np.maximum(np.asarray(id_f), 0)], -1)
+            assert_topk_equivalent((sc_m, id_m), (sc_f, id_f), truth=truth,
+                                   err_msg=f"{backend}/{measure}")
+
+
+def test_mixed_width_serving_all_paths_agree():
+    """Distill only *some* segments: single-device, placed sharded, and
+    legacy sliced sharded paths all agree on the mixed-width store, and
+    the placement builds one slab per width."""
+    cfg, mapping, idx = _fixture()
+    eng = _sealed_engine(cfg, mapping, idx)
+    eng.delete([5, 40])
+    n_new = cfg.n_bins // 2
+    # distill the two oldest segments only (ids 0..47), leave 48..95 at base
+    policy = DistillPolicy(widths=(n_new,), min_age=0.5)
+    store = eng.store
+    for seg in store.sealed[2:]:
+        seg.born[:] = 1.0  # young
+    assert store.distill_async(policy, now=1.0) is True
+    store.wait_compaction()
+    assert [s.n_bins for s in store.sealed].count(n_new) == 2
+    eng.add(jnp.asarray(idx[96:104]))  # plus a live head
+
+    q = jnp.asarray(idx[10:18])
+    mesh = jax.make_mesh((1,), ("data",))
+    sc1, id1 = eng.query(q, 6)
+    sc2, id2 = eng.query_sharded(mesh, "data", q, 6)
+    assert_topk_equivalent((sc2, id2), (sc1, id1))
+    assert sorted(eng._placement.widths, reverse=True) == [cfg.n_bins, n_new]
+    sc3, id3 = eng.query_sharded(mesh, "data", q, 6, use_placement=False)
+    assert_topk_equivalent((sc3, id3), (sc1, id1))
+
+
+# ------------------------------------------------- background + mutations
+def test_mid_distill_mutations_never_resurrected():
+    """The held-job pattern from test_placement: queries keep answering from
+    the old segments while the fold runs; deletes and relocating updates
+    that land mid-fold come out of the swap as tombstones."""
+    cfg, mapping, idx = _fixture()
+    eng = _sealed_engine(cfg, mapping, idx)
+    eng.delete([2, 40])
+    q = jnp.asarray(idx[10:16])
+    sc_before, id_before = eng.query(q, 5)
+    n_new = cfg.n_bins // 2
+
+    hold = threading.Event()
+    assert eng.distill(widths=(n_new,), _hold=hold) is True
+    n_seg = len(eng.store.sealed)
+    # serving during the fold: old widths, identical answers, no swap
+    sc_mid, id_mid = eng.query(q, 5)
+    np.testing.assert_array_equal(np.asarray(id_before), np.asarray(id_mid))
+    assert all(s.n_bins is None for s in eng.store.sealed)
+    # mutations during the fold
+    eng.delete([10, 77])
+    eng.update([33], jnp.asarray(idx[210:211]))  # sealed -> head mid-fold
+    hold.set()
+    stats = eng.wait_compaction()
+    assert stats["groups"] == n_seg  # one fold per segment, no cross-merge
+    assert all(s.n_bins == n_new for s in eng.store.sealed)
+
+    contents = {i: idx[i] for i in range(96)}
+    for g in (2, 40, 10, 77):
+        contents.pop(g)
+    contents[33] = idx[210]
+    live = {int(g) for g in eng.store._loc}
+    assert live == set(contents)  # 10/77 dead, 33 relocated (head), no ghosts
+    sc, ids = eng.query(q, 5)
+    got = set(np.asarray(ids).ravel().tolist()) - {-1}
+    assert got <= set(contents), "resurrected a mid-distill casualty"
+    # and the mid-fold tombstones are reclaimed by the next compaction
+    stats2 = eng.compact()
+    assert stats2["rows_out"] == sum(
+        1 for g in contents if g < 96 and g != 33
+    )
+
+
+def test_distill_then_lifecycle_keeps_working():
+    """After distillation the store still deletes/updates/seals/compacts;
+    merge_rows on a distilled doc is refused loudly (fold is lossy)."""
+    cfg, mapping, idx = _fixture()
+    eng = _sealed_engine(cfg, mapping, idx, n=48)
+    n_new = cfg.n_bins // 2
+    eng.distill(widths=(n_new,), background=False)
+    eng.delete([1])
+    eng.update([2], jnp.asarray(idx[60:61]))  # distilled -> head relocation
+    with pytest.raises(ValueError, match="distilled"):
+        eng.merge_rows([3], jnp.asarray(idx[61:62]))
+    with pytest.raises(ValueError, match="base width"):
+        eng.store.live()
+    eng.seal()
+    stats = eng.compact()  # one group per width tier
+    assert stats["groups"] == 2
+    widths = sorted((s.n_bins or cfg.n_bins) for s in eng.store.sealed)
+    assert widths == [n_new, cfg.n_bins]
+    sc, ids = eng.query(jnp.asarray(idx[5:9]), 4)
+    assert (np.asarray(ids)[:, 0] >= 0).all()
+
+
+def test_distill_skips_when_nothing_eligible():
+    cfg, mapping, idx = _fixture()
+    eng = _sealed_engine(cfg, mapping, idx, n=24, seal_rows=24)
+    n_new = cfg.n_bins // 2
+    # too young for the age gate, too populated for the floor
+    policy = DistillPolicy(widths=(n_new,), min_age=100.0, live_floor=1)
+    assert eng.store.distill_async(policy, now=0.0) is False
+    # already at the bottom tier: a second pass is a no-op
+    assert eng.distill(widths=(n_new,), background=False) is not None
+    assert eng.store.distill_async(DistillPolicy(widths=(n_new,))) is False
+
+
+# ------------------------------------------------------------ checkpoint
+def test_checkpoint_cold_restore_mixed_width(tmp_path):
+    """A mixed-width corpus round-trips through the checkpoint: per-segment
+    widths ride the aux manifest, restored slabs have the narrow shapes,
+    and queries answer identically post-restore."""
+    from repro.checkpoint.manager import CheckpointManager
+
+    cfg, mapping, idx = _fixture()
+    eng = _sealed_engine(cfg, mapping, idx)
+    eng.delete([7, 33])
+    n_new = cfg.n_bins // 2
+    store = eng.store
+    for seg in store.sealed[2:]:
+        seg.born[:] = 1.0
+    store.distill_async(DistillPolicy(widths=(n_new,), min_age=0.5), now=1.0)
+    store.wait_compaction()
+    eng.add(jnp.asarray(idx[96:100]))  # mutable head rides along
+
+    q = jnp.asarray(idx[20:26])
+    sc_pre, id_pre = eng.query(q, 5)
+
+    mgr = CheckpointManager(str(tmp_path))
+    store.save(mgr, step=1)
+    back = SegmentedStore.restore(mgr)
+    assert [s.n_bins for s in back.sealed] == [s.n_bins for s in store.sealed]
+    assert all(
+        int(s.sketches.shape[1]) == pk.num_words(s.n_bins or cfg.n_bins)
+        for s in back.sealed
+    )
+    eng2 = SketchEngine(back, get_backend("oracle"))
+    sc_post, id_post = eng2.query(q, 5)
+    np.testing.assert_array_equal(np.asarray(id_pre), np.asarray(id_post))
+    np.testing.assert_allclose(np.asarray(sc_pre), np.asarray(sc_post),
+                               rtol=1e-5, atol=1e-6)
+    # the restored store keeps distilling (the ladder continues)
+    assert back.distill_async(DistillPolicy(widths=(n_new // 2,))) is True
+    back.wait_compaction()
+    assert all(s.n_bins == n_new // 2 for s in back.sealed)

@@ -53,14 +53,16 @@ def test_placement_slab_invariants():
     mesh = jax.make_mesh((1,), ("data",))
     p = SegmentPlacer().place(store, mesh, "data")
     assert sum(len(g) for g in p.assign) == len(store.sealed)
-    ids = np.asarray(p.ids)
+    assert p.widths == [cfg.n_bins]  # undistilled: one base-width slab
+    slab = p.slabs[0]
+    ids = np.asarray(slab.ids)
     real = ids >= 0
     assert (np.diff(ids[real]) > 0).all()  # id-ascending (per the 1 device)
     for j in np.nonzero(real)[0]:
-        seg = store.sealed[int(p.src_seg[j])]
-        assert int(seg.ids[int(p.src_row[j])]) == int(ids[j])
+        seg = store.sealed[int(slab.src_seg[j])]
+        assert int(seg.ids[int(slab.src_row[j])]) == int(ids[j])
     # tombstones + relocation land in the mask without re-uploading slabs
-    valid = np.asarray(p.valid_mask(store))
+    valid = np.asarray(slab.valid_mask(store))
     dead = {3, 30, 50, 70}
     for j in np.nonzero(real)[0]:
         assert bool(valid[j]) == (int(ids[j]) not in dead)
