@@ -21,6 +21,8 @@ __all__ = [
     "popcount",
     "row_popcount",
     "and_popcount_pairwise",
+    "band_hash",
+    "band_hash_host",
     "fold_packed",
     "or_rows",
     "segment_or",
@@ -148,6 +150,73 @@ def fold_packed(
         bits = jnp.pad(bits, [(0, 0)] * (bits.ndim - 1) + [(0, pad)])
     folded = bits.reshape(bits.shape[:-1] + (n_chunks, n_bins_new)).max(axis=-2)
     return pack_bits(folded)
+
+
+_BAND_SEED = 0x9E3779B9  # golden-ratio odd constant; per-band seeds derive from it
+_BAND_PRIME = 0x85EBCA6B  # murmur3 fmix multiplier — full-period odd uint32
+
+
+def band_hash(packed: jnp.ndarray, n_bands: int) -> jnp.ndarray:
+    """Hash contiguous word groups of packed (B, W) rows -> (B, n_bands) uint32.
+
+    Band ``t`` covers words ``[t*wpb, (t+1)*wpb)`` with ``wpb = ceil(W /
+    n_bands)`` and mixes them with a seeded xorshift-multiply chain:
+
+        h = seed(t);  for each word: h = (h ^ word) * PRIME; h ^= h >> 15
+
+    Two rows collide on band ``t`` iff they agree on that whole word group
+    (up to negligible 2^-32 hash collisions) — the LSH banding scheme over
+    sketch content (DESIGN.md §12). All arithmetic is uint32 wraparound, so
+    the jnp / numpy (:func:`band_hash_host`) / Pallas
+    (``kernels.band_hash``) implementations agree bit-for-bit.
+
+    ``n_bands`` is clamped to W: bands past the last word would hash zero
+    words (constant key = one giant bucket), so the effective band count is
+    ``ceil(W / wpb)`` and callers should size indexes off the output shape.
+    """
+    bsz, w = packed.shape
+    n_bands = max(1, min(int(n_bands), w))
+    wpb = -(-w // n_bands)
+    nb_eff = -(-w // wpb)
+    pad = nb_eff * wpb - w
+    if pad:
+        packed = jnp.pad(packed, ((0, 0), (0, pad)))
+    grp = packed.reshape(bsz, nb_eff, wpb).astype(jnp.uint32)
+    seeds = (
+        jnp.uint32(_BAND_SEED)
+        * (jnp.arange(nb_eff, dtype=jnp.uint32) + jnp.uint32(1))
+    ).reshape(1, nb_eff)
+    h = seeds
+    for t in range(wpb):
+        h = (h ^ grp[:, :, t]) * jnp.uint32(_BAND_PRIME)
+        h = h ^ (h >> jnp.uint32(15))
+    return h.astype(jnp.uint32)
+
+
+def band_hash_host(packed, n_bands: int):
+    """Numpy twin of :func:`band_hash` for host-side index construction
+    (``engine.banding.BandIndex``) — identical bit-for-bit output."""
+    import numpy as np
+
+    packed = np.asarray(packed, dtype=np.uint32)
+    bsz, w = packed.shape
+    n_bands = max(1, min(int(n_bands), w))
+    wpb = -(-w // n_bands)
+    nb_eff = -(-w // wpb)
+    pad = nb_eff * wpb - w
+    if pad:
+        packed = np.pad(packed, ((0, 0), (0, pad)))
+    grp = packed.reshape(bsz, nb_eff, wpb)
+    seeds = (
+        np.uint32(_BAND_SEED)
+        * (np.arange(nb_eff, dtype=np.uint32) + np.uint32(1))
+    ).reshape(1, nb_eff)
+    with np.errstate(over="ignore"):
+        h = np.broadcast_to(seeds, (bsz, nb_eff)).copy()
+        for t in range(wpb):
+            h = (h ^ grp[:, :, t]) * np.uint32(_BAND_PRIME)
+            h ^= h >> np.uint32(15)
+    return h
 
 
 def or_rows(packed: jnp.ndarray, axis: int = 0) -> jnp.ndarray:

@@ -6,6 +6,7 @@
 | SegmentedStore | segments.py | mutable lifecycle: counting head, sealed segments, tombstones, (background) compaction, TTL, distillation |
 | DistillPolicy | segments.py | which sealed segments drop to which smaller sketch width, and when |
 | SegmentPlacer | placement.py | segment-as-shard device placement (per-width resident slabs) for the sharded query path |
+| BandPolicy / BandIndex | banding.py | banded LSH prefilter: per-segment bucket index over packed sketch words |
 | Backend registry | backends.py | oracle / pallas / pallas-interpret behind one name |
 | QueryPlanner | planner.py | ragged batches -> bounded set of jit shapes |
 | SketchEngine | engine.py | build + query + sharded query (mixed-width) on the pieces above |
@@ -14,6 +15,7 @@
 thin shim over this package.
 """
 
+from .banding import BandIndex, BandPolicy
 from .backends import (
     Backend,
     available_backends,
@@ -29,6 +31,8 @@ from .store import SegmentView, SketchStore
 
 __all__ = [
     "Backend",
+    "BandIndex",
+    "BandPolicy",
     "DistillPolicy",
     "QueryChunk",
     "QueryPlanner",

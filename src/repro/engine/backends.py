@@ -113,6 +113,16 @@ class Backend(Protocol):
         """
         ...
 
+    def band_hash(self, packed: jax.Array, n_bands: int) -> jax.Array:
+        """Packed (B, W) rows -> (B, nb_eff) uint32 LSH band keys.
+
+        Band ``t`` hashes words ``[t*wpb, (t+1)*wpb)`` (``wpb = ceil(W /
+        n_bands)``); two rows collide on a band iff that word group is
+        identical. Feeds the banded prefilter's bucket index (DESIGN.md
+        §12). ``n_bands`` clamps to W — callers size off the output shape.
+        """
+        ...
+
 
 def _masked_topk_merge(parts_s, parts_i, k):
     """Final merge of per-chunk (Q, k) top-k lists; -inf slots get id -1."""
@@ -124,10 +134,23 @@ def _masked_topk_merge(parts_s, parts_i, k):
 
 
 class OracleBackend:
-    """Pure-jnp reference path (also the body used inside shard_map)."""
+    """Pure-jnp reference path (also the body used inside shard_map).
+
+    ``topk_crossover``: below this corpus-row count :meth:`topk` skips the
+    chunked streaming merge and runs one materialize + ``lax.top_k`` — at
+    small C the merge bookkeeping is pure overhead (measured on a quiet
+    single-core host: materialize 1.07–1.15x faster at 256–2048 rows,
+    dead even at 4096, then the chunked arm wins 1.4x at 8192 and >3x
+    from 16384 up) while the (Q, C) transient is still tiny. Identical
+    results either way (chunk order preserves global index order, so the
+    tie-break already matches a full ``lax.top_k``). Override
+    per-instance: ``be.topk_crossover = 0`` forces the streaming path
+    everywhere.
+    """
 
     name = "oracle"
     topk_chunk = 4096  # corpus rows scored per chunk in the streaming top-k
+    topk_crossover = 4096  # below: materialize + one top_k, no chunk merge
 
     def sketch(self, cfg, mapping, idx):
         return binsketch.sketch_indices(cfg, mapping, idx)
@@ -151,6 +174,17 @@ class OracleBackend:
             return (jnp.full((nq, k), -jnp.inf, jnp.float32),
                     jnp.full((nq, k), -1, jnp.int32))
         qf = q_fills if q_fills is not None else pk.row_popcount(q)
+        if c < self.topk_crossover:
+            s = self.score(q, corpus, n_bins, measure,
+                           q_fills=qf, corpus_fills=corpus_fills)
+            if corpus_valid is not None:
+                s = jnp.where(corpus_valid[None, :] != 0, s, -jnp.inf)
+            kk = min(int(k), c)
+            sc, ix = jax.lax.top_k(s, kk)
+            pad = ((0, 0), (0, int(k) - kk))
+            sc = jnp.pad(sc, pad, constant_values=-jnp.inf)
+            ix = jnp.pad(ix, pad, constant_values=-1)
+            return sc, jnp.where(jnp.isneginf(sc), -1, ix)
         parts_s, parts_i = [], []
         for lo in range(0, c, self.topk_chunk):
             hi = min(lo + self.topk_chunk, c)
@@ -169,9 +203,28 @@ class OracleBackend:
     def rebucket(self, packed, n_bins, n_bins_new):
         return pk.fold_packed(packed, n_bins, n_bins_new)
 
+    def band_hash(self, packed, n_bands):
+        return pk.band_hash(packed, n_bands)
+
 
 class PallasBackend:
-    """Pallas kernel path; ``interpret=None`` resolves per-platform."""
+    """Pallas kernel path; ``interpret=None`` resolves per-platform.
+
+    ``topk_crossover``: below this corpus-row count the fused streaming
+    kernel's sort-network overhead loses to a plain materialize +
+    ``lax.top_k`` (BENCH_engine topk_sweep: fused speedup 0.93 at 4096
+    rows, >1.25 from 16384 up), so :meth:`topk` auto-selects the
+    materialize path for ``C < topk_crossover``. In **interpret mode**
+    the crossover inverts entirely — emulation cost scales with the fused
+    kernel's grid, and the materialize composition wins 4–240x at every
+    size — so whenever the effective interpret flag is set, auto routing
+    takes the materialize path regardless of C. Both paths share the
+    score epilogue and the (score desc, id asc) tie-break, so results are
+    identical. Override per-instance (``be.topk_crossover = 0`` forces the
+    fused kernel everywhere, interpret included, e.g. for kernel tests).
+    """
+
+    topk_crossover = 8192
 
     def __init__(self, name: str, interpret: Optional[bool]):
         self.name = name
@@ -201,6 +254,26 @@ class PallasBackend:
              corpus_fills=None, corpus_valid=None):
         from ..kernels import ops
 
+        c = corpus.shape[0]
+        interp = (ops._interpret_default() if self.interpret is None
+                  else self.interpret)
+        if 0 < c and (c < self.topk_crossover
+                      or (interp and self.topk_crossover > 0)):
+            # materialize path: one (Q, C) score tile + lax.top_k — faster
+            # than the streaming sort network on small corpora and at every
+            # size under interpret-mode emulation; identical results (same
+            # epilogue, same lowest-id tie-break). topk_crossover = 0 still
+            # forces the fused kernel (kernel tests).
+            s = self.score(q, corpus, n_bins, measure,
+                           q_fills=q_fills, corpus_fills=corpus_fills)
+            if corpus_valid is not None:
+                s = jnp.where(corpus_valid[None, :] != 0, s, -jnp.inf)
+            kk = min(int(k), c)
+            sc, ix = jax.lax.top_k(s, kk)
+            pad = ((0, 0), (0, int(k) - kk))
+            sc = jnp.pad(sc, pad, constant_values=-jnp.inf)
+            ix = jnp.pad(ix, pad, constant_values=-1)
+            return sc, jnp.where(jnp.isneginf(sc), -1, ix)
         return ops.sketch_topk(
             q, corpus, n_bins=n_bins, measure=measure, k=int(k),
             a_fills=q_fills, b_fills=corpus_fills, b_valid=corpus_valid,
@@ -213,6 +286,11 @@ class PallasBackend:
         return ops.rebucket(
             packed, int(n_bins), int(n_bins_new), interpret=self.interpret
         )
+
+    def band_hash(self, packed, n_bands):
+        from ..kernels import ops
+
+        return ops.band_hash(packed, int(n_bands), interpret=self.interpret)
 
 
 class _LegacyScorerBackend:
@@ -250,6 +328,9 @@ class _LegacyScorerBackend:
 
     def rebucket(self, packed, n_bins, n_bins_new):
         return self._oracle.rebucket(packed, n_bins, n_bins_new)
+
+    def band_hash(self, packed, n_bands):
+        return self._oracle.band_hash(packed, n_bands)
 
 
 _REGISTRY: Dict[str, Callable[[], Backend]] = {}

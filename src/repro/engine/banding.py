@@ -1,0 +1,162 @@
+"""Banded LSH prefilter over packed sketch words (DESIGN.md §12).
+
+Every query path before this module scores O(C) rows per segment — cheap
+per row (PR 2's fused streaming top-k) and parallel (PR 4's placement),
+but still linear in the corpus. BinSketch's packed words are already
+hash-like signatures of the underlying set, so the classic LSH banding
+trick applies *to the sketch itself*: split the W packed words into
+``n_bands`` groups of contiguous words, hash each group to one uint32 key
+(``core.packed.band_hash`` — jnp oracle, numpy host twin, Pallas kernel,
+bit-identical), and bucket rows by key per band. Two rows land in the
+same bucket of band ``t`` iff they agree on *every bin* of that word
+group; near-duplicate docs agree on most words, so they collide on most
+bands, while unrelated docs collide only by 2^-32 hash accident or by
+genuinely sharing a whole word group (e.g. an all-zero stretch of bins —
+weak but real agreement). A query then scores only the union of its
+colliding buckets: O(|candidates|), not O(C).
+
+The recall trade-off is explicit (§12 math): a doc survives the prefilter
+iff it matches the query on at least one whole band. With per-bin
+disagreement probability p and ``wpb = ceil(W / n_bands)`` words per
+band, one band matches with probability ``(1-p)^(32·wpb)`` — more bands
+(fewer words each) = higher recall and bigger candidate sets; fewer bands
+= sharper filter, more misses. The escape hatch caps the downside: when
+the candidate union exceeds ``max_candidate_frac`` of the segment, the
+segment falls back to the exhaustive scan (identical results, by
+construction, to a store with no index at all).
+
+:class:`BandIndex` is a host-side CSR inverted index per band — built
+once per sealed segment (at seal / compaction-swap / distillation-swap;
+rebuilt from the slab at checkpoint restore, never serialized) and
+immutable afterwards. Tombstones do **not** touch it: dead rows stay in
+their buckets and are dropped from the candidate list at query time
+against the segment's live bitmap — the same lazy predicate every
+exhaustive view applies, so a stale bucket can never resurrect a deleted
+doc.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import numpy as np
+
+from ..core import packed as pk
+
+__all__ = ["BandPolicy", "BandIndex"]
+
+
+@dataclasses.dataclass(frozen=True)
+class BandPolicy:
+    """Knobs of the banded prefilter (DESIGN.md §12).
+
+    ``n_bands``: requested bands per row — clamped to the segment's word
+    count; with ``wpb = ceil(W / n_bands)`` words per band the effective
+    count is ``ceil(W / wpb)``. More bands = higher recall, larger
+    candidate unions. ``max_candidate_frac``: the exhaustive escape hatch
+    — a segment whose candidate union exceeds this fraction of its rows is
+    scanned in full instead (the prefilter would not have paid for its
+    gather). ``min_rows``: segments smaller than this are never indexed —
+    a streaming scan over a few hundred rows beats any index maintenance.
+    """
+
+    n_bands: int = 8
+    max_candidate_frac: float = 0.25
+    min_rows: int = 256
+
+    def __post_init__(self):
+        if self.n_bands < 1:
+            raise ValueError(f"n_bands must be >= 1, got {self.n_bands}")
+        if not 0.0 < self.max_candidate_frac <= 1.0:
+            raise ValueError(
+                f"max_candidate_frac must be in (0, 1], got {self.max_candidate_frac}"
+            )
+        if self.min_rows < 0:
+            raise ValueError(f"min_rows must be >= 0, got {self.min_rows}")
+
+    def wants_index(self, n_rows: int) -> bool:
+        return n_rows >= self.min_rows
+
+    def to_aux(self) -> dict:
+        """JSON-safe dict for the checkpoint aux manifest."""
+        return {
+            "n_bands": int(self.n_bands),
+            "max_candidate_frac": float(self.max_candidate_frac),
+            "min_rows": int(self.min_rows),
+        }
+
+    @classmethod
+    def from_aux(cls, d: Optional[dict]) -> Optional["BandPolicy"]:
+        return None if d is None else cls(**d)
+
+
+@dataclasses.dataclass
+class BandIndex:
+    """Immutable per-segment bucket index: one CSR inverted list per band.
+
+    ``orders[t]`` holds the segment's row indices sorted by band-``t`` key;
+    ``uniq[t]`` / ``starts[t]`` are the sorted distinct keys and their CSR
+    offsets into ``orders[t]`` — bucket ``b`` of band ``t`` is
+    ``orders[t, starts[t][b] : starts[t][b+1]]``. Build is O(nb · n log n)
+    host argsorts (runs on the compaction worker thread for background
+    swaps); lookup is one ``searchsorted`` per band over the query batch.
+    """
+
+    n_rows: int
+    n_bands: int  # effective band count (== keys.shape[1] at build)
+    orders: np.ndarray  # (n_bands, n_rows) int32
+    uniq: List[np.ndarray]  # per band: sorted distinct uint32 keys
+    starts: List[np.ndarray]  # per band: (len(uniq)+1,) int64 CSR offsets
+
+    @classmethod
+    def build(cls, keys: np.ndarray) -> "BandIndex":
+        """``keys (n_rows, n_bands) uint32`` (from ``Backend.band_hash`` or
+        ``core.packed.band_hash_host`` — identical) -> the index."""
+        keys = np.ascontiguousarray(keys, dtype=np.uint32)
+        n_rows, n_bands = keys.shape
+        orders = np.empty((n_bands, n_rows), np.int32)
+        uniq: List[np.ndarray] = []
+        starts: List[np.ndarray] = []
+        for t in range(n_bands):
+            o = np.argsort(keys[:, t], kind="stable").astype(np.int32)
+            orders[t] = o
+            u, s = np.unique(keys[o, t], return_index=True)
+            uniq.append(u)
+            starts.append(np.append(s, n_rows).astype(np.int64))
+        return cls(n_rows, n_bands, orders, uniq, starts)
+
+    @classmethod
+    def build_from_packed(cls, sketches: np.ndarray, n_bands: int) -> "BandIndex":
+        """Host-side build straight from a packed (n, W) uint32 slab — the
+        compaction/distillation worker-thread path (pure numpy, no device
+        dispatch contending with serving)."""
+        return cls.build(pk.band_hash_host(sketches, n_bands))
+
+    def candidates(self, qkeys: np.ndarray) -> np.ndarray:
+        """Union of colliding buckets over a query batch.
+
+        ``qkeys (nq, n_bands) uint32`` -> sorted unique row indices (int64)
+        colliding with *any* query on *any* band. Ascending order matters:
+        gathered candidate slabs keep the segment's id-ascending row order,
+        so ``Backend.topk``'s positional tie-break stays the id tie-break.
+        """
+        qkeys = np.asarray(qkeys, dtype=np.uint32)
+        if qkeys.ndim != 2 or qkeys.shape[1] != self.n_bands:
+            raise ValueError(
+                f"qkeys must be (nq, {self.n_bands}), got {qkeys.shape}"
+            )
+        hits: List[np.ndarray] = []
+        for t in range(self.n_bands):
+            u = self.uniq[t]
+            qk = np.unique(qkeys[:, t])
+            pos = np.searchsorted(u, qk)
+            ok = pos < len(u)
+            pos = pos[ok]
+            pos = pos[u[pos] == qk[ok]]
+            st, order = self.starts[t], self.orders[t]
+            for b in pos:
+                hits.append(order[st[b] : st[b + 1]])
+        if not hits:
+            return np.zeros((0,), np.int64)
+        return np.unique(np.concatenate(hits)).astype(np.int64)

@@ -43,11 +43,14 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+import numpy as np
+
 from ..core import binsketch
 from ..parallel.sharding import shard_map
 from . import backends as backends_mod
 from .backends import Backend
-from .placement import SegmentPlacement, SegmentPlacer
+from .banding import BandPolicy
+from .placement import SegmentPlacement, SegmentPlacer, WidthSlab
 from .planner import QueryPlanner
 from .segments import DistillPolicy, SegmentedStore
 from .store import SegmentView, SketchStore
@@ -132,6 +135,14 @@ class SketchEngine:
     _placement: Optional[SegmentPlacement] = dataclasses.field(
         default=None, init=False, repr=False
     )
+    # observability for the banded prefilter (DESIGN.md §12): per query
+    # call, how many sealed rows were considered vs how many candidates
+    # survived banding, and how many segments fell back to the exhaustive
+    # scan. None until a prefiltered query runs; benches and the smoke gate
+    # read it to assert the candidate-fraction ceiling.
+    last_prefilter_stats: Optional[dict] = dataclasses.field(
+        default=None, init=False, repr=False
+    )
 
     # ------------------------------------------------------------ construct
     @classmethod
@@ -149,6 +160,7 @@ class SketchEngine:
         mutable: bool = False,
         seal_rows: Optional[int] = None,
         ttl: Optional[float] = None,
+        band_policy: Optional[BandPolicy] = None,
     ) -> "SketchEngine":
         """Create an engine; ``corpus_idx`` (C, P) is ingested if given,
         otherwise the engine starts empty and is fed via :meth:`add`.
@@ -157,13 +169,18 @@ class SketchEngine:
         ``update`` / ``seal`` / ``compact`` / ``expire``; ``seal_rows``
         auto-seals the head at that many rows; ``ttl`` arms lazy expiry —
         queries carrying a ``now`` mask out docs older than ``ttl`` without
-        waiting for an ``expire()`` sweep."""
+        waiting for an ``expire()`` sweep; ``band_policy`` arms the banded
+        LSH prefilter — sealed segments grow bucket indexes and queries
+        scan only colliding buckets (DESIGN.md §12)."""
         be = backends_mod.get_backend(backend)
-        if (seal_rows is not None or ttl is not None) and not mutable:
-            raise ValueError("seal_rows/ttl require mutable=True (append-only "
-                             "SketchStore has no head to seal, no clock)")
+        if (seal_rows is not None or ttl is not None
+                or band_policy is not None) and not mutable:
+            raise ValueError("seal_rows/ttl/band_policy require mutable=True "
+                             "(append-only SketchStore has no head to seal, "
+                             "no clock, no sealed segments to band)")
         store_cls = SegmentedStore if mutable else SketchStore
-        kw = {"seal_rows": seal_rows, "ttl": ttl} if mutable else {}
+        kw = ({"seal_rows": seal_rows, "ttl": ttl, "band_policy": band_policy}
+              if mutable else {})
         if corpus_idx is not None:
             store = store_cls.from_indices(
                 cfg, mapping, corpus_idx, backend=be, batch=batch, **kw
@@ -212,8 +229,9 @@ class SketchEngine:
         self._mutable_store().retract_rows(doc_ids, idx, backend=self.backend)
 
     def seal(self):
-        """Freeze the counting head into a packed sealed segment."""
-        return self._mutable_store().seal()
+        """Freeze the counting head into a packed sealed segment (building
+        its prefilter index at seal time when a band policy is armed)."""
+        return self._mutable_store().seal(backend=self.backend)
 
     def compact(self, *, background: bool = False, _hold=None):
         """Merge sealed segments, dropping tombstones.
@@ -367,22 +385,181 @@ class SketchEngine:
                     jnp.full((qs.shape[0], k), -1, jnp.int32))
         if width_cache is None:
             width_cache = {}
-        parts_s, parts_i = [], []
-        for v in views:
-            nb = v.n_bins if v.n_bins is not None else self.cfg.n_bins
-            sc, ix = self.backend.topk(
-                self._rebucket_queries(qs, nb, width_cache),
-                v.sketches, nb, self.measure, k,
-                corpus_fills=v.fills if use_fill_cache else None,
-                corpus_valid=v.valid,
+        parts = [
+            self._view_part(qs, v, k, use_fill_cache=use_fill_cache,
+                            width_cache=width_cache)
+            for v in views
+        ]
+        if len(parts) == 1:
+            return parts[0]
+        return merge_segment_topk([p[0] for p in parts], [p[1] for p in parts], k)
+
+    def _view_part(
+        self, qs: jax.Array, v: SegmentView, k: int, *,
+        use_fill_cache: bool, width_cache: dict,
+    ) -> Tuple[jax.Array, jax.Array]:
+        """One view's (Q, k) partial: ``Backend.topk`` at the view's width,
+        local indices mapped to global doc ids."""
+        nb = v.n_bins if v.n_bins is not None else self.cfg.n_bins
+        sc, ix = self.backend.topk(
+            self._rebucket_queries(qs, nb, width_cache),
+            v.sketches, nb, self.measure, k,
+            corpus_fills=v.fills if use_fill_cache else None,
+            corpus_valid=v.valid,
+        )
+        if v.ids is not None:
+            ix = jnp.where(ix >= 0, jnp.take(v.ids, jnp.maximum(ix, 0)), -1)
+        return sc, ix
+
+    # ------------------------------------------------------- banded prefilter
+    def _query_band_keys(
+        self, qs: jax.Array, n_bins: int, rows: int,
+        width_cache: dict, qkeys_cache: dict,
+    ) -> np.ndarray:
+        """(rows, nb_eff) uint32 host band keys of the first ``rows`` query
+        rows at width ``n_bins``, hashed once per width per planner chunk
+        (``qkeys_cache``: width -> full padded key block). Only real rows
+        are returned: a pad row's all-zero sketch hashes to the same key as
+        a genuinely-empty band group and would drag that bucket into every
+        padded chunk's candidate union."""
+        got = qkeys_cache.get(n_bins)
+        if got is None:
+            q_w = self._rebucket_queries(qs, n_bins, width_cache)
+            keys = self.backend.band_hash(
+                q_w, self.store.band_policy.n_bands
             )
-            if v.ids is not None:
-                ix = jnp.where(ix >= 0, jnp.take(v.ids, jnp.maximum(ix, 0)), -1)
+            got = qkeys_cache[n_bins] = np.asarray(jax.device_get(keys))
+        return got[:rows]
+
+    def _segment_candidates(self, seg, qkeys: np.ndarray, now) -> Optional[np.ndarray]:
+        """Live candidate rows of one sealed segment for this query batch
+        (ascending), or None when the escape hatch fires — the union
+        outgrew ``max_candidate_frac`` of the segment and the exhaustive
+        scan is the better deal. Bucket membership is stale-tolerant:
+        tombstoned / TTL-expired rows sit in their buckets forever and are
+        dropped here against the *current* host bitmaps, the same predicate
+        the exhaustive views apply."""
+        store: SegmentedStore = self.store
+        cand = seg.band_index.candidates(qkeys)
+        if len(cand):
+            cand = cand[seg.valid[cand]]
+            if store.ttl is not None and now is not None:
+                cand = cand[seg.born[cand] + store.ttl > now]
+        if len(cand) > store.band_policy.max_candidate_frac * seg.n_rows:
+            return None
+        return cand
+
+    def _gathered_part(
+        self, qs: jax.Array, seg, cand: np.ndarray, k: int, *,
+        use_fill_cache: bool, width_cache: dict,
+    ) -> Tuple[jax.Array, jax.Array]:
+        """Top-k over a candidate gather of one sealed segment.
+
+        Candidates are padded to a power-of-two bucket (bounded jit shapes,
+        like the batch axis) and gathered into a compact slab — the whole
+        point: the scoring kernel streams O(|candidates|) rows, not O(C).
+        ``cand`` ascends and segment rows ascend in id, so the gathered
+        slab keeps the positional-==-id tie-break; surviving ids score
+        bit-identically to the exhaustive path (same kernel, same width,
+        same fills)."""
+        nb = seg.n_bins if seg.n_bins is not None else self.cfg.n_bins
+        q_w = self._rebucket_queries(qs, nb, width_cache)
+        n = len(cand)
+        padded = self.planner.candidate_bucket(n, seg.n_rows)
+        rows_np = np.zeros(padded, np.int32)
+        rows_np[:n] = cand
+        rows_dev = jnp.asarray(rows_np)
+        sub = jnp.take(seg.sketches, rows_dev, axis=0)
+        fills = jnp.take(seg.fills, rows_dev) if use_fill_cache else None
+        vmask = jnp.asarray((np.arange(padded) < n).astype(np.int32))
+        sc, ix = self.backend.topk(
+            q_w, sub, nb, self.measure, k,
+            corpus_fills=fills, corpus_valid=vmask,
+        )
+        gids = np.full(padded, -1, np.int64)
+        gids[:n] = seg.ids[cand]
+        gid_dev = jnp.asarray(gids.astype(np.int32))
+        ix = jnp.where(ix >= 0, jnp.take(gid_dev, jnp.maximum(ix, 0)), -1)
+        return sc, ix
+
+    def _prefiltered_topk(
+        self, qs: jax.Array, rows: int, k: int, *, now, use_fill_cache: bool,
+        width_cache: dict, qkeys_cache: dict, stats: dict,
+    ) -> Tuple[jax.Array, jax.Array]:
+        """Banded single-device chunk body: sealed segments scan only their
+        colliding buckets; unindexed segments (below ``min_rows``, or
+        sealed before the policy was armed) and the mutable head scan
+        exhaustively; escape-hatch segments likewise. Results merge under
+        the same global (score desc, id asc) contract as `_views_topk` —
+        the prefilter changes *which rows score*, never how they score."""
+        store: SegmentedStore = self.store
+        parts_s, parts_i = [], []
+        for seg in store.sealed:
+            if seg.n_rows == 0:
+                continue
+            if seg.band_index is None:
+                stats["unindexed_segments"] += 1
+                sc, ix = self._view_part(
+                    qs, seg.view(store.ttl, now), k,
+                    use_fill_cache=use_fill_cache, width_cache=width_cache,
+                )
+            else:
+                nb = seg.n_bins if seg.n_bins is not None else self.cfg.n_bins
+                qkeys = self._query_band_keys(
+                    qs, nb, rows, width_cache, qkeys_cache
+                )
+                cand = self._segment_candidates(seg, qkeys, now)
+                stats["seg_rows"] += seg.n_rows
+                if cand is None:
+                    stats["exhaustive_segments"] += 1
+                    stats["cand_rows"] += seg.n_rows
+                    sc, ix = self._view_part(
+                        qs, seg.view(store.ttl, now), k,
+                        use_fill_cache=use_fill_cache, width_cache=width_cache,
+                    )
+                else:
+                    stats["banded_segments"] += 1
+                    stats["cand_rows"] += len(cand)
+                    if len(cand) == 0:
+                        continue
+                    sc, ix = self._gathered_part(
+                        qs, seg, cand, k,
+                        use_fill_cache=use_fill_cache, width_cache=width_cache,
+                    )
             parts_s.append(sc)
             parts_i.append(ix)
-        if len(views) == 1:
+        hv = store.head_view(now)
+        if hv is not None:  # head rows are unbanded: always scored
+            sc, ix = self._view_part(
+                qs, hv, k, use_fill_cache=use_fill_cache,
+                width_cache=width_cache,
+            )
+            parts_s.append(sc)
+            parts_i.append(ix)
+        if not parts_s:
+            return (jnp.full((qs.shape[0], k), -jnp.inf, jnp.float32),
+                    jnp.full((qs.shape[0], k), -1, jnp.int32))
+        if len(parts_s) == 1:
             return parts_s[0], parts_i[0]
         return merge_segment_topk(parts_s, parts_i, k)
+
+    def _resolve_prefilter(self, prefilter: Optional[bool]) -> bool:
+        on = (isinstance(self.store, SegmentedStore)
+              and self.store.band_policy is not None)
+        if prefilter is None:
+            return on
+        if prefilter and not on:
+            raise ValueError(
+                "prefilter=True needs a mutable store built with a "
+                "band_policy (SketchEngine.build(..., mutable=True, "
+                "band_policy=BandPolicy(...)))"
+            )
+        return bool(prefilter)
+
+    @staticmethod
+    def _fresh_prefilter_stats() -> dict:
+        return {"seg_rows": 0, "cand_rows": 0, "banded_segments": 0,
+                "exhaustive_segments": 0, "unindexed_segments": 0}
 
     def query(
         self,
@@ -391,6 +568,7 @@ class SketchEngine:
         *,
         use_fill_cache: bool = True,
         now: Optional[float] = None,
+        prefilter: Optional[bool] = None,
     ) -> Tuple[jax.Array, jax.Array]:
         """(Q, P) padded query rows -> (scores (Q, k), ids (Q, k)).
 
@@ -404,21 +582,49 @@ class SketchEngine:
         clock for lazy TTL expiry on a mutable store with a ``ttl``:
         docs with ``born + ttl <= now`` are masked out of every view,
         no ``expire()`` sweep needed.
+
+        ``prefilter`` gates the banded LSH prefilter (DESIGN.md §12):
+        ``None`` (default) auto-enables it when the store carries a
+        :class:`~repro.engine.banding.BandPolicy`; ``False`` forces the
+        exhaustive scan even then (the recall baseline); ``True`` insists
+        (and raises without a policy). When on, indexed sealed segments
+        score only the candidate union of the query batch's colliding
+        buckets — results are a subset of the exhaustive top-k with
+        identical scores for surviving ids — and
+        :attr:`last_prefilter_stats` records the candidate fraction.
         """
         if query_idx.shape[0] == 0:
             return (jnp.zeros((0, k), jnp.float32),
                     jnp.full((0, k), -1, jnp.int32))
         if isinstance(self.store, SegmentedStore):
             self.store.poll_compaction()  # adopt a finished background merge
+        banded = self._resolve_prefilter(prefilter)
         out_s, out_i = [], []
-        views = self.store.segment_views(now=now)
+        views = None if banded else self.store.segment_views(now=now)
+        stats = self._fresh_prefilter_stats() if banded else None
+        width_cache: dict = {}
+        qkeys_cache: dict = {}
         for chunk in self.planner.plan(query_idx.shape[0]):
             qs = self._padded_query_sketches(
                 query_idx[chunk.start : chunk.start + chunk.rows], chunk.padded
             )
-            sc, ix = self._views_topk(qs, views, k, use_fill_cache=use_fill_cache)
+            if banded:
+                sc, ix = self._prefiltered_topk(
+                    qs, chunk.rows, k, now=now, use_fill_cache=use_fill_cache,
+                    width_cache=width_cache, qkeys_cache=qkeys_cache,
+                    stats=stats,
+                )
+                # per-chunk caches: the padded batch shape changes across
+                # chunks, and with it the cached folded/hashed query blocks
+                width_cache, qkeys_cache = {}, {}
+            else:
+                sc, ix = self._views_topk(
+                    qs, views, k, use_fill_cache=use_fill_cache
+                )
             out_s.append(sc[: chunk.rows])
             out_i.append(ix[: chunk.rows])
+        if banded:
+            self.last_prefilter_stats = stats
         return jnp.concatenate(out_s, axis=0), jnp.concatenate(out_i, axis=0)
 
     # --------------------------------------------------------------- sharded
@@ -431,6 +637,7 @@ class SketchEngine:
         *,
         now: Optional[float] = None,
         use_placement: bool = True,
+        prefilter: Optional[bool] = None,
     ) -> Tuple[jax.Array, jax.Array]:
         """Candidate-sharded retrieval: local top-k then O(k·devices) merge.
 
@@ -446,11 +653,20 @@ class SketchEngine:
         baseline). An append-only :class:`SketchStore` always row-shards
         its single slab; pad rows score -inf / id -1 (no silent tail drop
         for non-divisible C).
+
+        ``prefilter`` as in :meth:`query`: on the placed path each device
+        gathers and scores only the candidate slots resident in *its* slab
+        shard — the bucket lookup runs once per segment on the host, and
+        candidate slots route to their owning device through the
+        placement's row->slot provenance.
         """
         if isinstance(self.store, SegmentedStore):
             self.store.poll_compaction()
             if use_placement:
-                return self._query_placed(mesh, axis, query_idx, k, now=now)
+                return self._query_placed(
+                    mesh, axis, query_idx, k, now=now,
+                    prefilter=self._resolve_prefilter(prefilter),
+                )
         views = self.store.segment_views(now=now)
         qs = self._sketch_queries(query_idx)
         if not views:
@@ -477,6 +693,116 @@ class SketchEngine:
             self._placement = p
         return p
 
+    def _slab_candidates(
+        self, slab: WidthSlab, qkeys: np.ndarray, now, stats: dict,
+    ) -> Optional[np.ndarray]:
+        """Slab-slot candidates of one width slab for this query batch
+        (sorted ascending, live-only), or None when any resident indexed
+        segment trips the escape hatch — the whole slab then falls back to
+        the exhaustive shard_map pass (per-segment fallback would still
+        stream the full slab, so partial banding buys nothing here).
+
+        Unindexed segments (below ``min_rows``) contribute *all* their
+        live rows — they are small by policy, and folding them into the
+        same gather keeps the pass count at one per slab. Candidates are
+        host-filtered against the current tombstone/TTL predicate, so the
+        prefiltered pass needs no device validity mask beyond pad slots.
+        """
+        store: SegmentedStore = self.store
+        base = self.cfg.n_bins
+        segs = [
+            (i, s) for i, s in enumerate(store.sealed)
+            if s.n_rows > 0
+            and (s.n_bins if s.n_bins is not None else base) == slab.n_bins
+        ]
+        pend = []  # (seg_i, seg, cand rows) — stats commit only if no hatch
+        seg_rows = cand_rows = banded = unindexed = 0
+        for seg_i, seg in segs:
+            if seg.band_index is None:
+                cand = np.nonzero(seg.valid)[0].astype(np.int64)
+                if store.ttl is not None and now is not None:
+                    cand = cand[seg.born[cand] + store.ttl > now]
+                unindexed += 1
+            else:
+                cand = self._segment_candidates(seg, qkeys, now)
+                if cand is None:  # escape hatch: whole slab goes exhaustive
+                    for _, s in segs:
+                        if s.band_index is not None:
+                            stats["seg_rows"] += s.n_rows
+                            stats["cand_rows"] += s.n_rows
+                            stats["exhaustive_segments"] += 1
+                        else:
+                            stats["unindexed_segments"] += 1
+                    return None
+                seg_rows += seg.n_rows
+                cand_rows += len(cand)
+                banded += 1
+            pend.append((seg_i, seg, cand))
+        stats["seg_rows"] += seg_rows
+        stats["cand_rows"] += cand_rows
+        stats["banded_segments"] += banded
+        stats["unindexed_segments"] += unindexed
+        slots = []
+        for seg_i, seg, cand in pend:
+            if not len(cand):
+                continue
+            s = slab.row_slots(seg_i, seg.n_rows)[cand]
+            slots.append(s[s >= 0])
+        if not slots:
+            return np.zeros((0,), np.int64)
+        # slots of distinct segments are disjoint; ascending order makes
+        # per-device gathers id-ascending (slabs are id-sorted)
+        return np.sort(np.concatenate(slots))
+
+    def _prefiltered_slab_topk(
+        self, q_w: jax.Array, slab: WidthSlab, slots: np.ndarray, k: int,
+        mesh: Mesh, axis: str, n_devices: int,
+    ) -> Tuple[jax.Array, jax.Array]:
+        """One width slab's all-gathered (Q, k·D) partial, scoring only
+        ``slots`` — each device gathers the candidate slots resident in
+        its own shard (O(|local candidates|) rows streamed, zero corpus
+        bytes moved) and pads to a planner bucket so distinct candidate
+        counts share jit traces. Per-device slots ascend, so the gathered
+        sub-slab keeps the slab's id-ascending tie-break order."""
+        measure, backend = self.measure, self.backend
+        dev = slots // slab.n_local
+        loc = slots % slab.n_local
+        counts = np.bincount(dev, minlength=n_devices)
+        l_c = self.planner.candidate_bucket(int(counts.max()), slab.n_local)
+        idx = np.zeros((n_devices, l_c), np.int32)
+        msk = np.zeros((n_devices, l_c), np.int32)
+        for d in range(n_devices):
+            ld = loc[dev == d]  # ascending: slots are globally sorted
+            idx[d, : len(ld)] = ld
+            msk[d, : len(ld)] = 1
+
+        def local(q_rep, sl, fills, ids, idx_loc, idx_valid, nb=slab.n_bins):
+            sub = jnp.take(sl, idx_loc, axis=0)
+            sc, ix = backend.topk(
+                q_rep, sub, nb, measure, k,
+                corpus_fills=jnp.take(fills, idx_loc),
+                corpus_valid=idx_valid,
+            )
+            gids = jnp.where(
+                ix >= 0,
+                jnp.take(ids, jnp.take(idx_loc, jnp.maximum(ix, 0))),
+                -1,
+            )
+            return (jax.lax.all_gather(sc, axis, axis=1, tiled=True),
+                    jax.lax.all_gather(gids, axis, axis=1, tiled=True))
+
+        fn = shard_map(
+            local,
+            mesh=mesh,
+            in_specs=(P(), P(axis, None), P(axis), P(axis), P(axis), P(axis)),
+            out_specs=(P(), P()),
+            check_vma=False,
+        )
+        return fn(
+            q_w, slab.sketches, slab.fills, slab.ids,
+            jnp.asarray(idx.reshape(-1)), jnp.asarray(msk.reshape(-1)),
+        )
+
     def _query_placed(
         self,
         mesh: Mesh,
@@ -485,6 +811,7 @@ class SketchEngine:
         k: int,
         *,
         now: Optional[float] = None,
+        prefilter: bool = False,
     ) -> Tuple[jax.Array, jax.Array]:
         """Segment-placed sharded query body (see :meth:`query_sharded`).
 
@@ -503,6 +830,13 @@ class SketchEngine:
         only ones the global merge could ever need; the global top-k holds
         at most k docs of any one slab shard, so the union of per-shard
         top-k lists (plus the head partial) always contains it.
+
+        With ``prefilter`` the same structure holds, but each slab pass
+        gathers only the candidate slots of the query batch's colliding
+        buckets (``_slab_candidates``) — candidate slots route to their
+        owning device through the placement's row->slot provenance, so the
+        bucket lookup stays host-side and per-query device work drops to
+        O(|local candidates|).
         """
         store: SegmentedStore = self.store
         placement = self._ensure_placement(mesh, axis)
@@ -513,9 +847,26 @@ class SketchEngine:
             return self._views_topk(qs, [hv] if hv is not None else [], k)
         measure, backend = self.measure, self.backend
         cache: dict = {}
+        qkeys_cache: dict = {}
+        stats = self._fresh_prefilter_stats() if prefilter else None
         parts_s, parts_i = [], []
         for slab in placement.slabs:
             q_w = self._rebucket_queries(qs, slab.n_bins, cache)
+            slots = None
+            if prefilter:
+                qkeys = self._query_band_keys(
+                    qs, slab.n_bins, qs.shape[0], cache, qkeys_cache
+                )
+                slots = self._slab_candidates(slab, qkeys, now, stats)
+                if slots is not None:
+                    if len(slots) == 0:
+                        continue
+                    sc_all, ids_all = self._prefiltered_slab_topk(
+                        q_w, slab, slots, k, mesh, axis, placement.n_devices
+                    )
+                    parts_s.append(sc_all)
+                    parts_i.append(ids_all)
+                    continue
             valid = slab.valid_mask(store, now=now)
 
             def local(q_rep, sl, fills, ids, vmask, nb=slab.n_bins):
@@ -541,6 +892,12 @@ class SketchEngine:
             h_sc, h_ids = self._views_topk(qs, [hv], k, width_cache=cache)
             parts_s.append(h_sc)
             parts_i.append(h_ids)
+        if prefilter:
+            self.last_prefilter_stats = stats
+        if not parts_s:  # prefilter skipped every slab and the head is empty
+            return (jnp.full((qs.shape[0], k), -jnp.inf, jnp.float32),
+                    jnp.full((qs.shape[0], k), -1, jnp.int32))
+        # always merge: slab partials are (Q, k·D) all-gathers, crop to k
         return merge_segment_topk(parts_s, parts_i, k)
 
     def _sharded_view_topk(

@@ -84,10 +84,28 @@ class WidthSlab:
     born: np.ndarray  # (D*L,) host float64 ingest timestamps (0 on pads)
     _valid_key: Optional[Tuple] = dataclasses.field(default=None, init=False, repr=False)
     _valid_dev: Optional[jax.Array] = dataclasses.field(default=None, init=False, repr=False)
+    _slot_lut: Optional[dict] = dataclasses.field(default=None, init=False, repr=False)
 
     @property
     def n_slots(self) -> int:
         return int(self.src_seg.shape[0])
+
+    def row_slots(self, seg_i: int, n_rows: int) -> np.ndarray:
+        """(n_rows,) global slab slot of each source row of sealed segment
+        ``seg_i`` (-1 where the row is not resident at this width) — the
+        segment-row -> slab-slot inverse of ``src_seg``/``src_row``, built
+        lazily once per (placement, segment) and immutable with the slab.
+        The banded prefilter uses it to map per-segment bucket candidates
+        onto each device's local row space."""
+        if self._slot_lut is None:
+            self._slot_lut = {}
+        got = self._slot_lut.get(seg_i)
+        if got is None:
+            sel = np.nonzero(self.src_seg == seg_i)[0]
+            got = np.full(n_rows, -1, np.int64)
+            got[self.src_row[sel]] = sel
+            self._slot_lut[seg_i] = got
+        return got
 
     def valid_mask(self, store, now: Optional[float] = None) -> jax.Array:
         """(D·L,) int32 sharded validity: tombstones ∧ lazy TTL, refreshed

@@ -61,3 +61,20 @@ class QueryPlanner:
         for n in sizes:
             seen.update(c.padded for c in self.plan(n))
         return tuple(sorted(seen))
+
+    def candidate_bucket(self, n: int, cap: int, *, floor: int = 64) -> int:
+        """Padded row count for a banded-prefilter candidate gather.
+
+        The candidate union's size varies per query batch; gathering into
+        an exact-size slab would compile a fresh top-k per distinct count.
+        Same cure as the batch axis: pad to the next power of two, floored
+        at ``floor`` (tiny unions share one shape) and capped at ``cap``
+        (the segment's row count — beyond it the exhaustive scan is
+        strictly cheaper, and the escape hatch has already fired).
+        """
+        if cap < 1:
+            return 0
+        b = max(min(floor, cap), 1)
+        while b < n and b < cap:
+            b *= 2
+        return min(b, cap)

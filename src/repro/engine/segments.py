@@ -87,6 +87,7 @@ import numpy as np
 from ..checkpoint.manager import BackgroundJob
 from ..core import binsketch, counting
 from ..core import packed as pk
+from .banding import BandIndex, BandPolicy
 from .store import SegmentView, _grow
 
 __all__ = ["DistillPolicy", "SealedSegment", "SegmentedStore"]
@@ -222,6 +223,12 @@ class SealedSegment:
     valid: np.ndarray  # (n,) bool — False = tombstoned
     born: np.ndarray  # (n,) float64 ingest timestamps
     n_bins: Optional[int] = None  # sketch width; None = store base width
+    # banded prefilter index (DESIGN.md §12), built over this slab's rows at
+    # seal/swap time and immutable with it — tombstones leave it alone (dead
+    # candidates are dropped at query time against ``valid``), and every
+    # lifecycle rewrite (compact/distill) produces a *new* segment with a
+    # fresh index, so stale buckets cannot outlive their rows
+    band_index: Optional[BandIndex] = None
 
     def __post_init__(self):
         self._ids_dev: Optional[jax.Array] = None
@@ -477,6 +484,10 @@ class SegmentedStore:
     next_id: int = 0
     seal_rows: Optional[int] = None  # auto-seal head when it reaches this many rows
     ttl: Optional[float] = None  # lazy query-time expiry horizon (seconds of `now`)
+    # arm the banded prefilter: sealed segments >= min_rows get a BandIndex
+    # at seal/compact/distill time and the engine's query paths scan only
+    # colliding buckets (head rows stay unbanded — always scored)
+    band_policy: Optional[BandPolicy] = None
     _loc: Dict[int, Tuple[int, int]] = dataclasses.field(default_factory=dict)
     _n_live: int = 0
     # epochs drive the placement caches (engine/placement.py): the layout
@@ -499,10 +510,11 @@ class SegmentedStore:
         capacity: int = 1024,
         seal_rows: Optional[int] = None,
         ttl: Optional[float] = None,
+        band_policy: Optional[BandPolicy] = None,
     ) -> "SegmentedStore":
         return cls(
             cfg, mapping, [], _Head.create(cfg.n_bins, cfg.n_words, capacity),
-            seal_rows=seal_rows, ttl=ttl,
+            seal_rows=seal_rows, ttl=ttl, band_policy=band_policy,
         )
 
     @classmethod
@@ -517,10 +529,11 @@ class SegmentedStore:
         now: float = 0.0,
         seal_rows: Optional[int] = None,
         ttl: Optional[float] = None,
+        band_policy: Optional[BandPolicy] = None,
     ) -> "SegmentedStore":
         store = cls.create(
             cfg, mapping, capacity=max(int(corpus_idx.shape[0]), 1),
-            seal_rows=seal_rows, ttl=ttl,
+            seal_rows=seal_rows, ttl=ttl, band_policy=band_policy,
         )
         store.add(corpus_idx, backend=backend, batch=batch, now=now)
         return store
@@ -905,10 +918,29 @@ class SegmentedStore:
             if h.valid[row]:
                 self._loc[int(h.ids[row])] = (_HEAD, row)
 
-    def seal(self) -> Optional[SealedSegment]:
+    def _band_index_for(
+        self, sketches: jax.Array, n_rows: int, backend=None
+    ) -> Optional[BandIndex]:
+        """Build a :class:`BandIndex` over a freshly sealed slab when the
+        store's :class:`BandPolicy` wants one (None otherwise). The keys
+        come from ``Backend.band_hash`` when a backend is at hand (the
+        Pallas kernel rides the accelerator that already holds the slab),
+        else from the jnp oracle — bit-identical either way."""
+        bp = self.band_policy
+        if bp is None or not bp.wants_index(n_rows):
+            return None
+        if backend is not None:
+            keys = backend.band_hash(sketches, bp.n_bands)
+        else:
+            keys = pk.band_hash(sketches, bp.n_bands)
+        return BandIndex.build(np.asarray(jax.device_get(keys)))
+
+    def seal(self, *, backend=None) -> Optional[SealedSegment]:
         """Freeze the head into a sealed segment (tombstoned head rows are
         dropped here — a free mini-compaction) and start a fresh head.
-        Counters are discarded: sealed rows live packed-only from now on."""
+        Counters are discarded: sealed rows live packed-only from now on.
+        With a :class:`BandPolicy` armed, the new segment's prefilter index
+        is built here — seal time — over exactly the rows being frozen."""
         h = self.head
         if h.size == 0:
             return None
@@ -916,7 +948,10 @@ class SegmentedStore:
         seg = None
         if got is not None:
             sk, fl, ids, born = got
-            seg = SealedSegment(sk, fl, ids, np.ones(len(ids), bool), born)
+            seg = SealedSegment(
+                sk, fl, ids, np.ones(len(ids), bool), born,
+                band_index=self._band_index_for(sk, len(ids), backend),
+            )
             self.sealed.append(seg)
             seg_i = len(self.sealed) - 1
             for row, gid in enumerate(seg.ids):
@@ -924,6 +959,46 @@ class SegmentedStore:
         self.head = _Head.create(self.cfg.n_bins, self.cfg.n_words, h.capacity)
         self._layout_epoch += 1
         return seg
+
+    def seal_sketches(
+        self, sketches: jax.Array, *, now: float = 0.0, backend=None
+    ) -> range:
+        """Bulk-ingest pre-packed rows straight into a sealed segment,
+        bypassing the counting head entirely; returns the fresh global ids.
+
+        The head's u16 occupancy counters cost ``2·N`` bytes per resident
+        doc — fine for a mutation buffer, prohibitive as an ingest path for
+        a million-doc backfill (at N=4096 that transient alone is 8 GiB).
+        Rows entering here are frozen immediately (no retraction, like
+        ``add_sketches`` after a seal) with ids assigned in row order, so
+        the segment satisfies the ascending-id invariant by construction.
+        The band index (policy permitting) is built at seal time as usual.
+        """
+        sketches = sketches.astype(jnp.uint32)
+        b = int(sketches.shape[0])
+        if b == 0:
+            return range(self.next_id, self.next_id)
+        if sketches.shape[1] != self.cfg.n_words:
+            raise ValueError(
+                f"expected (B, {self.cfg.n_words}) packed rows at the base "
+                f"width, got {tuple(sketches.shape)}"
+            )
+        fills = pk.row_popcount(sketches).astype(jnp.int32)
+        ids = np.arange(self.next_id, self.next_id + b, dtype=np.int64)
+        self.next_id += b
+        seg = SealedSegment(
+            sketches, fills, ids, np.ones(b, bool),
+            np.full(b, float(now), np.float64),
+            band_index=self._band_index_for(sketches, b, backend),
+        )
+        self.sealed.append(seg)
+        seg_i = len(self.sealed) - 1
+        self._loc.update(
+            zip(ids.tolist(), ((seg_i, row) for row in range(b)))
+        )
+        self._n_live += b
+        self._layout_epoch += 1
+        return range(int(ids[0]), int(ids[-1]) + 1)
 
     def _widths_present(self) -> List[Optional[int]]:
         """Distinct sealed sketch widths, base (None) first then descending
@@ -961,7 +1036,8 @@ class SegmentedStore:
                 continue
             sk, fl, ids, born = got
             new_sealed.append(SealedSegment(
-                sk, fl, ids, np.ones(len(ids), bool), born, n_bins=width
+                sk, fl, ids, np.ones(len(ids), bool), born, n_bins=width,
+                band_index=self._band_index_for(sk, len(ids)),
             ))
         self._layout_epoch += 1
         self.sealed = new_sealed
@@ -1051,6 +1127,8 @@ class SegmentedStore:
             ]
             snap.append((group, parts, segs[0].n_bins))
 
+        band_policy = self.band_policy
+
         def work():
             out = []
             for group, parts, width in snap:
@@ -1069,16 +1147,27 @@ class SegmentedStore:
                     src_row.append(keep.astype(np.int64))
                 ids_c = np.concatenate(ids)
                 order = np.argsort(ids_c, kind="stable")
+                merged_sk = np.concatenate(sk, axis=0)[order]
                 out.append({
                     "group": group,
                     "n_bins": width,
                     "rows_in": sum(len(p[2]) for p in parts),
-                    "sketches": np.concatenate(sk, axis=0)[order],
+                    "sketches": merged_sk,
                     "fills": np.concatenate(fl)[order],
                     "ids": ids_c[order],
                     "born": np.concatenate(born)[order],
                     "src_seg": np.concatenate(src_seg)[order],
                     "src_row": np.concatenate(src_row)[order],
+                    # prefilter index over the merged slab, built here on
+                    # the worker thread (host hash twin — no device
+                    # dispatch contending with serving) so the swap
+                    # installs it for free
+                    "band_index": (
+                        BandIndex.build_from_packed(merged_sk, band_policy.n_bands)
+                        if band_policy is not None
+                        and band_policy.wants_index(len(ids_c))
+                        else None
+                    ),
                 })
             if _hold is not None:
                 _hold.wait()
@@ -1137,6 +1226,8 @@ class SegmentedStore:
                 seg.ids.copy(), seg.valid.copy(), seg.born.copy(),
             ))
 
+        band_policy = self.band_policy
+
         def work():
             out = []
             for i, cur, tgt, sk, ids, valid, born in snap:
@@ -1152,6 +1243,16 @@ class SegmentedStore:
                     "born": born[keep],
                     "src_seg": np.full(len(keep), i, np.int64),
                     "src_row": keep.astype(np.int64),
+                    # the folded rows are a *different* signature space (N'
+                    # bins, fewer words): the tier gets its own index, re-
+                    # derived from the folded slab — base-width buckets
+                    # must never serve a distilled segment
+                    "band_index": (
+                        BandIndex.build_from_packed(folded, band_policy.n_bands)
+                        if band_policy is not None
+                        and band_policy.wants_index(len(keep))
+                        else None
+                    ),
                 })
             if _hold is not None:
                 _hold.wait()
@@ -1225,6 +1326,7 @@ class SegmentedStore:
                 live,
                 r["born"],
                 n_bins=r.get("n_bins"),
+                band_index=r.get("band_index"),
             ))
             stats["rows_out"] += n
         new_sealed.extend(s for s in self.sealed if id(s) not in replaced)
@@ -1305,6 +1407,12 @@ class SegmentedStore:
             "sealed_n_bins": [s.n_bins for s in self.sealed],
             "head_born": h.born[: h.size].tolist(),
             "sealed_born": [s.born.tolist() for s in self.sealed],
+            # prefilter config only — the BandIndex itself is derived state
+            # (pure function of a sealed slab + policy) and is rebuilt from
+            # the restored sketches, never serialized
+            "band_policy": (
+                self.band_policy.to_aux() if self.band_policy else None
+            ),
         }
         return tree, aux
 
@@ -1352,7 +1460,8 @@ class SegmentedStore:
         }
         tree, _ = manager.restore(step, target)
         store = cls.create(cfg, tree["mapping"], capacity=max(hr, 1),
-                           seal_rows=aux["seal_rows"], ttl=aux.get("ttl"))
+                           seal_rows=aux["seal_rows"], ttl=aux.get("ttl"),
+                           band_policy=BandPolicy.from_aux(aux.get("band_policy")))
         store.next_id = int(aux["next_id"])
         ht = tree["head"]
         h = store.head
@@ -1366,8 +1475,9 @@ class SegmentedStore:
         h.sat_dev = h.sat_dev.at[:hr].set(jnp.asarray(ht["saturated"]))
         h.size = hr
         for st, born, nb in zip(tree["sealed"], aux["sealed_born"], seg_widths):
+            sk = st["sketches"].astype(jnp.uint32)
             store.sealed.append(SealedSegment(
-                sketches=st["sketches"].astype(jnp.uint32),
+                sketches=sk,
                 fills=st["fills"].astype(jnp.int32),
                 # np.array copies: device buffers come back read-only, and
                 # the tombstone bitmap must stay mutable
@@ -1375,6 +1485,9 @@ class SegmentedStore:
                 valid=np.array(st["valid"], bool),
                 born=np.asarray(born, np.float64),
                 n_bins=int(nb) if nb else None,
+                # derived state: rebuilt from the restored slab, identical
+                # to the pre-checkpoint index (same rows, same hash)
+                band_index=store._band_index_for(sk, int(st["sketches"].shape[0])),
             ))
         for seg_i, seg in enumerate(store.sealed):
             for row in np.nonzero(seg.valid)[0]:

@@ -1,0 +1,75 @@
+"""Pallas TPU kernel: banded LSH keys over packed sketch words.
+
+The banded prefilter (DESIGN.md §12) needs, per corpus row, one uint32 key
+per *band* — a group of ``wpb`` contiguous packed words — such that two
+rows collide on a band iff they agree on that whole word group. The key is
+a seeded xorshift-multiply chain over the band's words:
+
+    h = seed(t)
+    for each word w in band t:  h = (h ^ w) * PRIME;  h ^= h >> 15
+
+identical (uint32 wraparound) to the jnp oracle ``core.packed.band_hash``
+and its numpy host twin — the kernel exists so index (re)builds at seal /
+compact / distill time ride the same accelerator as the slab they hash.
+
+Grid: (rows / TB,). Each program loads its (TB, W_pad) word slab (the
+wrapper pads the word axis to ``nb_eff * wpb`` with zeros — zero words
+still mix the seed, and every row pads identically so collisions are
+unaffected), views it as (TB, nb_eff, wpb), and folds the ``wpb`` word
+lanes into the (TB, nb_eff) key block with a static loop.
+
+VMEM per program (TB=8, W<=2048 words): 8·2048·4 B = 64 KiB in, the
+(TB, nb_eff) out block is tiny — trivially resident.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..core.packed import _BAND_PRIME, _BAND_SEED
+
+__all__ = ["band_hash_kernel"]
+
+
+def _kernel(src_ref, out_ref, *, nb_eff: int, wpb: int):
+    src = src_ref[...]  # (TB, nb_eff * wpb) uint32
+    tb = src.shape[0]
+    grp = src.reshape(tb, nb_eff, wpb)
+    band = jax.lax.broadcasted_iota(jnp.uint32, (tb, nb_eff), 1)
+    h = jnp.uint32(_BAND_SEED) * (band + jnp.uint32(1))
+    for t in range(wpb):
+        h = (h ^ grp[:, :, t]) * jnp.uint32(_BAND_PRIME)
+        h = h ^ (h >> jnp.uint32(15))
+    out_ref[...] = h
+
+
+def band_hash_kernel(
+    src: jax.Array,
+    nb_eff: int,
+    wpb: int,
+    *,
+    block_rows: int = 8,
+    interpret: bool = False,
+) -> jax.Array:
+    """``src: (B, nb_eff*wpb)`` packed rows -> ``(B, nb_eff)`` uint32 band keys.
+
+    B must be a multiple of ``block_rows`` and the word axis exactly
+    ``nb_eff * wpb``; ``ops.band_hash`` handles row/word padding, the
+    band-count clamp, and the crops.
+    """
+    bsz, w_pad = src.shape
+    assert bsz % block_rows == 0, bsz
+    assert w_pad == nb_eff * wpb, (w_pad, nb_eff, wpb)
+    grid = (bsz // block_rows,)
+    return pl.pallas_call(
+        functools.partial(_kernel, nb_eff=nb_eff, wpb=wpb),
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_rows, w_pad), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((block_rows, nb_eff), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, nb_eff), jnp.uint32),
+        interpret=interpret,
+    )(src)

@@ -15,6 +15,7 @@ import jax.numpy as jnp
 
 from ..core import packed as pk
 from . import (
+    band_hash as band_hash_mod,
     count_update,
     hash_build,
     popcount_sim,
@@ -23,8 +24,8 @@ from . import (
     topk_stream,
 )
 
-__all__ = ["build_sketch", "count_bins", "hash_build_sketch", "rebucket",
-           "sketch_score", "sketch_topk", "score_counts"]
+__all__ = ["band_hash", "build_sketch", "count_bins", "hash_build_sketch",
+           "rebucket", "sketch_score", "sketch_topk", "score_counts"]
 
 
 def _interpret_default() -> bool:
@@ -187,6 +188,45 @@ def rebucket(
         src = jnp.pad(src, ((0, 0), (0, w_need - w)))
     out = rebucket_mod.rebucket_kernel(
         src, n_bins, n_bins_new, block_rows=block_rows, interpret=interpret
+    )
+    return out[:bsz]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_bands", "block_rows", "interpret")
+)
+def band_hash(
+    packed: jax.Array,
+    n_bands: int,
+    *,
+    block_rows: int = 8,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Packed (B, W) sketches -> (B, nb_eff) uint32 band keys.
+
+    Splits the word axis into ``n_bands`` groups of ``wpb = ceil(W /
+    n_bands)`` contiguous words and hashes each group with a seeded
+    xorshift-multiply chain (``core.packed.band_hash`` is the jnp oracle,
+    bit-identical). ``n_bands`` clamps to W and the effective band count is
+    ``nb_eff = ceil(W / wpb)`` — size bucket indexes off the output shape,
+    not the requested count. Pads rows to ``block_rows`` and the word axis
+    to ``nb_eff * wpb`` (zero pad words mix identically into every row's
+    key, so collisions are unaffected); crops rows on return.
+    """
+    if interpret is None:
+        interpret = _interpret_default()
+    if packed.dtype != jnp.uint32:
+        raise TypeError(f"packed sketches must be uint32, got {packed.dtype}")
+    bsz, w = packed.shape
+    n_bands = max(1, min(int(n_bands), w))
+    wpb = -(-w // n_bands)
+    nb_eff = -(-w // wpb)
+    src = _pad_to(packed, 0, block_rows, 0)
+    w_pad = nb_eff * wpb
+    if w_pad > w:
+        src = jnp.pad(src, ((0, 0), (0, w_pad - w)))
+    out = band_hash_mod.band_hash_kernel(
+        src, nb_eff, wpb, block_rows=block_rows, interpret=interpret
     )
     return out[:bsz]
 

@@ -103,18 +103,26 @@ def main(argv=None):
                     help="only distill segments whose youngest live doc is "
                          "at least this many ticks old (default: all sealed "
                          "segments are eligible)")
+    ap.add_argument("--prefilter", action="store_true",
+                    help="mutable store: arm the banded LSH prefilter "
+                         "(DESIGN.md §12) — sealed segments grow bucket "
+                         "indexes and queries scan only colliding buckets; "
+                         "recall is then the prefiltered recall")
+    ap.add_argument("--bands", type=int, default=8,
+                    help="bands per sketch for --prefilter (more bands = "
+                         "higher recall, larger candidate unions)")
     ap.add_argument("--check-recall", action="store_true", default=True)
     args = ap.parse_args(argv)
 
     from repro.core import BinSketchConfig, make_mapping
     from repro.data.synthetic import DATASETS, generate_corpus
-    from repro.engine import QueryPlanner, SketchEngine
+    from repro.engine import BandPolicy, QueryPlanner, SketchEngine
 
     spec = DATASETS[args.dataset]
     idx, lens = generate_corpus(spec, seed=0)
     n = idx.shape[0]
     mutable = (args.mutate_rate > 0.0 or args.ttl is not None
-               or args.distill is not None)
+               or args.distill is not None or args.prefilter)
     print(f"corpus: {n} docs, d={spec.d}, psi={spec.max_nnz}"
           + (f", mutate-rate={args.mutate_rate}" if mutable else ""))
 
@@ -131,7 +139,13 @@ def main(argv=None):
         mutable=mutable,
         seal_rows=args.seal_rows,
         ttl=args.ttl,
+        band_policy=BandPolicy(n_bands=args.bands) if args.prefilter else None,
     )
+    if args.prefilter:
+        pol = engine.store.band_policy
+        print(f"prefilter: {pol.n_bands} bands, escape hatch at "
+              f"{pol.max_candidate_frac:.0%} candidates, segments under "
+              f"{pol.min_rows} rows stay unindexed")
     t0 = time.time()
     idx_dev = jnp.asarray(idx)
     # the lifecycle clock ticks once per ingest batch: born stamps, the
@@ -264,6 +278,13 @@ def main(argv=None):
     t_serve = time.time() - t0
     print(f"serve: {args.queries} queries in {t_serve:.2f}s "
           f"({args.queries / t_serve:.0f} q/s, batch={args.batch})")
+    if args.prefilter and engine.last_prefilter_stats is not None:
+        st = engine.last_prefilter_stats
+        frac = st["cand_rows"] / max(st["seg_rows"], 1)
+        print(f"prefilter: {st['banded_segments']} banded / "
+              f"{st['exhaustive_segments']} escape-hatch / "
+              f"{st['unindexed_segments']} unindexed segment scan(s) on the "
+              f"last batch; candidate fraction {frac:.4f}")
     if mutable and args.background_compact:
         stats = engine.wait_compaction()
         if stats:
