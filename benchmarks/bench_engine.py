@@ -534,7 +534,10 @@ def run_distill(dataset="tiny", backend="oracle", queries=32, topk=10,
         started = engine.distill(widths=(n_new,))  # background launch
         t_launch = time.perf_counter() - t0
         assert started
-        engine.store._compaction.job.result()  # join the off-thread fold
+        # join the off-thread fold without adopting it (the supervisor wait
+        # leaves the finished job for poll_compaction, whose swap is the
+        # stall being measured)
+        engine.store.supervisor.wait(engine.store._compaction.job)
         t0 = time.perf_counter()
         engine.poll_compaction()  # the swap: the only serving stall
         t_swap = time.perf_counter() - t0
@@ -549,6 +552,60 @@ def run_distill(dataset="tiny", backend="oracle", queries=32, topk=10,
             "swap_stall_ms": t_swap * 1e3,
         })
     return out
+
+
+def run_supervision(dataset="tiny", backend="oracle", queries=32, topk=10,
+                    repeats=5, seed=0):
+    """Supervision/fault-injection overhead on the query hot path.
+
+    The robustness layer (DESIGN.md §13) instruments the serving code
+    permanently: every injection point is one module-global ``None`` check
+    when disarmed, and the degraded-mode fallbacks add a try/except frame
+    around the prefilter lookup. The claim is that this costs nothing
+    measurable. Two arms, interleaved: the shipped path with no plan
+    installed vs an *armed-but-quiet* :class:`~repro.faults.FaultPlan`
+    (installed, zero specs — every point takes the dict-miss branch), on a
+    banded mutable store so the instrumented lookup path is the one that
+    runs."""
+    from repro import faults
+    from repro.core import BinSketchConfig, make_mapping
+    from repro.data.synthetic import DATASETS, generate_corpus
+    from repro.engine import BandPolicy, QueryPlanner, SketchEngine
+
+    spec = DATASETS[dataset]
+    idx, lens = generate_corpus(spec, seed=seed)
+    n = idx.shape[0]
+    cfg = BinSketchConfig.from_sparsity(spec.d, int(lens.max()), 0.05)
+    mapping = make_mapping(cfg, jax.random.PRNGKey(0))
+    planner = QueryPlanner(min_batch=8, max_batch=max(queries, 8))
+    engine = SketchEngine.build(
+        cfg, mapping, jnp.asarray(idx), backend=backend, planner=planner,
+        mutable=True, band_policy=BandPolicy(n_bands=4, min_rows=32),
+    )
+    engine.seal()
+    engine.compact()
+    rng = np.random.default_rng(seed + 2)
+    q = jnp.asarray(idx[rng.choice(n, queries, replace=False)])
+    plan = faults.FaultPlan({}, seed=seed)  # armed, fires nothing
+
+    def disarmed():
+        return engine.query(q, topk)[1]
+
+    def armed_quiet():
+        faults.install(plan)
+        try:
+            return engine.query(q, topk)[1]
+        finally:
+            faults.clear()
+
+    faults.clear()  # whatever state the caller left behind
+    t_off, t_on = _timeit_pair(disarmed, armed_quiet, repeats)
+    return {
+        "corpus_docs": int(n),
+        "query_qps_disarmed": queries / t_off,
+        "query_qps_armed_quiet": queries / t_on,
+        "supervision_overhead": t_on / t_off,
+    }
 
 
 def run(dataset="tiny", backend="oracle", queries=64, topk=10, repeats=5,
@@ -623,6 +680,10 @@ def run(dataset="tiny", backend="oracle", queries=64, topk=10, repeats=5,
         dataset, backend=backend, queries=min(queries, 32), topk=topk,
         seed=seed,
     )
+    result["supervision"] = run_supervision(
+        dataset, backend=backend, queries=min(queries, 32), topk=topk,
+        repeats=max(repeats, 5), seed=seed,
+    )
     if prefilter_docs:
         result["prefilter"] = run_prefilter(
             n_docs=prefilter_docs, backend=backend, queries=queries,
@@ -671,6 +732,7 @@ def smoke() -> dict:
     _smoke_mutate_cycle()
     _smoke_fill_cache()
     _smoke_prefilter()
+    _smoke_supervision()
     return {"smoke": "ok"}
 
 
@@ -701,6 +763,22 @@ def _smoke_prefilter():
     print(f"smoke ok: prefilter recall {pf['recall_at_k']:.3f}, "
           f"candidate fraction {pf['candidate_fraction']:.4f}, "
           f"speedup {pf['prefilter_speedup']:.1f}x @ {pf['corpus_docs']} docs")
+
+
+def _smoke_supervision():
+    """CI gate for the robustness layer's overhead claim: an installed but
+    quiet FaultPlan (the most instrumentation a fault-free process ever
+    pays for) must keep query latency within noise of the shipped
+    disarmed path. Min-of-repeats over interleaved arms; the margin
+    absorbs dispatch jitter at smoke shapes, not a real regression — the
+    per-point cost is one module-global check."""
+    sv = run_supervision(queries=16, repeats=10)
+    assert sv["supervision_overhead"] <= 1.25, (
+        f"armed-but-quiet fault plan cost {sv['supervision_overhead']:.3f}x "
+        f"on the query path @ {sv['corpus_docs']} docs"
+    )
+    print(f"smoke ok: supervision overhead {sv['supervision_overhead']:.3f}x "
+          f"@ {sv['corpus_docs']} docs")
 
 
 def _smoke_mutate_cycle():
@@ -813,6 +891,11 @@ def main(argv=None):
                 "recall_at_k", "candidate_fraction"):
         if key in pf:
             print(f"prefilter_{key},{pf[key]:.4f}")
+    sv = result.get("supervision", {})
+    for key in ("query_qps_disarmed", "query_qps_armed_quiet",
+                "supervision_overhead"):
+        if key in sv:
+            print(f"supervision_{key},{sv[key]:.4f}")
     dst = result.get("distill", {})
     for tier in dst.get("tiers", ()):
         print(f"distill_bytes_reduction@N={tier['n_bins']},"

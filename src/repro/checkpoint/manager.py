@@ -1,20 +1,30 @@
-"""Fault-tolerant checkpointing: atomic, async, elastic-restorable.
+"""Fault-tolerant checkpointing: atomic, async, verified, elastic-restorable.
 
 Layout (one directory per step):
 
     <root>/step_000001230/
-        tree.json            # pytree structure + per-leaf shape/dtype
+        tree.json            # pytree structure + per-leaf shape/dtype/CRC32
         leaf_00000.npy ...   # one file per leaf
         aux.json             # user metadata (data-pipeline state, configs)
     <root>/LATEST            # manifest: step id, written LAST via atomic rename
 
 Guarantees:
   * atomicity — the step dir is staged as ``.tmp-<step>`` and renamed only
-    after every leaf + manifest is fsynced; a crash mid-save leaves the
-    previous LATEST untouched (restore ignores tmp dirs);
+    after every leaf + manifest is fsynced (files *and* the containing
+    directories); a crash mid-save leaves the previous LATEST untouched
+    (restore ignores tmp dirs);
+  * integrity — ``tree.json`` records a CRC32 per leaf, computed from the
+    in-memory bytes at save time (never from a read-back, so a torn write
+    cannot vouch for its own truncation). ``restore`` verifies every leaf;
+    on corruption it walks back through retained generations to the newest
+    checkpoint that verifies — retention is the redundancy budget, not
+    just a disk-space policy (DESIGN.md §13);
   * async — ``save(..., blocking=False)`` snapshots to host memory
     synchronously (cheap) and writes in a daemon thread, so the train loop
-    stalls only for jax.device_get, not for disk;
+    stalls only for jax.device_get, not for disk. With a ``supervisor``
+    attached (``engine.supervision.JobSupervisor``) the write job gets
+    retries/watchdog/quarantine and its failures surface in ``health()``
+    instead of being re-raised at the next ``save()``;
   * elastic restore — leaves are stored unsharded; ``restore`` device_puts
     them with *target* shardings supplied by the caller, so a job restarted
     on a different mesh (fewer/more hosts) resharding-restores transparently.
@@ -31,14 +41,25 @@ import json
 import os
 import shutil
 import threading
-from typing import Any, Callable, Dict, Optional, Tuple
+import zlib
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
 
-__all__ = ["BackgroundJob", "CheckpointManager"]
+from .. import faults
+
+__all__ = ["BackgroundJob", "CheckpointCorruptError", "CheckpointManager"]
 
 PyTree = Any
+
+
+class CheckpointCorruptError(RuntimeError):
+    """A checkpoint generation failed verification (unreadable manifest,
+    unreadable/truncated leaf, or a CRC mismatch). ``restore(step=None)``
+    treats this as "walk back one generation"; an *explicitly* requested
+    step re-raises it — the caller asked for that step, silently handing
+    back a different one would be worse than failing."""
 
 
 class BackgroundJob:
@@ -57,6 +78,9 @@ class BackgroundJob:
 
     An exception raised by ``fn`` is stored and re-raised from
     :meth:`result` — background failures are never silently swallowed.
+    Supervised callers (``engine.supervision.JobSupervisor``) instead read
+    :attr:`error` / :attr:`value` after :meth:`done` and decide on their
+    own thread whether to retry, so nothing re-raises into serving paths.
     """
 
     def __init__(self, fn: Callable[[], Any]):
@@ -76,6 +100,16 @@ class BackgroundJob:
         """True once ``fn`` has finished (successfully or not)."""
         return not self._thread.is_alive()
 
+    @property
+    def error(self) -> Optional[BaseException]:
+        """The stored exception, if ``fn`` failed (valid once :meth:`done`)."""
+        return self._error
+
+    @property
+    def value(self) -> Any:
+        """``fn``'s return value (valid once :meth:`done` with no error)."""
+        return self._result
+
     def result(self) -> Any:
         """Join the worker and return ``fn``'s result (or raise its error)."""
         self._thread.join()
@@ -89,12 +123,35 @@ def _leaf_paths(tree: PyTree):
     return flat, treedef
 
 
+def _crc(arr: np.ndarray) -> int:
+    return zlib.crc32(np.ascontiguousarray(arr).tobytes()) & 0xFFFFFFFF
+
+
+def _fsync_dir(path: str) -> None:
+    """fsync a directory so the rename/create of its entries is durable.
+    Some filesystems refuse fsync on directory fds — degrade silently,
+    matching what mature checkpoint writers do."""
+    try:
+        fd = os.open(path, os.O_RDONLY)
+    except OSError:
+        return
+    try:
+        os.fsync(fd)
+    except OSError:
+        pass
+    finally:
+        os.close(fd)
+
+
 class CheckpointManager:
-    def __init__(self, root: str, keep: int = 3):
+    def __init__(self, root: str, keep: int = 3, supervisor: Any = None):
         self.root = root
         self.keep = keep
+        #: optional engine.supervision.JobSupervisor (duck-typed to avoid a
+        #: dependency cycle: supervision imports BackgroundJob from here)
+        self.supervisor = supervisor
         os.makedirs(root, exist_ok=True)
-        self._pending: Optional[BackgroundJob] = None
+        self._pending: Optional[Any] = None  # BackgroundJob | SupervisedJob
 
     # -- save -----------------------------------------------------------------
     def save(self, step: int, tree: PyTree, aux: Optional[Dict] = None, blocking: bool = True):
@@ -112,49 +169,153 @@ class CheckpointManager:
             "keys": keys,
             "shapes": [list(x.shape) for x in host_leaves],
             "dtypes": [str(x.dtype) for x in host_leaves],
+            # integrity: CRC of the bytes we hold *now*, so restore can tell
+            # a faithful file from a torn one no matter how it got torn
+            "leaf_crc": [_crc(x) for x in host_leaves],
         }
-        aux = aux or {}
+        # Serialize aux on the caller's thread: a non-JSON-serializable aux
+        # must fail *here*, not at the next save()/wait() on a worker thread.
+        try:
+            aux_json = json.dumps(aux or {})
+        except TypeError as e:
+            raise TypeError(f"checkpoint aux must be JSON-serializable: {e}") from e
+        meta_json = json.dumps(meta)
 
         def write():
+            faults.inject("checkpoint.write")
             tmp = os.path.join(self.root, f".tmp-{step:012d}")
             final = os.path.join(self.root, f"step_{step:012d}")
-            if os.path.exists(tmp):
+            if os.path.exists(tmp):  # retry after a failed attempt: restage
                 shutil.rmtree(tmp)
             os.makedirs(tmp)
             for i, arr in enumerate(host_leaves):
-                np.save(os.path.join(tmp, f"leaf_{i:05d}.npy"), arr)
-            with open(os.path.join(tmp, "tree.json"), "w") as f:
-                json.dump(meta, f)
-            with open(os.path.join(tmp, "aux.json"), "w") as f:
-                json.dump(aux, f)
+                path = os.path.join(tmp, f"leaf_{i:05d}.npy")
+                with open(path, "wb") as f:
+                    np.save(f, arr)
+                    f.flush()
+                    os.fsync(f.fileno())
+                faults.torn_write("checkpoint.leaf", path)
+            for name, payload in (("tree.json", meta_json), ("aux.json", aux_json)):
+                with open(os.path.join(tmp, name), "w") as f:
+                    f.write(payload)
+                    f.flush()
+                    os.fsync(f.fileno())
+            _fsync_dir(tmp)  # the files' directory entries, pre-rename
             if os.path.exists(final):
                 shutil.rmtree(final)
             os.rename(tmp, final)  # atomic on POSIX
+            _fsync_dir(self.root)  # the rename itself
             latest_tmp = os.path.join(self.root, ".LATEST.tmp")
             with open(latest_tmp, "w") as f:
                 f.write(str(step))
                 f.flush()
                 os.fsync(f.fileno())
             os.rename(latest_tmp, os.path.join(self.root, "LATEST"))
+            _fsync_dir(self.root)
             self._gc()
 
         self.wait()  # one outstanding async save at a time
         if blocking:
             write()
+        elif self.supervisor is not None:
+            # may be None if ("checkpoint", ("save",)) is quarantined — the
+            # save is skipped and the refusal is counted in health()
+            self._pending = self.supervisor.submit("checkpoint", ("save",), write)
         else:
             self._pending = BackgroundJob(write)
 
     def wait(self):
-        if self._pending is not None:
-            try:
-                self._pending.result()
-            finally:
-                self._pending = None
+        job = self._pending
+        if job is None:
+            return
+        try:
+            if isinstance(job, BackgroundJob):
+                job.result()  # legacy contract: re-raise on caller's thread
+            else:
+                # supervised: retries/backoff happen inside; a terminal
+                # failure is recorded in health(), never raised here
+                self.supervisor.wait(job)
+        finally:
+            self._pending = None
 
     def _gc(self):
         steps = sorted(self.all_steps())
         for s in steps[: -self.keep] if self.keep > 0 else []:
             shutil.rmtree(os.path.join(self.root, f"step_{s:012d}"), ignore_errors=True)
+
+    # -- verification -----------------------------------------------------------
+    def _read_verified(self, step: int) -> Tuple[Dict, Dict, List[np.ndarray]]:
+        """Load and verify one generation: manifest + aux + every leaf, with
+        CRC checks. Raises :class:`CheckpointCorruptError` on any unreadable
+        or mismatching content (walk-back callers catch it and try the next
+        generation). Pre-CRC checkpoints (no ``leaf_crc``) verify by
+        loadability alone."""
+        faults.inject("checkpoint.restore")
+        src = os.path.join(self.root, f"step_{step:012d}")
+        try:
+            with open(os.path.join(src, "tree.json")) as f:
+                meta = json.load(f)
+            with open(os.path.join(src, "aux.json")) as f:
+                aux = json.load(f)
+        except (OSError, ValueError) as e:
+            raise CheckpointCorruptError(f"step {step}: unreadable manifest: {e}") from e
+        crcs = meta.get("leaf_crc")
+        arrays: List[np.ndarray] = []
+        for i in range(len(meta["keys"])):
+            path = os.path.join(src, f"leaf_{i:05d}.npy")
+            try:
+                arr = np.load(path)
+            except Exception as e:  # truncated/absent .npy raises variously
+                raise CheckpointCorruptError(f"step {step}: leaf {i} unreadable: {e}") from e
+            if crcs is not None and _crc(arr) != crcs[i]:
+                raise CheckpointCorruptError(
+                    f"step {step}: leaf {i} CRC mismatch "
+                    f"(stored {crcs[i]}, got {_crc(arr)})"
+                )
+            arrays.append(arr)
+        return meta, aux, arrays
+
+    def verify_step(self, step: int) -> bool:
+        """Does ``step`` verify end-to-end (manifest readable, every leaf
+        loadable and CRC-matching)?"""
+        try:
+            self._read_verified(step)
+            return True
+        except (CheckpointCorruptError, faults.FaultError):
+            return False
+
+    def newest_verifying_step(self) -> Optional[int]:
+        """Newest retained generation that passes :meth:`verify_step`, the
+        LATEST-pointed step tried first; None if nothing verifies."""
+        for s in self._candidate_steps():
+            if self.verify_step(s):
+                return s
+        return None
+
+    def resolve_step(self, step: Optional[int] = None) -> Optional[int]:
+        """Pin the generation a multi-read restore should use. Explicit
+        steps pass through; ``None`` resolves to the newest *verifying*
+        generation, so e.g. aux and arrays read separately land on the
+        same (sound) checkpoint."""
+        if step is not None:
+            return step
+        return self.newest_verifying_step()
+
+    def _candidate_steps(self) -> List[int]:
+        """Restore candidates, most-preferred first: the LATEST-pointed
+        step (if retained), then the rest newest-first."""
+        steps = sorted(self.all_steps(), reverse=True)
+        path = os.path.join(self.root, "LATEST")
+        if os.path.exists(path):
+            try:
+                with open(path) as f:
+                    pointed = int(f.read().strip())
+            except (OSError, ValueError):
+                pointed = None
+            if pointed in steps:
+                steps.remove(pointed)
+                steps.insert(0, pointed)
+        return steps
 
     # -- restore ----------------------------------------------------------------
     def all_steps(self):
@@ -171,9 +332,10 @@ class CheckpointManager:
         with open(path) as f:
             step = int(f.read().strip())
         if not os.path.isdir(os.path.join(self.root, f"step_{step:012d}")):
-            # manifest ahead of a vanished dir -> fall back to newest complete
-            steps = self.all_steps()
-            return steps[-1] if steps else None
+            # manifest ahead of a vanished dir -> newest generation that
+            # actually *verifies* (the newest dir on disk can be the very
+            # one whose write died)
+            return self.newest_verifying_step()
         return step
 
     def load_aux(self, step: Optional[int] = None) -> Dict:
@@ -182,6 +344,8 @@ class CheckpointManager:
         Cold-restore entry point: callers that serialize their own shape
         manifest into ``aux`` (e.g. ``engine.SegmentedStore``) read it here
         first, build a matching zero target tree, then call :meth:`restore`.
+        Pass a step from :meth:`resolve_step` to guarantee aux and arrays
+        come from the same verified generation.
         """
         if step is None:
             step = self.latest_step()
@@ -196,22 +360,45 @@ class CheckpointManager:
         target_tree: PyTree,
         sharding_fn: Optional[Callable[[str, np.ndarray], Any]] = None,
     ) -> Tuple[PyTree, Dict]:
-        """Restore into the structure of ``target_tree``.
+        """Restore into the structure of ``target_tree``, verifying CRCs.
+
+        ``step=None`` walks back: newest generation first, skipping any
+        that fail verification, until one restores — retention as
+        redundancy. An explicit ``step`` raises
+        :class:`CheckpointCorruptError` on corruption instead of silently
+        substituting a different generation. Tree/shape mismatches are
+        caller bugs and raise ``ValueError`` without walking back.
 
         ``sharding_fn(keystr, host_array) -> Sharding | None`` lets the
         caller place each leaf on a (possibly different) mesh — the elastic
         path. None -> plain device_put.
         """
-        if step is None:
-            step = self.latest_step()
-        if step is None:
+        if step is not None:
+            meta, aux, arrays = self._read_verified(step)
+            return self._materialize(meta, arrays, target_tree, sharding_fn), aux
+        candidates = self._candidate_steps()
+        if not candidates:
             raise FileNotFoundError(f"no checkpoint under {self.root}")
-        src = os.path.join(self.root, f"step_{step:012d}")
-        with open(os.path.join(src, "tree.json")) as f:
-            meta = json.load(f)
-        with open(os.path.join(src, "aux.json")) as f:
-            aux = json.load(f)
+        last_err: Optional[BaseException] = None
+        for s in candidates:
+            try:
+                meta, aux, arrays = self._read_verified(s)
+            except (CheckpointCorruptError, faults.FaultError) as e:
+                last_err = e
+                continue
+            return self._materialize(meta, arrays, target_tree, sharding_fn), aux
+        raise CheckpointCorruptError(
+            f"no generation under {self.root} verifies "
+            f"({len(candidates)} tried); last error: {last_err}"
+        )
 
+    def _materialize(
+        self,
+        meta: Dict,
+        arrays: List[np.ndarray],
+        target_tree: PyTree,
+        sharding_fn: Optional[Callable[[str, np.ndarray], Any]],
+    ) -> PyTree:
         flat, treedef = _leaf_paths(target_tree)
         keys = [jax.tree_util.keystr(k) for k, _ in flat]
         if keys != meta["keys"]:
@@ -219,8 +406,7 @@ class CheckpointManager:
             raise ValueError(f"checkpoint/target tree mismatch; differing keys: {sorted(missing)[:8]}")
 
         leaves = []
-        for i, (key, (_, tgt)) in enumerate(zip(keys, flat)):
-            arr = np.load(os.path.join(src, f"leaf_{i:05d}.npy"))
+        for key, (_, tgt), arr in zip(keys, flat, arrays):
             if list(arr.shape) != list(tgt.shape):
                 raise ValueError(f"shape mismatch for {key}: ckpt {arr.shape} vs target {tgt.shape}")
             tgt_dtype = np.dtype(tgt.dtype)
@@ -230,4 +416,4 @@ class CheckpointManager:
                 arr = arr.astype(tgt_dtype)
             sh = sharding_fn(key, arr) if sharding_fn else None
             leaves.append(jax.device_put(arr, sh) if sh is not None else jax.device_put(arr))
-        return treedef.unflatten(leaves), aux
+        return treedef.unflatten(leaves)

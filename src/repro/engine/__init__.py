@@ -9,6 +9,7 @@
 | BandPolicy / BandIndex | banding.py | banded LSH prefilter: per-segment bucket index over packed sketch words |
 | Backend registry | backends.py | oracle / pallas / pallas-interpret behind one name |
 | QueryPlanner | planner.py | ragged batches -> bounded set of jit shapes |
+| JobSupervisor | supervision.py | retries / watchdog / quarantine / health() for background jobs; maintenance errors never reach queries |
 | SketchEngine | engine.py | build + query + sharded query (mixed-width) on the pieces above |
 
 ``core.index.SketchIndex`` is the deprecated batch-era front-end, kept as a
@@ -28,12 +29,20 @@ from .placement import SegmentPlacement, SegmentPlacer, WidthSlab
 from .planner import QueryChunk, QueryPlanner
 from .segments import DistillPolicy, SealedSegment, SegmentedStore
 from .store import SegmentView, SketchStore
+from .supervision import (
+    DegradedMode,
+    JobSupervisor,
+    SupervisedJob,
+    SupervisionPolicy,
+)
 
 __all__ = [
     "Backend",
     "BandIndex",
     "BandPolicy",
+    "DegradedMode",
     "DistillPolicy",
+    "JobSupervisor",
     "QueryChunk",
     "QueryPlanner",
     "SealedSegment",
@@ -43,6 +52,8 @@ __all__ = [
     "SegmentedStore",
     "SketchEngine",
     "SketchStore",
+    "SupervisedJob",
+    "SupervisionPolicy",
     "WidthSlab",
     "available_backends",
     "from_legacy_scorer",

@@ -42,6 +42,7 @@ from typing import List, Optional
 
 import numpy as np
 
+from .. import faults
 from ..core import packed as pk
 
 __all__ = ["BandPolicy", "BandIndex"]
@@ -113,6 +114,7 @@ class BandIndex:
     def build(cls, keys: np.ndarray) -> "BandIndex":
         """``keys (n_rows, n_bands) uint32`` (from ``Backend.band_hash`` or
         ``core.packed.band_hash_host`` — identical) -> the index."""
+        faults.inject("band.build")
         keys = np.ascontiguousarray(keys, dtype=np.uint32)
         n_rows, n_bands = keys.shape
         orders = np.empty((n_bands, n_rows), np.int32)
@@ -141,6 +143,7 @@ class BandIndex:
         gathered candidate slabs keep the segment's id-ascending row order,
         so ``Backend.topk``'s positional tie-break stays the id tie-break.
         """
+        faults.inject("band.lookup")
         qkeys = np.asarray(qkeys, dtype=np.uint32)
         if qkeys.ndim != 2 or qkeys.shape[1] != self.n_bands:
             raise ValueError(

@@ -54,6 +54,7 @@ from .placement import SegmentPlacement, SegmentPlacer, WidthSlab
 from .planner import QueryPlanner
 from .segments import DistillPolicy, SegmentedStore
 from .store import SegmentView, SketchStore
+from .supervision import JobSupervisor
 
 __all__ = ["SketchEngine", "merge_segment_topk", "shard_topk"]
 
@@ -143,6 +144,12 @@ class SketchEngine:
     last_prefilter_stats: Optional[dict] = dataclasses.field(
         default=None, init=False, repr=False
     )
+    # fallback supervisor for engines over an append-only SketchStore
+    # (which has no lifecycle jobs but can still record degraded modes);
+    # mutable engines use the store's own — see :attr:`supervisor`
+    _own_supervisor: Optional[JobSupervisor] = dataclasses.field(
+        default=None, init=False, repr=False
+    )
 
     # ------------------------------------------------------------ construct
     @classmethod
@@ -161,6 +168,7 @@ class SketchEngine:
         seal_rows: Optional[int] = None,
         ttl: Optional[float] = None,
         band_policy: Optional[BandPolicy] = None,
+        supervisor: Optional[JobSupervisor] = None,
     ) -> "SketchEngine":
         """Create an engine; ``corpus_idx`` (C, P) is ingested if given,
         otherwise the engine starts empty and is fed via :meth:`add`.
@@ -179,7 +187,8 @@ class SketchEngine:
                              "(append-only SketchStore has no head to seal, "
                              "no clock, no sealed segments to band)")
         store_cls = SegmentedStore if mutable else SketchStore
-        kw = ({"seal_rows": seal_rows, "ttl": ttl, "band_policy": band_policy}
+        kw = ({"seal_rows": seal_rows, "ttl": ttl, "band_policy": band_policy,
+               "supervisor": supervisor}
               if mutable else {})
         if corpus_idx is not None:
             store = store_cls.from_indices(
@@ -187,7 +196,30 @@ class SketchEngine:
             )
         else:
             store = store_cls.create(cfg, mapping, capacity=capacity, **kw)
-        return cls(store, be, measure, planner or QueryPlanner())
+        eng = cls(store, be, measure, planner or QueryPlanner())
+        if supervisor is not None and not mutable:
+            eng._own_supervisor = supervisor
+        return eng
+
+    # -------------------------------------------------------- observability
+    @property
+    def supervisor(self) -> JobSupervisor:
+        """The supervisor governing this engine's background jobs and
+        degraded-mode records: the mutable store's own, or a lazily-created
+        engine-local one over an append-only store."""
+        sup = getattr(self.store, "supervisor", None)
+        if sup is not None:
+            return sup
+        if self._own_supervisor is None:
+            self._own_supervisor = JobSupervisor()
+        return self._own_supervisor
+
+    def health(self) -> dict:
+        """Operational snapshot (DESIGN.md §13): background-job counters
+        (launched/succeeded/failed/retries/abandoned/refused per op),
+        active quarantines, degraded query-path components with reasons,
+        last error, and job latencies. JSON-safe; ``serve.py`` prints it."""
+        return self.supervisor.health()
 
     # ---------------------------------------------------------------- ingest
     @property
@@ -440,12 +472,26 @@ class SketchEngine:
         dropped here against the *current* host bitmaps, the same predicate
         the exhaustive views apply."""
         store: SegmentedStore = self.store
-        cand = seg.band_index.candidates(qkeys)
+        try:
+            cand = seg.band_index.candidates(qkeys)
+        except Exception as e:
+            # a broken bucket lookup must not break the query: this segment
+            # serves exhaustively and the degradation lands in health()
+            self.supervisor.record_degraded("band_lookup", f"{e}")
+            return None
         if len(cand):
             cand = cand[seg.valid[cand]]
             if store.ttl is not None and now is not None:
                 cand = cand[seg.born[cand] + store.ttl > now]
         if len(cand) > store.band_policy.max_candidate_frac * seg.n_rows:
+            # the escape hatch IS a degraded mode — same fallback (exhaustive
+            # scan), different cause (selectivity, not failure); record it so
+            # a hot query pattern defeating the prefilter shows up in health
+            self.supervisor.record_degraded(
+                "prefilter_hatch",
+                f"candidate union {len(cand)}/{seg.n_rows} rows exceeded "
+                f"max_candidate_frac={store.band_policy.max_candidate_frac}",
+            )
             return None
         return cand
 
@@ -609,11 +655,23 @@ class SketchEngine:
                 query_idx[chunk.start : chunk.start + chunk.rows], chunk.padded
             )
             if banded:
-                sc, ix = self._prefiltered_topk(
-                    qs, chunk.rows, k, now=now, use_fill_cache=use_fill_cache,
-                    width_cache=width_cache, qkeys_cache=qkeys_cache,
-                    stats=stats,
-                )
+                try:
+                    sc, ix = self._prefiltered_topk(
+                        qs, chunk.rows, k, now=now,
+                        use_fill_cache=use_fill_cache,
+                        width_cache=width_cache, qkeys_cache=qkeys_cache,
+                        stats=stats,
+                    )
+                except Exception as e:
+                    # prefilter is an accelerator: any failure here (e.g. a
+                    # query-side band hash blowing up) degrades this chunk
+                    # to the exhaustive scan — same results, more rows
+                    self.supervisor.record_degraded("prefilter", f"{e}")
+                    if views is None:
+                        views = self.store.segment_views(now=now)
+                    sc, ix = self._views_topk(
+                        qs, views, k, use_fill_cache=use_fill_cache
+                    )
                 # per-chunk caches: the padded batch shape changes across
                 # chunks, and with it the cached folded/hashed query blocks
                 width_cache, qkeys_cache = {}, {}
@@ -663,10 +721,18 @@ class SketchEngine:
         if isinstance(self.store, SegmentedStore):
             self.store.poll_compaction()
             if use_placement:
-                return self._query_placed(
-                    mesh, axis, query_idx, k, now=now,
-                    prefilter=self._resolve_prefilter(prefilter),
-                )
+                pf = self._resolve_prefilter(prefilter)  # misuse raises pre-try
+                try:
+                    return self._query_placed(
+                        mesh, axis, query_idx, k, now=now, prefilter=pf,
+                    )
+                except Exception as e:
+                    # placement (build or mask refresh) is an accelerator:
+                    # on failure, drop the cached placement and serve this
+                    # query through the sliced exhaustive path below —
+                    # bit-identical results, worse data movement
+                    self.supervisor.record_degraded("placement", f"{e}")
+                    self._placement = None
         views = self.store.segment_views(now=now)
         qs = self._sketch_queries(query_idx)
         if not views:

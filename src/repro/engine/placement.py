@@ -56,6 +56,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
+from .. import faults
 from ..parallel.sharding import shard_put
 
 __all__ = ["SegmentPlacement", "SegmentPlacer", "WidthSlab"]
@@ -116,6 +117,7 @@ class WidthSlab:
         store-level ``ttl`` and a query-time ``now``, rows whose
         ``born + ttl <= now`` drop out of the mask exactly like the
         single-device view path."""
+        faults.inject("placement.refresh")
         ttl = getattr(store, "ttl", None)
         key = (store._valid_epoch, now if ttl is not None else None)
         if self._valid_key == key and self._valid_dev is not None:
@@ -167,6 +169,7 @@ class SegmentPlacer:
     """Balanced whole-segment placement policy (LPT by live-row count)."""
 
     def place(self, store, mesh: Mesh, axis: str) -> SegmentPlacement:
+        faults.inject("placement.build")
         n_dev = int(mesh.shape[axis])
         base = store.cfg.n_bins
         segs = [(i, s) for i, s in enumerate(store.sealed) if s.n_rows > 0]

@@ -84,11 +84,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..checkpoint.manager import BackgroundJob
+from .. import faults
 from ..core import binsketch, counting
 from ..core import packed as pk
 from .banding import BandIndex, BandPolicy
 from .store import SegmentView, _grow
+from .supervision import JobSupervisor, SupervisedJob
 
 __all__ = ["DistillPolicy", "SealedSegment", "SegmentedStore"]
 
@@ -459,11 +460,12 @@ class _Head:
 
 @dataclasses.dataclass
 class _CompactionJob:
-    """A pending background compaction: the worker plus the identity of the
-    sealed segments it snapshotted (so the swap can verify nothing restructured
-    them mid-flight and knows exactly which segments it replaces)."""
+    """A pending background compaction: the supervised worker plus the
+    identity of the sealed segments it snapshotted (so the swap can verify
+    nothing restructured them mid-flight and knows exactly which segments
+    it replaces)."""
 
-    job: BackgroundJob
+    job: SupervisedJob
     segments: List[SealedSegment]
 
 
@@ -500,6 +502,12 @@ class SegmentedStore:
     _compaction: Optional["_CompactionJob"] = dataclasses.field(
         default=None, repr=False
     )
+    # every background job (compaction, distillation) routes through this;
+    # maintenance failures are retried/quarantined here and NEVER raised
+    # into the query path (DESIGN.md §13)
+    supervisor: JobSupervisor = dataclasses.field(
+        default_factory=JobSupervisor, repr=False
+    )
 
     # ------------------------------------------------------------ construct
     @classmethod
@@ -511,10 +519,12 @@ class SegmentedStore:
         seal_rows: Optional[int] = None,
         ttl: Optional[float] = None,
         band_policy: Optional[BandPolicy] = None,
+        supervisor: Optional[JobSupervisor] = None,
     ) -> "SegmentedStore":
         return cls(
             cfg, mapping, [], _Head.create(cfg.n_bins, cfg.n_words, capacity),
             seal_rows=seal_rows, ttl=ttl, band_policy=band_policy,
+            supervisor=supervisor or JobSupervisor(),
         )
 
     @classmethod
@@ -530,10 +540,12 @@ class SegmentedStore:
         seal_rows: Optional[int] = None,
         ttl: Optional[float] = None,
         band_policy: Optional[BandPolicy] = None,
+        supervisor: Optional[JobSupervisor] = None,
     ) -> "SegmentedStore":
         store = cls.create(
             cfg, mapping, capacity=max(int(corpus_idx.shape[0]), 1),
             seal_rows=seal_rows, ttl=ttl, band_policy=band_policy,
+            supervisor=supervisor,
         )
         store.add(corpus_idx, backend=backend, batch=batch, now=now)
         return store
@@ -929,11 +941,17 @@ class SegmentedStore:
         bp = self.band_policy
         if bp is None or not bp.wants_index(n_rows):
             return None
-        if backend is not None:
-            keys = backend.band_hash(sketches, bp.n_bands)
-        else:
-            keys = pk.band_hash(sketches, bp.n_bands)
-        return BandIndex.build(np.asarray(jax.device_get(keys)))
+        try:
+            if backend is not None:
+                keys = backend.band_hash(sketches, bp.n_bands)
+            else:
+                keys = pk.band_hash(sketches, bp.n_bands)
+            return BandIndex.build(np.asarray(jax.device_get(keys)))
+        except Exception as e:
+            # the index is an accelerator, not an availability dependency:
+            # an unindexed segment just serves through the exhaustive path
+            self.supervisor.record_degraded("band_index", f"build failed: {e}")
+            return None
 
     def seal(self, *, backend=None) -> Optional[SealedSegment]:
         """Freeze the head into a sealed segment (tombstoned head rows are
@@ -1128,8 +1146,10 @@ class SegmentedStore:
             snap.append((group, parts, segs[0].n_bins))
 
         band_policy = self.band_policy
+        sup = self.supervisor
 
         def work():
+            faults.inject("compact.work")
             out = []
             for group, parts, width in snap:
                 sk, fl, ids, valid, born, src_seg, src_row = (
@@ -1148,6 +1168,22 @@ class SegmentedStore:
                 ids_c = np.concatenate(ids)
                 order = np.argsort(ids_c, kind="stable")
                 merged_sk = np.concatenate(sk, axis=0)[order]
+                # prefilter index over the merged slab, built here on the
+                # worker thread (host hash twin — no device dispatch
+                # contending with serving) so the swap installs it for
+                # free. A band-build failure must not fail the merge:
+                # the segment comes out unindexed (exhaustive-scan
+                # fallback) and the degradation is recorded.
+                band_index = None
+                if band_policy is not None and band_policy.wants_index(len(ids_c)):
+                    try:
+                        band_index = BandIndex.build_from_packed(
+                            merged_sk, band_policy.n_bands
+                        )
+                    except Exception as e:
+                        sup.record_degraded(
+                            "band_index", f"build failed during compaction: {e}"
+                        )
                 out.append({
                     "group": group,
                     "n_bins": width,
@@ -1158,23 +1194,18 @@ class SegmentedStore:
                     "born": np.concatenate(born)[order],
                     "src_seg": np.concatenate(src_seg)[order],
                     "src_row": np.concatenate(src_row)[order],
-                    # prefilter index over the merged slab, built here on
-                    # the worker thread (host hash twin — no device
-                    # dispatch contending with serving) so the swap
-                    # installs it for free
-                    "band_index": (
-                        BandIndex.build_from_packed(merged_sk, band_policy.n_bands)
-                        if band_policy is not None
-                        and band_policy.wants_index(len(ids_c))
-                        else None
-                    ),
+                    "band_index": band_index,
                 })
             if _hold is not None:
                 _hold.wait()
             return out
 
+        key = tuple(sorted(i for g in groups for i in g))
+        job = sup.submit("compact", key, work)
+        if job is None:  # quarantined: keep serving the current segments
+            return False
         self._compaction = _CompactionJob(
-            BackgroundJob(work), [self.sealed[i] for g in groups for i in g]
+            job, [self.sealed[i] for g in groups for i in g]
         )
         return True
 
@@ -1227,12 +1258,30 @@ class SegmentedStore:
             ))
 
         band_policy = self.band_policy
+        sup = self.supervisor
 
         def work():
+            faults.inject("distill.work")
             out = []
             for i, cur, tgt, sk, ids, valid, born in snap:
                 keep = np.nonzero(valid)[0]  # ids ascend within one segment:
                 folded, fills = _fold_packed_host(sk[keep], cur, tgt)
+                # the folded rows are a *different* signature space (N'
+                # bins, fewer words): the tier gets its own index, re-
+                # derived from the folded slab — base-width buckets must
+                # never serve a distilled segment. As in compaction, a
+                # band-build failure degrades (unindexed segment), never
+                # fails the fold.
+                band_index = None
+                if band_policy is not None and band_policy.wants_index(len(keep)):
+                    try:
+                        band_index = BandIndex.build_from_packed(
+                            folded, band_policy.n_bands
+                        )
+                    except Exception as e:
+                        sup.record_degraded(
+                            "band_index", f"build failed during distillation: {e}"
+                        )
                 out.append({  # keep-order == id order, no re-sort needed
                     "group": [i],
                     "n_bins": tgt,
@@ -1243,45 +1292,66 @@ class SegmentedStore:
                     "born": born[keep],
                     "src_seg": np.full(len(keep), i, np.int64),
                     "src_row": keep.astype(np.int64),
-                    # the folded rows are a *different* signature space (N'
-                    # bins, fewer words): the tier gets its own index, re-
-                    # derived from the folded slab — base-width buckets
-                    # must never serve a distilled segment
-                    "band_index": (
-                        BandIndex.build_from_packed(folded, band_policy.n_bands)
-                        if band_policy is not None
-                        and band_policy.wants_index(len(keep))
-                        else None
-                    ),
+                    "band_index": band_index,
                 })
             if _hold is not None:
                 _hold.wait()
             return out
 
+        key = tuple(sorted(i for i, _ in plan))
+        job = sup.submit("distill", key, work)
+        if job is None:  # quarantined: the tier stays at its current width
+            return False
         self._compaction = _CompactionJob(
-            BackgroundJob(work), [self.sealed[i] for i, _ in plan]
+            job, [self.sealed[i] for i, _ in plan]
         )
         return True
 
     def poll_compaction(self) -> bool:
         """Swap in a *finished* background compaction, without blocking.
         Called by the engine's query paths, so serving picks the result up
-        the moment it is ready; returns True when a swap happened."""
+        the moment it is ready; returns True when a swap happened.
+
+        NEVER raises a maintenance error into the caller (the caller is a
+        query): the supervisor retries transient failures with backoff
+        (each poll advances the state machine), and a terminally-failed or
+        abandoned job is dropped — its snapshot discarded, the store left
+        serving the consistent pre-swap state it never stopped serving.
+        Failures are visible in ``supervisor.health()``, not in queries."""
         job = self._compaction
-        if job is None or not job.job.done():
+        if job is None:
             return False
-        self.wait_compaction()
-        return True
+        state = self.supervisor.poll(job.job)
+        if state == "running":
+            return False
+        self._compaction = None
+        if state != "succeeded":
+            return False  # logged + counted by the supervisor; serve on
+        return self._apply_swap(job) is not None
 
     def wait_compaction(self) -> Optional[Dict[str, int]]:
-        """Join the background compaction (if any) and apply its swap;
-        returns the compaction stats, or None if no job was pending."""
+        """Drive the background compaction (if any) to a terminal state —
+        sleeping through retry backoff — and apply its swap; returns the
+        compaction stats, or None if no job was pending or the job failed
+        (like :meth:`poll_compaction`, failures never raise here)."""
         job = self._compaction
         if job is None:
             return None
         self._compaction = None
-        results = job.job.result()
-        return self._swap_compaction(job, results)
+        state = self.supervisor.wait(job.job)
+        if state != "succeeded":
+            return None
+        return self._apply_swap(job)
+
+    def _apply_swap(self, job: "_CompactionJob") -> Optional[Dict[str, int]]:
+        """Final guard between a succeeded worker and the query path: a
+        swap that itself blows up (it only *mutates* at the very end, so
+        the store stays consistent) is recorded, never raised."""
+        try:
+            return self._swap_compaction(job, job.job.result)
+        except Exception as e:
+            self.supervisor.record_degraded("compaction_swap", str(e))
+            return None
 
     def _swap_compaction(self, job, results) -> Dict[str, int]:
         """Atomic swap on the caller's thread (step 3 of the pattern).
@@ -1424,7 +1494,13 @@ class SegmentedStore:
     def restore(cls, manager, step: Optional[int] = None) -> "SegmentedStore":
         """Cold-restore from a checkpoint: shapes come from the aux manifest
         (no live store needed), nothing is re-sketched, and the location
-        map / live count rebuild from the restored tombstone bitmaps."""
+        map / live count rebuild from the restored tombstone bitmaps.
+
+        The step is pinned via ``manager.resolve_step`` first — the newest
+        *verifying* generation — so the aux manifest read here and the
+        arrays read in ``manager.restore`` come from the same sound
+        checkpoint even when the latest write was torn."""
+        step = manager.resolve_step(step)
         aux = manager.load_aux(step)
         if aux.get("kind") != "segmented_store":
             raise ValueError(f"checkpoint is not a SegmentedStore snapshot: {aux.get('kind')!r}")

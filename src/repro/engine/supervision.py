@@ -1,0 +1,408 @@
+"""JobSupervisor — supervised lifecycle for background maintenance (DESIGN.md §13).
+
+Before this module, a background maintenance failure was a *serving*
+failure: ``BackgroundJob`` stores the worker's exception and re-raises it
+on the caller's thread — and the caller is ``poll_compaction`` inside the
+query path, so one bad merge turned into a query-time exception for every
+request until someone intervened. In the paper's regime (unbounded
+streams, maintenance that runs forever) transient failures are a
+certainty, not an edge case; the engine needs the classic supervision-tree
+answer:
+
+  * **retry with capped exponential backoff** — a failed attempt is
+    relaunched against the *same snapshot* (snapshots are host copies;
+    the swap step reconciles against live tombstones, so a late retry is
+    exactly as correct as a fast first try), after
+    ``backoff_base · factor^(attempt-1)`` seconds, capped, at most
+    ``max_retries`` times;
+  * **watchdog deadlines** — an attempt still running past ``deadline``
+    seconds is *abandoned*: the supervisor drops the job, its snapshot is
+    discarded, and its result — even if the hung thread eventually
+    produces one — is never swapped in. Hangs are not retried (a retry of
+    a hang usually hangs; threads would pile up);
+  * **quarantine** — after ``quarantine_after`` consecutive exhausted
+    launches of one ``(operation, key)`` pair (key ≈ the segment group),
+    further launches for that pair are refused until ``probation``
+    seconds pass; then exactly one probe launch is allowed and a healthy
+    run clears the quarantine. A poison segment can cost a bounded number
+    of wasted merges, never a retry loop;
+  * **degraded-mode bookkeeping** — query-path accelerators (banded
+    prefilter, segment placement) that fail fall back to the exhaustive
+    paths and record a :class:`DegradedMode` here, so "serving is fine
+    but slower, here is why" is visible in one place;
+  * **health()** — one JSON-safe snapshot of all of the above: per-op
+    job counters, retry/abandon/quarantine counts, last error, degraded
+    components, job latencies. Surfaced through ``SketchEngine.health()``
+    and ``launch/serve.py``.
+
+The invariant the whole module defends: **no maintenance error ever
+propagates into a query**. ``poll()`` and ``wait()`` never raise; failed
+jobs leave the store exactly as the snapshot/swap design already
+guarantees — serving the consistent pre-swap state.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import logging
+import threading
+import time
+import traceback
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+from ..checkpoint.manager import BackgroundJob
+
+__all__ = [
+    "DegradedMode",
+    "JobSupervisor",
+    "SupervisedJob",
+    "SupervisionPolicy",
+]
+
+log = logging.getLogger("repro.supervision")
+
+# Terminal/poll states (strings, not an enum: they go straight into health
+# snapshots and log lines).
+RUNNING = "running"
+SUCCEEDED = "succeeded"
+FAILED = "failed"
+
+
+@dataclasses.dataclass(frozen=True)
+class SupervisionPolicy:
+    """Retry / watchdog / quarantine knobs (DESIGN.md §13).
+
+    ``max_retries`` is *re*-tries: a launch makes at most
+    ``1 + max_retries`` attempts. ``deadline`` (seconds, None = no
+    watchdog) bounds a single attempt's runtime; past it the attempt is
+    abandoned, terminally. ``quarantine_after`` counts consecutive
+    *exhausted launches* (not attempts) of one (op, key) pair before the
+    pair is quarantined; ``probation`` is how long the quarantine holds
+    before one probe launch is allowed through."""
+
+    max_retries: int = 3
+    backoff_base: float = 0.05
+    backoff_factor: float = 2.0
+    backoff_cap: float = 2.0
+    deadline: Optional[float] = None
+    quarantine_after: int = 3
+    probation: float = 30.0
+
+    def backoff(self, attempt: int) -> float:
+        """Delay before attempt ``attempt+1`` (attempt counts from 1)."""
+        return min(
+            self.backoff_base * self.backoff_factor ** max(attempt - 1, 0),
+            self.backoff_cap,
+        )
+
+
+@dataclasses.dataclass
+class DegradedMode:
+    """One degraded query-path component: the engine is serving correct
+    results through a slower fallback (exhaustive scan instead of the
+    banded prefilter, sliced path instead of placement). ``reason`` is
+    the first failure's message; ``count`` accumulates repeats."""
+
+    component: str
+    reason: str
+    count: int = 1
+    last_at: float = 0.0
+
+    def snapshot(self) -> dict:
+        return {
+            "component": self.component,
+            "reason": self.reason,
+            "count": int(self.count),
+            "last_at": float(self.last_at),
+        }
+
+
+class SupervisedJob:
+    """One supervised background launch: a (re-launchable) work fn plus
+    its retry/backoff/watchdog state. Construct via
+    :meth:`JobSupervisor.submit`; advance via :meth:`JobSupervisor.poll`.
+
+    ``result`` is valid only once ``state == "succeeded"``; ``error``
+    holds the last attempt's exception once ``state == "failed"``."""
+
+    def __init__(
+        self,
+        op: str,
+        key: Tuple,
+        fn: Callable[[], Any],
+        policy: SupervisionPolicy,
+        clock: Callable[[], float],
+    ):
+        self.op = op
+        self.key = key
+        self.fn = fn
+        self.policy = policy
+        self._clock = clock
+        self.state = RUNNING
+        self.result: Any = None
+        self.error: Optional[BaseException] = None
+        self.attempts = 1
+        self.retries = 0
+        self.abandoned = False
+        self.launched_at = clock()
+        self.attempt_started = self.launched_at
+        self.finished_at: Optional[float] = None
+        self._next_retry: Optional[float] = None  # set while backing off
+        self._job: Optional[BackgroundJob] = BackgroundJob(fn)
+
+    @property
+    def latency(self) -> Optional[float]:
+        if self.finished_at is None:
+            return None
+        return self.finished_at - self.launched_at
+
+
+class JobSupervisor:
+    """Supervises background maintenance jobs; see the module docstring.
+
+    One instance per :class:`~repro.engine.segments.SegmentedStore` by
+    default (shareable — a checkpoint manager can point at the same one).
+    All methods are thread-safe and none of them raise job errors."""
+
+    def __init__(
+        self,
+        policy: Optional[SupervisionPolicy] = None,
+        clock: Callable[[], float] = time.monotonic,
+    ):
+        self.policy = policy or SupervisionPolicy()
+        self._clock = clock
+        self._lock = threading.Lock()
+        # (op, key) -> consecutive exhausted-launch count
+        self._consec: Dict[Tuple[str, Tuple], int] = {}
+        # (op, key) -> (quarantined_at, probing: bool)
+        self._quarantine: Dict[Tuple[str, Tuple], List] = {}
+        self._counters: Dict[str, Dict[str, int]] = {}
+        self._latency: Dict[str, Dict[str, float]] = {}
+        self._last_error: Optional[dict] = None
+        self._degraded: Dict[str, DegradedMode] = {}
+
+    # ------------------------------------------------------------- internals
+    @staticmethod
+    def _norm_key(key) -> Tuple:
+        if isinstance(key, (list, tuple)):
+            return tuple(key)
+        return (key,)
+
+    def _count(self, op: str, field: str, n: int = 1) -> None:
+        ops = self._counters.setdefault(
+            op,
+            {"launched": 0, "succeeded": 0, "failed": 0, "retries": 0,
+             "abandoned": 0, "refused": 0},
+        )
+        ops[field] = ops.get(field, 0) + n
+
+    def _note_error(self, job: SupervisedJob, err: BaseException) -> None:
+        self._last_error = {
+            "op": job.op,
+            "key": list(job.key),
+            "error": f"{type(err).__name__}: {err}",
+            "at": self._clock(),
+        }
+
+    def _record_latency(self, job: SupervisedJob) -> None:
+        lat = job.latency
+        if lat is None:
+            return
+        ent = self._latency.setdefault(
+            job.op, {"count": 0.0, "total_s": 0.0, "max_s": 0.0}
+        )
+        ent["count"] += 1
+        ent["total_s"] += lat
+        ent["max_s"] = max(ent["max_s"], lat)
+
+    def _record_failure(self, job: SupervisedJob) -> None:
+        """Terminal failure of one launch: consecutive-failure accounting
+        plus (maybe) quarantine. Caller holds the lock."""
+        k = (job.op, job.key)
+        n = self._consec.get(k, 0) + 1
+        self._consec[k] = n
+        self._count(job.op, "failed")
+        ent = self._quarantine.get(k)
+        if ent is not None:
+            # a probe launch failed: restart the probation window (the
+            # probing flag must not stick, or the pair could never heal)
+            ent[0] = self._clock()
+            ent[1] = False
+            log.warning("probe of quarantined %s %s failed; probation "
+                        "restarted", job.op, job.key)
+        elif n >= self.policy.quarantine_after:
+            self._quarantine[k] = [self._clock(), False]
+            log.warning(
+                "quarantined %s %s after %d consecutive failed launches",
+                job.op, job.key, n,
+            )
+
+    def _record_success(self, job: SupervisedJob) -> None:
+        k = (job.op, job.key)
+        self._consec.pop(k, None)
+        self._quarantine.pop(k, None)  # a healthy run clears quarantine
+        self._count(job.op, "succeeded")
+
+    # ------------------------------------------------------------ public API
+    def quarantined(self, op: str, key) -> bool:
+        """Is ``(op, key)`` currently refusing launches? Probation expiry
+        does not clear the quarantine — it admits one probe launch whose
+        *success* clears it (checked/consumed by :meth:`submit`)."""
+        with self._lock:
+            ent = self._quarantine.get((op, self._norm_key(key)))
+            if ent is None:
+                return False
+            at, probing = ent
+            return probing or self._clock() - at < self.policy.probation
+
+    def submit(self, op: str, key, fn: Callable[[], Any]) -> Optional[SupervisedJob]:
+        """Launch ``fn`` on a daemon thread under supervision; returns the
+        job, or None when ``(op, key)`` is quarantined (the caller keeps
+        its current state and moves on — refusal is not an error)."""
+        nkey = self._norm_key(key)
+        with self._lock:
+            ent = self._quarantine.get((op, nkey))
+            if ent is not None:
+                at, probing = ent
+                if probing or self._clock() - at < self.policy.probation:
+                    self._count(op, "refused")
+                    return None
+                ent[1] = True  # probation over: admit exactly one probe
+            self._count(op, "launched")
+        return SupervisedJob(op, nkey, fn, self.policy, self._clock)
+
+    def poll(self, job: Optional[SupervisedJob]) -> str:
+        """Advance a job's state machine without blocking; returns
+        ``"running"`` | ``"succeeded"`` | ``"failed"``. Never raises:
+        errors are recorded, retried (with backoff) while the budget
+        lasts, and terminal failures just come back as ``"failed"``."""
+        if job is None:
+            return FAILED
+        if job.state != RUNNING:
+            return job.state
+        now = self._clock()
+        if job._next_retry is not None:  # backing off between attempts
+            if now < job._next_retry:
+                return RUNNING
+            job._next_retry = None
+            job.attempts += 1
+            job.retries += 1
+            job.attempt_started = now
+            job._job = BackgroundJob(job.fn)
+            with self._lock:
+                self._count(job.op, "retries")
+            return RUNNING
+        bg = job._job
+        if not bg.done():
+            dl = self.policy.deadline
+            if dl is not None and now - job.attempt_started > dl:
+                # watchdog: the attempt is hung — abandon the launch.
+                # The thread is a daemon touching only its snapshot; we
+                # drop every reference to its (future) result so it can
+                # never be swapped in.
+                job.state = FAILED
+                job.abandoned = True
+                job.error = TimeoutError(
+                    f"{job.op} attempt exceeded deadline {dl:.3f}s"
+                )
+                job.finished_at = now
+                job._job = None
+                with self._lock:
+                    self._count(job.op, "abandoned")
+                    self._note_error(job, job.error)
+                    self._record_failure(job)
+                log.warning("abandoned hung %s %s (deadline %.3fs)",
+                            job.op, job.key, dl)
+            return job.state
+        err = bg.error
+        if err is None:
+            job.state = SUCCEEDED
+            job.result = bg.value
+            job.finished_at = now
+            with self._lock:
+                self._record_success(job)
+                self._record_latency(job)
+            return SUCCEEDED
+        # attempt failed
+        with self._lock:
+            self._note_error(job, err)
+        if job.attempts <= self.policy.max_retries:
+            delay = self.policy.backoff(job.attempts)
+            job._next_retry = now + delay
+            log.info("retrying %s %s in %.3fs after: %s",
+                     job.op, job.key, delay, err)
+            return RUNNING
+        job.state = FAILED
+        job.error = err
+        job.finished_at = now
+        job._job = None
+        with self._lock:
+            self._record_failure(job)
+            self._record_latency(job)
+        log.warning("gave up on %s %s after %d attempt(s): %s",
+                    job.op, job.key, job.attempts, err)
+        return FAILED
+
+    def wait(self, job: Optional[SupervisedJob], poll_s: float = 0.005) -> str:
+        """Drive ``job`` to a terminal state (joining threads, sleeping
+        through backoff windows); returns it. Never raises."""
+        if job is None:
+            return FAILED
+        while True:
+            st = self.poll(job)
+            if st != RUNNING:
+                return st
+            bg = job._job
+            if bg is not None and job._next_retry is None \
+                    and self.policy.deadline is None:
+                bg._thread.join()  # no watchdog: a plain join is exact
+            else:
+                time.sleep(poll_s)
+
+    # ------------------------------------------------------- degraded modes
+    def record_degraded(self, component: str, reason: str) -> None:
+        """A query-path accelerator failed and its fallback engaged."""
+        with self._lock:
+            ent = self._degraded.get(component)
+            if ent is None:
+                self._degraded[component] = DegradedMode(
+                    component, reason, 1, self._clock()
+                )
+                log.warning("degraded mode: %s (%s)", component, reason)
+            else:
+                ent.count += 1
+                ent.reason = reason
+                ent.last_at = self._clock()
+
+    def clear_degraded(self, component: str) -> None:
+        with self._lock:
+            self._degraded.pop(component, None)
+
+    # --------------------------------------------------------------- health
+    def health(self) -> dict:
+        """JSON-safe operational snapshot: job counters per op, quarantine
+        and degraded-mode state, last error, latencies. The ops surface —
+        ``SketchEngine.health()`` and ``serve.py`` print this."""
+        with self._lock:
+            now = self._clock()
+            lat = {
+                op: {
+                    "count": int(e["count"]),
+                    "mean_s": e["total_s"] / e["count"] if e["count"] else 0.0,
+                    "max_s": e["max_s"],
+                }
+                for op, e in self._latency.items()
+            }
+            return {
+                "jobs": {op: dict(c) for op, c in self._counters.items()},
+                "retries": sum(c.get("retries", 0) for c in self._counters.values()),
+                "abandoned": sum(c.get("abandoned", 0) for c in self._counters.values()),
+                "quarantined": [
+                    {"op": op, "key": list(key), "for_s": now - at,
+                     "probing": bool(probing)}
+                    for (op, key), (at, probing) in self._quarantine.items()
+                ],
+                "degraded": [d.snapshot() for d in self._degraded.values()],
+                "last_error": dict(self._last_error) if self._last_error else None,
+                "latency_s": lat,
+            }

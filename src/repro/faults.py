@@ -1,0 +1,237 @@
+"""Deterministic, seeded fault injection (DESIGN.md §13).
+
+The supervision layer (``engine/supervision.py``) exists to survive
+maintenance failures; this module exists to *cause* them, on demand and
+reproducibly, so the chaos suite can prove the survival story instead of
+asserting it. The design constraints, in order:
+
+  1. **Zero overhead when disabled.** Every injection point compiles down
+     to one module-global ``None`` check (``_ACTIVE is None``) on the hot
+     path — no dict lookups, no RNG draws, no locks. Serving code is
+     instrumented permanently; the cost is paid only while a plan is
+     installed.
+  2. **Deterministic.** A :class:`FaultPlan` is seeded: per point, the
+     decision stream is a pure function of ``(seed, point, hit ordinal)``.
+     Two runs with the same plan and the same per-point hit sequence make
+     identical injection decisions — CI runs the chaos suite with a fixed
+     seed and a failure reproduces locally from the seed alone.
+  3. **Typed failure modes.** ``raise`` (a :class:`FaultError` — the
+     canonical *transient* error the supervisor retries), ``delay`` (a
+     sleep, for watchdog/latency paths), and ``torn-write`` (truncate a
+     just-written file *without* raising — silent corruption that only
+     checkpoint verification can catch).
+
+Injection points are **named** (see :data:`POINTS`); plans naming an
+unknown point fail at construction, so a typo cannot silently disarm a
+chaos test. The points thread through ``BackgroundJob`` work functions
+(compaction, distillation), checkpoint write/restore, band-index
+build/lookup, and placement build/refresh.
+
+Usage::
+
+    plan = FaultPlan({"compact.work": FaultSpec("raise", times=2)}, seed=7)
+    with faults.scoped(plan):
+        ...            # first two compaction attempts raise FaultError
+    plan.counters()    # {"hits": {...}, "fired": {...}}
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import os
+import random
+import threading
+import time
+import zlib
+from typing import Dict, Optional
+
+__all__ = [
+    "POINTS",
+    "FaultError",
+    "FaultPlan",
+    "FaultSpec",
+    "active",
+    "clear",
+    "inject",
+    "install",
+    "scoped",
+    "torn_write",
+]
+
+#: The named injection points (DESIGN.md §13 table). A FaultPlan naming a
+#: point outside this set raises at construction.
+POINTS = frozenset({
+    "compact.work",        # background compaction merge (worker thread)
+    "distill.work",        # background distillation fold (worker thread)
+    "band.build",          # BandIndex construction (seal / worker / restore)
+    "band.lookup",         # BandIndex.candidates (query thread)
+    "placement.build",     # SegmentPlacer.place (slab upload)
+    "placement.refresh",   # WidthSlab.valid_mask (tombstone/TTL refresh)
+    "checkpoint.write",    # whole checkpoint write job
+    "checkpoint.leaf",     # per-leaf file write (torn-write target)
+    "checkpoint.restore",  # per-generation read during restore/verify
+})
+
+_MODES = ("raise", "delay", "torn-write")
+
+
+class FaultError(RuntimeError):
+    """An injected failure. Transient by construction: the operation that
+    raised it would succeed if simply re-run after the plan's trigger
+    budget is spent — exactly the failure class the supervisor's
+    retry/backoff loop is specified against."""
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSpec:
+    """What happens at one injection point.
+
+    ``mode``: ``"raise"`` | ``"delay"`` | ``"torn-write"``. ``p`` is the
+    per-hit firing probability (1.0 = every eligible hit). ``times`` caps
+    the total number of firings (None = unbounded) — ``times=2`` models a
+    transient failure that clears on the third retry. ``after`` skips the
+    first N hits (arm the fault mid-run). ``delay_s`` is the sleep for
+    ``delay`` mode."""
+
+    mode: str = "raise"
+    p: float = 1.0
+    times: Optional[int] = None
+    after: int = 0
+    delay_s: float = 0.02
+
+    def __post_init__(self):
+        if self.mode not in _MODES:
+            raise ValueError(f"mode must be one of {_MODES}, got {self.mode!r}")
+        if not 0.0 <= self.p <= 1.0:
+            raise ValueError(f"p must be in [0, 1], got {self.p}")
+        if self.times is not None and self.times < 0:
+            raise ValueError(f"times must be >= 0, got {self.times}")
+        if self.after < 0:
+            raise ValueError(f"after must be >= 0, got {self.after}")
+
+
+class FaultPlan:
+    """A seeded set of :class:`FaultSpec` per injection point, with
+    deterministic per-point decision streams and thread-safe counters
+    (injection points are hit from worker threads and the query thread
+    concurrently)."""
+
+    def __init__(self, specs: Dict[str, FaultSpec], seed: int = 0):
+        unknown = set(specs) - POINTS
+        if unknown:
+            raise ValueError(
+                f"unknown injection point(s) {sorted(unknown)}; "
+                f"known: {sorted(POINTS)}"
+            )
+        self.specs = dict(specs)
+        self.seed = int(seed)
+        self._lock = threading.Lock()
+        self._hits: Dict[str, int] = {p: 0 for p in specs}
+        self._fired: Dict[str, int] = {p: 0 for p in specs}
+        # one independent, seeded stream per point: the decision at hit k
+        # of point P never depends on traffic at other points
+        self._rng: Dict[str, random.Random] = {
+            p: random.Random(self.seed ^ zlib.crc32(p.encode()))
+            for p in specs
+        }
+
+    def decide(self, point: str) -> Optional[FaultSpec]:
+        """Record a hit at ``point``; return the spec iff the fault fires."""
+        spec = self.specs.get(point)
+        if spec is None:
+            return None
+        with self._lock:
+            k = self._hits[point]
+            self._hits[point] = k + 1
+            if k < spec.after:
+                return None
+            if spec.times is not None and self._fired[point] >= spec.times:
+                return None
+            if spec.p < 1.0 and self._rng[point].random() >= spec.p:
+                return None
+            self._fired[point] += 1
+            return spec
+
+    def counters(self) -> Dict[str, Dict[str, int]]:
+        """{"hits": per-point reach counts, "fired": per-point injections}."""
+        with self._lock:
+            return {"hits": dict(self._hits), "fired": dict(self._fired)}
+
+    @property
+    def total_fired(self) -> int:
+        with self._lock:
+            return sum(self._fired.values())
+
+
+_ACTIVE: Optional[FaultPlan] = None
+
+
+def install(plan: FaultPlan) -> FaultPlan:
+    """Arm ``plan`` process-wide (one plan at a time)."""
+    global _ACTIVE
+    _ACTIVE = plan
+    return plan
+
+
+def clear() -> None:
+    """Disarm fault injection (back to the zero-overhead path)."""
+    global _ACTIVE
+    _ACTIVE = None
+
+
+def active() -> Optional[FaultPlan]:
+    return _ACTIVE
+
+
+@contextlib.contextmanager
+def scoped(plan: FaultPlan):
+    """``with faults.scoped(plan): ...`` — install for the block, always
+    disarm on exit (the chaos tests' idiom; a failed assertion cannot leak
+    an armed plan into the next test)."""
+    install(plan)
+    try:
+        yield plan
+    finally:
+        clear()
+
+
+def inject(point: str) -> None:
+    """The injection point: no-op unless a plan is armed and fires.
+
+    ``raise`` -> :class:`FaultError`; ``delay`` -> sleep; ``torn-write``
+    at a pointless (no file) site degrades to ``raise`` so a misplanned
+    spec is loud rather than silent."""
+    plan = _ACTIVE
+    if plan is None:
+        return
+    spec = plan.decide(point)
+    if spec is None:
+        return
+    if spec.mode == "delay":
+        time.sleep(spec.delay_s)
+        return
+    raise FaultError(f"injected fault at {point!r}")
+
+
+def torn_write(point: str, path: str) -> bool:
+    """File-targeted injection point: with a ``torn-write`` spec armed,
+    truncate ``path`` to half its size and return True — *without*
+    raising. The write path believes it succeeded; only content
+    verification (checkpoint CRCs) can notice. ``raise``/``delay`` specs
+    at this point behave as in :func:`inject`."""
+    plan = _ACTIVE
+    if plan is None:
+        return False
+    spec = plan.decide(point)
+    if spec is None:
+        return False
+    if spec.mode == "delay":
+        time.sleep(spec.delay_s)
+        return False
+    if spec.mode == "raise":
+        raise FaultError(f"injected fault at {point!r}")
+    size = os.path.getsize(path)
+    with open(path, "r+b") as f:
+        f.truncate(size // 2)
+    return True

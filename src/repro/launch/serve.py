@@ -2,6 +2,7 @@
 
     PYTHONPATH=src python -m repro.launch.serve --dataset tiny --queries 64
     PYTHONPATH=src python -m repro.launch.serve --mutate-rate 0.3   # live catalog
+    PYTHONPATH=src python -m repro.launch.serve --chaos 0.3         # fault demo
 
 Runs on :class:`repro.engine.SketchEngine`. Build phase: the corpus streams
 into the store in ``--ingest-batch`` chunks (incremental ingest; fill
@@ -111,8 +112,27 @@ def main(argv=None):
     ap.add_argument("--bands", type=int, default=8,
                     help="bands per sketch for --prefilter (more bands = "
                          "higher recall, larger candidate unions)")
+    ap.add_argument("--chaos", type=float, default=None, metavar="RATE",
+                    help="fault-injection demo (DESIGN.md §13): arm a seeded "
+                         "FaultPlan firing at this per-hit probability on "
+                         "the maintenance and query-path injection points, "
+                         "run supervised background compaction and "
+                         "checkpoint saves during the serve loop, then "
+                         "report injected / recovered / quarantined counts, "
+                         "the restore walk-back, and recall under faults. "
+                         "Implies --mutate-rate 0.3 and --prefilter unless "
+                         "given explicitly")
+    ap.add_argument("--chaos-seed", type=int, default=1234,
+                    help="FaultPlan seed for --chaos (CI pins this so a "
+                         "failure reproduces locally from the seed alone)")
     ap.add_argument("--check-recall", action="store_true", default=True)
     args = ap.parse_args(argv)
+
+    chaos = args.chaos is not None and args.chaos > 0.0
+    if chaos:
+        if args.mutate_rate == 0.0:
+            args.mutate_rate = 0.3  # chaos needs a mutable lifecycle to fault
+        args.prefilter = True  # exercise band.build / band.lookup degradation
 
     from repro.core import BinSketchConfig, make_mapping
     from repro.data.synthetic import DATASETS, generate_corpus
@@ -131,6 +151,14 @@ def main(argv=None):
           f"{cfg.n_words * 4} B/doc vs {int(lens.mean()) * 4} B raw avg)")
     mapping = make_mapping(cfg, jax.random.PRNGKey(0))
 
+    supervisor = None
+    if chaos:
+        from repro.engine import JobSupervisor, SupervisionPolicy
+
+        supervisor = JobSupervisor(SupervisionPolicy(
+            max_retries=3, backoff_base=0.02, backoff_cap=0.2,
+            deadline=60.0, quarantine_after=3, probation=5.0,
+        ))
     engine = SketchEngine.build(
         cfg, mapping,
         backend=args.backend,
@@ -139,7 +167,13 @@ def main(argv=None):
         mutable=mutable,
         seal_rows=args.seal_rows,
         ttl=args.ttl,
-        band_policy=BandPolicy(n_bands=args.bands) if args.prefilter else None,
+        # chaos lowers min_rows so the demo corpus's small segments get
+        # band indexes at all — otherwise band.build/band.lookup faults
+        # would never be reached on the tiny dataset
+        band_policy=(BandPolicy(n_bands=args.bands,
+                                min_rows=64 if chaos else 256)
+                     if args.prefilter else None),
+        supervisor=supervisor,
     )
     if args.prefilter:
         pol = engine.store.band_policy
@@ -183,7 +217,13 @@ def main(argv=None):
         if len(upd):
             engine.update(upd.tolist(), jnp.asarray(fresh_idx[upd]), now=float(tick))
         engine.seal()
-        if args.background_compact:
+        if chaos:
+            # compaction is deferred into the chaos serve loop below: the
+            # merge must launch *after* the FaultPlan is armed so the
+            # injected failures hit it deterministically (launching first
+            # and arming second would race the worker past the fault point)
+            stats = None
+        elif args.background_compact:
             # snapshot-to-host happens here; the merge runs on the worker
             # thread while the serve phase below answers queries against
             # the old segments — the swap lands at whichever query batch
@@ -202,7 +242,9 @@ def main(argv=None):
             contents[int(g)] = fresh_idx[g]
             born[int(g)] = tick
         compacted = (f"compacted {stats['rows_in']}->{stats['rows_out']} rows"
-                     if stats else "compaction running in background")
+                     if stats else ("compaction deferred to chaos loop"
+                                    if chaos else
+                                    "compaction running in background"))
         print(f"mutate: {len(dele)} deleted, {len(upd)} updated, sealed + "
               f"{compacted} in {t_mut:.2f}s "
               f"({n_mut / max(t_mut, 1e-9):.0f} mutations/s); "
@@ -264,9 +306,50 @@ def main(argv=None):
               + (", segment-placed (resident slabs, head replicated)"
                  if mutable else ", row-sliced single slab"))
 
+    chaos_mgr = chaos_dir = chaos_plan = None
+    chaos_saves = 0
+    if chaos:
+        import shutil
+        import tempfile
+
+        from repro import faults
+        from repro.checkpoint.manager import CheckpointManager
+
+        chaos_dir = tempfile.mkdtemp(prefix="repro-chaos-ckpt-")
+        chaos_mgr = CheckpointManager(chaos_dir, keep=8, supervisor=supervisor)
+        # one clean generation before the plan arms: the restore walk-back
+        # below is then guaranteed a verifying floor to land on, however
+        # many of the under-fire saves get torn
+        engine.store.save(chaos_mgr, step=1, blocking=True)
+        chaos_saves = 1
+        rate = min(args.chaos, 1.0)
+        chaos_plan = faults.install(faults.FaultPlan({
+            "compact.work": faults.FaultSpec("raise", p=rate),
+            "distill.work": faults.FaultSpec("raise", p=rate),
+            "band.build": faults.FaultSpec("raise", p=rate),
+            "band.lookup": faults.FaultSpec("raise", p=rate),
+            "placement.build": faults.FaultSpec("raise", p=rate),
+            "placement.refresh": faults.FaultSpec("raise", p=rate),
+            "checkpoint.write": faults.FaultSpec("raise", p=rate),
+            "checkpoint.leaf": faults.FaultSpec("torn-write", p=rate),
+        }, seed=args.chaos_seed))
+        engine.compact(background=True)  # merges under fire, supervised
+        print(f"chaos: plan armed at rate={rate} seed={args.chaos_seed}; "
+              f"deferred compaction launched under faults; checkpoints in "
+              f"{chaos_dir}")
+
     t0 = time.time()
     all_ids = []
     for s in range(0, args.queries, args.batch):
+        if chaos:
+            # the maintenance heartbeat a real server would run: drive the
+            # supervised compaction (retries/backoff land here; never
+            # raises into serving) and overlap async checkpoint saves
+            engine.poll_compaction()
+            if s // args.batch in (1, 3, 5):
+                chaos_saves += 1
+                engine.store.save(chaos_mgr, step=chaos_saves,
+                                  blocking=False)
         qb = jnp.asarray(queries[s : s + args.batch])
         if mesh is not None:
             scores, ids = engine.query_sharded(mesh, axis, qb, args.topk,
@@ -291,6 +374,44 @@ def main(argv=None):
             print(f"background compaction: {stats['groups']} group(s), "
                   f"{stats['rows_in']}->{stats['rows_out']} rows "
                   f"(served throughout)")
+
+    if chaos:
+        stats = engine.wait_compaction()  # supervised: never raises
+        chaos_mgr.wait()  # drain the last async save (ditto)
+        faults.clear()
+        h = engine.health()
+        c = chaos_plan.counters()
+        fired = {p: k for p, k in sorted(c["fired"].items()) if k}
+        jobs = h["jobs"]
+        recovered = sum(v.get("succeeded", 0) for v in jobs.values())
+        failed = sum(v.get("failed", 0) for v in jobs.values())
+        print(f"chaos: {chaos_plan.total_fired} fault(s) injected {fired}")
+        print(f"chaos: jobs recovered={recovered} failed={failed} "
+              f"retries={h['retries']} abandoned={h['abandoned']} "
+              f"quarantined={[q['op'] for q in h['quarantined']]} "
+              f"degraded={sorted(d['component'] for d in h['degraded'])}")
+        if stats:
+            print(f"chaos: compaction landed under faults — "
+                  f"{stats['rows_in']}->{stats['rows_out']} rows "
+                  f"(retried through injected failures)")
+        elif jobs.get("compact", {}).get("succeeded", 0):
+            # a query-batch poll already swapped the result in mid-loop
+            print("chaos: compaction landed under faults mid-serve "
+                  "(swapped in by a query-path poll)")
+        else:
+            print("chaos: compaction never landed (retries exhausted or "
+                  "quarantined) — serving degraded to the pre-compaction "
+                  "segments throughout, no query saw an error")
+        from repro.engine import SegmentedStore
+
+        good = chaos_mgr.resolve_step(None)
+        torn = [st for st in range(1, chaos_saves + 1)
+                if not chaos_mgr.verify_step(st)]
+        restored = SegmentedStore.restore(chaos_mgr)
+        print(f"chaos: {chaos_saves} checkpoint generation(s) written, "
+              f"torn/failed: {torn if torn else 'none'}; restore walked "
+              f"back to step {good} ({restored.size} live docs)")
+        shutil.rmtree(chaos_dir, ignore_errors=True)
 
     if args.check_recall:
         truth = exact_topk_jaccard(surv_rows, queries, args.topk)
