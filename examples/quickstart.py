@@ -95,6 +95,22 @@ def lifecycle():
           f"top-5 overlap with full width: {kept:.2f}")
     assert (np.asarray(ids2)[:, 0] >= 0).all()
 
+    # observe: arm the telemetry plane and read one JSON-safe snapshot —
+    # stage latency histograms, per-segment lifecycle gauges, the last
+    # sampled trace (DESIGN.md §14)
+    eng.enable_metrics()
+    eng.query(q, k=5)
+    m = eng.metrics()
+    seg0 = m["lifecycle"]["segments"][0]
+    stages = {k: f"{v * 1e3:.2f}ms"
+              for k, v in m["last_trace"]["stages_s"].items()}
+    print(f"telemetry: query.calls={m['counters']['query.calls']}, "
+          f"seg0 width={seg0['width']} live={seg0['live']} "
+          f"hits={seg0['hits']}; trace stages {stages}")
+    from repro import obs
+
+    obs.disable()
+
 
 if __name__ == "__main__":
     main()

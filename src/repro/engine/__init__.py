@@ -12,6 +12,11 @@
 | JobSupervisor | supervision.py | retries / watchdog / quarantine / health() for background jobs; maintenance errors never reach queries |
 | SketchEngine | engine.py | build + query + sharded query (mixed-width) on the pieces above |
 
+The telemetry plane — metrics registry, sampled query traces, the online
+recall probe, and the shared injectable clock — lives in the sibling
+package ``repro.obs`` (DESIGN.md §14); the engine threads it through every
+query path and exposes one snapshot via ``SketchEngine.metrics()``.
+
 ``core.index.SketchIndex`` is the deprecated batch-era front-end, kept as a
 thin shim over this package.
 """

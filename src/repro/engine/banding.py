@@ -135,6 +135,21 @@ class BandIndex:
         dispatch contending with serving)."""
         return cls.build(pk.band_hash_host(sketches, n_bands))
 
+    def stats(self) -> dict:
+        """JSON-safe index-shape gauges for the telemetry plane (DESIGN.md
+        §14): bucket counts and the largest bucket per index. A collapsing
+        bucket structure (few buckets, one huge one) is the early-warning
+        sign that the prefilter is about to hit its escape hatch on every
+        query — the lifecycle controller's cue to re-band or re-compact."""
+        sizes = [np.diff(s) for s in self.starts]
+        return {
+            "n_rows": int(self.n_rows),
+            "n_bands": int(self.n_bands),
+            "buckets": int(sum(len(u) for u in self.uniq)),
+            "max_bucket": int(max((int(s.max()) for s in sizes if len(s)),
+                                  default=0)),
+        }
+
     def candidates(self, qkeys: np.ndarray) -> np.ndarray:
         """Union of colliding buckets over a query batch.
 

@@ -37,7 +37,8 @@ queries exactly the N'-sketches of the raw queries.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Tuple
+import time
+from typing import Callable, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -45,7 +46,10 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 import numpy as np
 
+from .. import obs
 from ..core import binsketch
+from ..obs import metrics as obs_metrics
+from ..obs import trace as obs_trace
 from ..parallel.sharding import shard_map
 from . import backends as backends_mod
 from .backends import Backend
@@ -133,6 +137,10 @@ class SketchEngine:
     measure: str = "jaccard"
     planner: QueryPlanner = dataclasses.field(default_factory=QueryPlanner)
     placer: SegmentPlacer = dataclasses.field(default_factory=SegmentPlacer)
+    # shared obs.Clock (DESIGN.md §14): when set, queries without an
+    # explicit ``now`` resolve TTL/age time against it, and metrics/trace
+    # timestamps ride the same source — one fake clock drives everything
+    clock: Optional[Callable[[], float]] = None
     _placement: Optional[SegmentPlacement] = dataclasses.field(
         default=None, init=False, repr=False
     )
@@ -169,6 +177,7 @@ class SketchEngine:
         ttl: Optional[float] = None,
         band_policy: Optional[BandPolicy] = None,
         supervisor: Optional[JobSupervisor] = None,
+        clock: Optional[Callable[[], float]] = None,
     ) -> "SketchEngine":
         """Create an engine; ``corpus_idx`` (C, P) is ingested if given,
         otherwise the engine starts empty and is fed via :meth:`add`.
@@ -188,7 +197,7 @@ class SketchEngine:
                              "no clock, no sealed segments to band)")
         store_cls = SegmentedStore if mutable else SketchStore
         kw = ({"seal_rows": seal_rows, "ttl": ttl, "band_policy": band_policy,
-               "supervisor": supervisor}
+               "supervisor": supervisor, "clock": clock}
               if mutable else {})
         if corpus_idx is not None:
             store = store_cls.from_indices(
@@ -196,7 +205,7 @@ class SketchEngine:
             )
         else:
             store = store_cls.create(cfg, mapping, capacity=capacity, **kw)
-        eng = cls(store, be, measure, planner or QueryPlanner())
+        eng = cls(store, be, measure, planner or QueryPlanner(), clock=clock)
         if supervisor is not None and not mutable:
             eng._own_supervisor = supervisor
         return eng
@@ -211,15 +220,114 @@ class SketchEngine:
         if sup is not None:
             return sup
         if self._own_supervisor is None:
-            self._own_supervisor = JobSupervisor()
+            self._own_supervisor = JobSupervisor(clock=self.clock)
         return self._own_supervisor
 
     def health(self) -> dict:
         """Operational snapshot (DESIGN.md §13): background-job counters
         (launched/succeeded/failed/retries/abandoned/refused per op),
         active quarantines, degraded query-path components with reasons,
-        last error, and job latencies. JSON-safe; ``serve.py`` prints it."""
+        last error, and job latencies (p50/p99/max per op). JSON-safe;
+        also one section of :meth:`metrics`."""
         return self.supervisor.health()
+
+    def _auto_now(self, now: Optional[float]) -> Optional[float]:
+        """Explicit ``now`` wins; else the injected clock (engine's, or the
+        store's); else None — the pre-clock convention."""
+        if now is not None:
+            return float(now)
+        c = self.clock if self.clock is not None \
+            else getattr(self.store, "clock", None)
+        return float(c()) if c is not None else None
+
+    def enable_metrics(self, *, sample: int = 1, capacity: int = 64):
+        """Arm the telemetry plane (module-global, like ``faults``) on this
+        engine's clock; returns the fresh
+        :class:`~repro.obs.metrics.MetricsRegistry`. Disarm with
+        ``obs.disable()``."""
+        return obs.enable(
+            clock=self.clock if self.clock is not None
+            else getattr(self.store, "clock", None),
+            sample=sample, capacity=capacity,
+        )
+
+    def metrics(self, now: Optional[float] = None) -> dict:
+        """One JSON-safe telemetry snapshot (DESIGN.md §14) — the surface
+        the future lifecycle controller (and ``serve.py --metrics-json``)
+        reads. Composes:
+
+        * the armed registry's counters / gauges / histograms (query-stage
+          latencies, lifecycle throughput, degraded-mode counts; empty
+          dicts while disarmed),
+        * ``lifecycle``: per-segment live/tombstone/width/age/**hits**
+          gauges, width mix and tombstone density, computed on demand from
+          store state (always available, registry or not),
+        * ``health``: the §13 supervision snapshot,
+        * ``probe``: the latest online recall reading (gauges
+          ``probe.recall`` / ``probe.at``; None until a probe lands),
+        * ``prefilter`` / ``last_trace`` when available.
+        """
+        now = self._auto_now(now)
+        reg = obs_metrics.active()
+        snap = (reg.snapshot() if reg is not None
+                else {"at": 0.0, "counters": {}, "gauges": {},
+                      "histograms": {}})
+        out = {
+            "at": float(now) if now is not None else float(snap["at"]),
+            "armed": reg is not None,
+            "counters": snap["counters"],
+            "gauges": snap["gauges"],
+            "histograms": snap["histograms"],
+            "health": self.health(),
+            "probe": {
+                "recall": snap["gauges"].get("probe.recall"),
+                "at": snap["gauges"].get("probe.at"),
+                "runs": int(snap["counters"].get("probe.runs", 0)),
+            },
+        }
+        if isinstance(self.store, SegmentedStore):
+            out["lifecycle"] = self.store.lifecycle_snapshot(now=now)
+        else:
+            n = int(self.store.size)
+            out["lifecycle"] = {
+                "segments": [], "head": None, "live_docs": n,
+                "tombstone_density": 0.0,
+                "width_mix": {str(self.cfg.n_bins): n} if n else {},
+            }
+        if self.last_prefilter_stats is not None:
+            out["prefilter"] = dict(self.last_prefilter_stats)
+        col = obs_trace.active()
+        if col is not None:
+            out["last_trace"] = col.last()
+        return out
+
+    def _count_view_hits(self) -> None:
+        """Per-segment access accounting for the exhaustive paths (one hit
+        per segment per scoring pass; the banded path counts inline, since
+        it can skip segments). Always-on host ints — see
+        ``SealedSegment.hits``."""
+        st = self.store
+        if not isinstance(st, SegmentedStore):
+            return
+        for seg in st.sealed:
+            if seg.n_rows:
+                seg.hits += 1
+        if st.head.size:
+            st.head_hits += 1
+
+    def _count_slab_hits(self, n_bins: int) -> None:
+        """Hit accounting for the placed path: a scored width slab touches
+        every sealed segment of that width (slab granularity — the placed
+        path never skips individual segments within a slab)."""
+        st = self.store
+        if not isinstance(st, SegmentedStore):
+            return
+        base = self.cfg.n_bins
+        for seg in st.sealed:
+            if seg.n_rows and (
+                seg.n_bins if seg.n_bins is not None else base
+            ) == n_bins:
+                seg.hits += 1
 
     # ---------------------------------------------------------------- ingest
     @property
@@ -402,7 +510,7 @@ class SketchEngine:
 
     def _views_topk(
         self, qs: jax.Array, views, k: int, *, use_fill_cache: bool = True,
-        width_cache: Optional[dict] = None,
+        width_cache: Optional[dict] = None, tr=None,
     ) -> Tuple[jax.Array, jax.Array]:
         """Streaming top-k over a list of segment views + k-slot merge.
 
@@ -419,26 +527,35 @@ class SketchEngine:
             width_cache = {}
         parts = [
             self._view_part(qs, v, k, use_fill_cache=use_fill_cache,
-                            width_cache=width_cache)
+                            width_cache=width_cache, tr=tr)
             for v in views
         ]
         if len(parts) == 1:
             return parts[0]
-        return merge_segment_topk([p[0] for p in parts], [p[1] for p in parts], k)
+        t0 = time.perf_counter() if tr is not None else 0.0
+        got = merge_segment_topk([p[0] for p in parts],
+                                 [p[1] for p in parts], k)
+        if tr is not None:
+            tr.add_stage("merge", time.perf_counter() - t0)
+        return got
 
     def _view_part(
         self, qs: jax.Array, v: SegmentView, k: int, *,
-        use_fill_cache: bool, width_cache: dict,
+        use_fill_cache: bool, width_cache: dict, tr=None,
     ) -> Tuple[jax.Array, jax.Array]:
         """One view's (Q, k) partial: ``Backend.topk`` at the view's width,
         local indices mapped to global doc ids."""
         nb = v.n_bins if v.n_bins is not None else self.cfg.n_bins
+        q_w = self._rebucket_queries(qs, nb, width_cache)
+        t0 = time.perf_counter() if tr is not None else 0.0
         sc, ix = self.backend.topk(
-            self._rebucket_queries(qs, nb, width_cache),
-            v.sketches, nb, self.measure, k,
+            q_w, v.sketches, nb, self.measure, k,
             corpus_fills=v.fills if use_fill_cache else None,
             corpus_valid=v.valid,
         )
+        if tr is not None:
+            tr.add_stage("kernel_score", time.perf_counter() - t0)
+            tr.note_width(nb)
         if v.ids is not None:
             ix = jnp.where(ix >= 0, jnp.take(v.ids, jnp.maximum(ix, 0)), -1)
         return sc, ix
@@ -463,7 +580,9 @@ class SketchEngine:
             got = qkeys_cache[n_bins] = np.asarray(jax.device_get(keys))
         return got[:rows]
 
-    def _segment_candidates(self, seg, qkeys: np.ndarray, now) -> Optional[np.ndarray]:
+    def _segment_candidates(
+        self, seg, qkeys: np.ndarray, now, tr=None
+    ) -> Optional[np.ndarray]:
         """Live candidate rows of one sealed segment for this query batch
         (ascending), or None when the escape hatch fires — the union
         outgrew ``max_candidate_frac`` of the segment and the exhaustive
@@ -478,6 +597,8 @@ class SketchEngine:
             # a broken bucket lookup must not break the query: this segment
             # serves exhaustively and the degradation lands in health()
             self.supervisor.record_degraded("band_lookup", f"{e}")
+            if tr is not None:
+                tr.note_degraded("band_lookup")
             return None
         if len(cand):
             cand = cand[seg.valid[cand]]
@@ -492,12 +613,14 @@ class SketchEngine:
                 f"candidate union {len(cand)}/{seg.n_rows} rows exceeded "
                 f"max_candidate_frac={store.band_policy.max_candidate_frac}",
             )
+            if tr is not None:
+                tr.note_degraded("prefilter_hatch")
             return None
         return cand
 
     def _gathered_part(
         self, qs: jax.Array, seg, cand: np.ndarray, k: int, *,
-        use_fill_cache: bool, width_cache: dict,
+        use_fill_cache: bool, width_cache: dict, tr=None,
     ) -> Tuple[jax.Array, jax.Array]:
         """Top-k over a candidate gather of one sealed segment.
 
@@ -510,6 +633,7 @@ class SketchEngine:
         same fills)."""
         nb = seg.n_bins if seg.n_bins is not None else self.cfg.n_bins
         q_w = self._rebucket_queries(qs, nb, width_cache)
+        t0 = time.perf_counter() if tr is not None else 0.0
         n = len(cand)
         padded = self.planner.candidate_bucket(n, seg.n_rows)
         rows_np = np.zeros(padded, np.int32)
@@ -518,10 +642,16 @@ class SketchEngine:
         sub = jnp.take(seg.sketches, rows_dev, axis=0)
         fills = jnp.take(seg.fills, rows_dev) if use_fill_cache else None
         vmask = jnp.asarray((np.arange(padded) < n).astype(np.int32))
+        if tr is not None:
+            tr.add_stage("candidate_gather", time.perf_counter() - t0)
+            t0 = time.perf_counter()
         sc, ix = self.backend.topk(
             q_w, sub, nb, self.measure, k,
             corpus_fills=fills, corpus_valid=vmask,
         )
+        if tr is not None:
+            tr.add_stage("kernel_score", time.perf_counter() - t0)
+            tr.note_width(nb)
         gids = np.full(padded, -1, np.int64)
         gids[:n] = seg.ids[cand]
         gid_dev = jnp.asarray(gids.astype(np.int32))
@@ -530,7 +660,7 @@ class SketchEngine:
 
     def _prefiltered_topk(
         self, qs: jax.Array, rows: int, k: int, *, now, use_fill_cache: bool,
-        width_cache: dict, qkeys_cache: dict, stats: dict,
+        width_cache: dict, qkeys_cache: dict, stats: dict, tr=None,
     ) -> Tuple[jax.Array, jax.Array]:
         """Banded single-device chunk body: sealed segments scan only their
         colliding buckets; unindexed segments (below ``min_rows``, or
@@ -540,7 +670,7 @@ class SketchEngine:
         the prefilter changes *which rows score*, never how they score."""
         store: SegmentedStore = self.store
         parts_s, parts_i = [], []
-        for seg in store.sealed:
+        for seg_i, seg in enumerate(store.sealed):
             if seg.n_rows == 0:
                 continue
             if seg.band_index is None:
@@ -548,38 +678,50 @@ class SketchEngine:
                 sc, ix = self._view_part(
                     qs, seg.view(store.ttl, now), k,
                     use_fill_cache=use_fill_cache, width_cache=width_cache,
+                    tr=tr,
                 )
             else:
                 nb = seg.n_bins if seg.n_bins is not None else self.cfg.n_bins
+                t0 = time.perf_counter() if tr is not None else 0.0
                 qkeys = self._query_band_keys(
                     qs, nb, rows, width_cache, qkeys_cache
                 )
-                cand = self._segment_candidates(seg, qkeys, now)
+                cand = self._segment_candidates(seg, qkeys, now, tr=tr)
+                if tr is not None:
+                    tr.add_stage("band_lookup", time.perf_counter() - t0)
                 stats["seg_rows"] += seg.n_rows
                 if cand is None:
                     stats["exhaustive_segments"] += 1
                     stats["cand_rows"] += seg.n_rows
+                    if tr is not None:
+                        tr.note_segment(f"seg{seg_i}", seg.n_rows, seg.n_rows)
                     sc, ix = self._view_part(
                         qs, seg.view(store.ttl, now), k,
                         use_fill_cache=use_fill_cache, width_cache=width_cache,
+                        tr=tr,
                     )
                 else:
                     stats["banded_segments"] += 1
                     stats["cand_rows"] += len(cand)
+                    if tr is not None:
+                        tr.note_segment(f"seg{seg_i}", seg.n_rows, len(cand))
                     if len(cand) == 0:
-                        continue
+                        continue  # nothing scored: no hit for this segment
                     sc, ix = self._gathered_part(
                         qs, seg, cand, k,
                         use_fill_cache=use_fill_cache, width_cache=width_cache,
+                        tr=tr,
                     )
+            seg.hits += 1  # scored in this pass (see SealedSegment.hits)
             parts_s.append(sc)
             parts_i.append(ix)
         hv = store.head_view(now)
         if hv is not None:  # head rows are unbanded: always scored
             sc, ix = self._view_part(
                 qs, hv, k, use_fill_cache=use_fill_cache,
-                width_cache=width_cache,
+                width_cache=width_cache, tr=tr,
             )
+            store.head_hits += 1
             parts_s.append(sc)
             parts_i.append(ix)
         if not parts_s:
@@ -587,7 +729,11 @@ class SketchEngine:
                     jnp.full((qs.shape[0], k), -1, jnp.int32))
         if len(parts_s) == 1:
             return parts_s[0], parts_i[0]
-        return merge_segment_topk(parts_s, parts_i, k)
+        t0 = time.perf_counter() if tr is not None else 0.0
+        got = merge_segment_topk(parts_s, parts_i, k)
+        if tr is not None:
+            tr.add_stage("merge", time.perf_counter() - t0)
+        return got
 
     def _resolve_prefilter(self, prefilter: Optional[bool]) -> bool:
         on = (isinstance(self.store, SegmentedStore)
@@ -642,48 +788,72 @@ class SketchEngine:
         if query_idx.shape[0] == 0:
             return (jnp.zeros((0, k), jnp.float32),
                     jnp.full((0, k), -1, jnp.int32))
+        now = self._auto_now(now)
         if isinstance(self.store, SegmentedStore):
             self.store.poll_compaction()  # adopt a finished background merge
         banded = self._resolve_prefilter(prefilter)
-        out_s, out_i = [], []
-        views = None if banded else self.store.segment_views(now=now)
-        stats = self._fresh_prefilter_stats() if banded else None
-        width_cache: dict = {}
-        qkeys_cache: dict = {}
-        for chunk in self.planner.plan(query_idx.shape[0]):
-            qs = self._padded_query_sketches(
-                query_idx[chunk.start : chunk.start + chunk.rows], chunk.padded
-            )
-            if banded:
-                try:
-                    sc, ix = self._prefiltered_topk(
-                        qs, chunk.rows, k, now=now,
-                        use_fill_cache=use_fill_cache,
-                        width_cache=width_cache, qkeys_cache=qkeys_cache,
-                        stats=stats,
-                    )
-                except Exception as e:
-                    # prefilter is an accelerator: any failure here (e.g. a
-                    # query-side band hash blowing up) degrades this chunk
-                    # to the exhaustive scan — same results, more rows
-                    self.supervisor.record_degraded("prefilter", f"{e}")
-                    if views is None:
-                        views = self.store.segment_views(now=now)
-                    sc, ix = self._views_topk(
-                        qs, views, k, use_fill_cache=use_fill_cache
-                    )
-                # per-chunk caches: the padded batch shape changes across
-                # chunks, and with it the cached folded/hashed query blocks
-                width_cache, qkeys_cache = {}, {}
-            else:
-                sc, ix = self._views_topk(
-                    qs, views, k, use_fill_cache=use_fill_cache
+        n_q = int(query_idx.shape[0])
+        obs_metrics.inc("query.calls")
+        obs_metrics.inc("query.rows", n_q)
+        tr = obs_trace.start("query", n_q, k)
+        try:
+            out_s, out_i = [], []
+            views = None if banded else self.store.segment_views(now=now)
+            stats = self._fresh_prefilter_stats() if banded else None
+            width_cache: dict = {}
+            qkeys_cache: dict = {}
+            for chunk in self.planner.plan(n_q):
+                t0 = time.perf_counter() if tr is not None else 0.0
+                qs = self._padded_query_sketches(
+                    query_idx[chunk.start : chunk.start + chunk.rows],
+                    chunk.padded,
                 )
-            out_s.append(sc[: chunk.rows])
-            out_i.append(ix[: chunk.rows])
-        if banded:
-            self.last_prefilter_stats = stats
-        return jnp.concatenate(out_s, axis=0), jnp.concatenate(out_i, axis=0)
+                if tr is not None:
+                    tr.add_stage("rebucket", time.perf_counter() - t0)
+                if banded:
+                    try:
+                        sc, ix = self._prefiltered_topk(
+                            qs, chunk.rows, k, now=now,
+                            use_fill_cache=use_fill_cache,
+                            width_cache=width_cache, qkeys_cache=qkeys_cache,
+                            stats=stats, tr=tr,
+                        )
+                    except Exception as e:
+                        # prefilter is an accelerator: any failure here (e.g.
+                        # a query-side band hash blowing up) degrades this
+                        # chunk to the exhaustive scan — same results, more
+                        # rows
+                        self.supervisor.record_degraded("prefilter", f"{e}")
+                        if tr is not None:
+                            tr.note_degraded("prefilter")
+                        if views is None:
+                            views = self.store.segment_views(now=now)
+                        sc, ix = self._views_topk(
+                            qs, views, k, use_fill_cache=use_fill_cache,
+                            tr=tr,
+                        )
+                        self._count_view_hits()
+                    # per-chunk caches: the padded batch shape changes across
+                    # chunks, and with it the cached folded/hashed query
+                    # blocks
+                    width_cache, qkeys_cache = {}, {}
+                else:
+                    sc, ix = self._views_topk(
+                        qs, views, k, use_fill_cache=use_fill_cache, tr=tr,
+                    )
+                    self._count_view_hits()
+                out_s.append(sc[: chunk.rows])
+                out_i.append(ix[: chunk.rows])
+            if banded:
+                self.last_prefilter_stats = stats
+            if k > self.store.size:
+                obs_metrics.inc("query.k_overflow")
+                if tr is not None:
+                    tr.k_overflow = True
+            return (jnp.concatenate(out_s, axis=0),
+                    jnp.concatenate(out_i, axis=0))
+        finally:
+            obs_trace.finish(tr)
 
     # --------------------------------------------------------------- sharded
     def query_sharded(
@@ -718,34 +888,65 @@ class SketchEngine:
         candidate slots route to their owning device through the
         placement's row->slot provenance.
         """
-        if isinstance(self.store, SegmentedStore):
-            self.store.poll_compaction()
-            if use_placement:
-                pf = self._resolve_prefilter(prefilter)  # misuse raises pre-try
-                try:
-                    return self._query_placed(
-                        mesh, axis, query_idx, k, now=now, prefilter=pf,
-                    )
-                except Exception as e:
-                    # placement (build or mask refresh) is an accelerator:
-                    # on failure, drop the cached placement and serve this
-                    # query through the sliced exhaustive path below —
-                    # bit-identical results, worse data movement
-                    self.supervisor.record_degraded("placement", f"{e}")
-                    self._placement = None
-        views = self.store.segment_views(now=now)
-        qs = self._sketch_queries(query_idx)
-        if not views:
-            return (jnp.full((qs.shape[0], k), -jnp.inf, jnp.float32),
-                    jnp.full((qs.shape[0], k), -1, jnp.int32))
-        cache: dict = {}
-        parts = [
-            self._sharded_view_topk(mesh, axis, qs, v, k, width_cache=cache)
-            for v in views
-        ]
-        if len(parts) == 1:
-            return parts[0]
-        return merge_segment_topk([p[0] for p in parts], [p[1] for p in parts], k)
+        now = self._auto_now(now)
+        n_q = int(query_idx.shape[0])
+        obs_metrics.inc("query.calls")
+        obs_metrics.inc("query.rows", n_q)
+        tr = obs_trace.start("query_sharded", n_q, k)
+        try:
+            if k > self.store.size:
+                obs_metrics.inc("query.k_overflow")
+                if tr is not None:
+                    tr.k_overflow = True
+            if isinstance(self.store, SegmentedStore):
+                self.store.poll_compaction()
+                if use_placement:
+                    pf = self._resolve_prefilter(prefilter)  # misuse raises pre-try
+                    try:
+                        return self._query_placed(
+                            mesh, axis, query_idx, k, now=now, prefilter=pf,
+                            tr=tr,
+                        )
+                    except Exception as e:
+                        # placement (build or mask refresh) is an accelerator:
+                        # on failure, drop the cached placement and serve this
+                        # query through the sliced exhaustive path below —
+                        # bit-identical results, worse data movement
+                        self.supervisor.record_degraded("placement", f"{e}")
+                        if tr is not None:
+                            tr.note_degraded("placement")
+                        self._placement = None
+            views = self.store.segment_views(now=now)
+            t0 = time.perf_counter() if tr is not None else 0.0
+            qs = self._sketch_queries(query_idx)
+            if tr is not None:
+                tr.add_stage("rebucket", time.perf_counter() - t0)
+            if not views:
+                return (jnp.full((qs.shape[0], k), -jnp.inf, jnp.float32),
+                        jnp.full((qs.shape[0], k), -1, jnp.int32))
+            self._count_view_hits()
+            cache: dict = {}
+            t0 = time.perf_counter() if tr is not None else 0.0
+            parts = [
+                self._sharded_view_topk(mesh, axis, qs, v, k, width_cache=cache)
+                for v in views
+            ]
+            if tr is not None:
+                tr.add_stage("kernel_score", time.perf_counter() - t0)
+                for v in views:
+                    tr.note_width(v.n_bins if v.n_bins is not None
+                                  else self.cfg.n_bins)
+            if len(parts) == 1:
+                return parts[0]
+            t0 = time.perf_counter() if tr is not None else 0.0
+            got = merge_segment_topk(
+                [p[0] for p in parts], [p[1] for p in parts], k
+            )
+            if tr is not None:
+                tr.add_stage("merge", time.perf_counter() - t0)
+            return got
+        finally:
+            obs_trace.finish(tr)
 
     def _ensure_placement(self, mesh: Mesh, axis: str) -> SegmentPlacement:
         """Current placement, rebuilt only when the sealed-segment *set*
@@ -760,7 +961,7 @@ class SketchEngine:
         return p
 
     def _slab_candidates(
-        self, slab: WidthSlab, qkeys: np.ndarray, now, stats: dict,
+        self, slab: WidthSlab, qkeys: np.ndarray, now, stats: dict, tr=None,
     ) -> Optional[np.ndarray]:
         """Slab-slot candidates of one width slab for this query batch
         (sorted ascending, live-only), or None when any resident indexed
@@ -790,19 +991,23 @@ class SketchEngine:
                     cand = cand[seg.born[cand] + store.ttl > now]
                 unindexed += 1
             else:
-                cand = self._segment_candidates(seg, qkeys, now)
+                cand = self._segment_candidates(seg, qkeys, now, tr=tr)
                 if cand is None:  # escape hatch: whole slab goes exhaustive
-                    for _, s in segs:
+                    for s_i, s in segs:
                         if s.band_index is not None:
                             stats["seg_rows"] += s.n_rows
                             stats["cand_rows"] += s.n_rows
                             stats["exhaustive_segments"] += 1
                         else:
                             stats["unindexed_segments"] += 1
+                        if tr is not None:
+                            tr.note_segment(f"seg{s_i}", s.n_rows, s.n_rows)
                     return None
                 seg_rows += seg.n_rows
                 cand_rows += len(cand)
                 banded += 1
+            if tr is not None:
+                tr.note_segment(f"seg{seg_i}", seg.n_rows, len(cand))
             pend.append((seg_i, seg, cand))
         stats["seg_rows"] += seg_rows
         stats["cand_rows"] += cand_rows
@@ -822,7 +1027,7 @@ class SketchEngine:
 
     def _prefiltered_slab_topk(
         self, q_w: jax.Array, slab: WidthSlab, slots: np.ndarray, k: int,
-        mesh: Mesh, axis: str, n_devices: int,
+        mesh: Mesh, axis: str, n_devices: int, tr=None,
     ) -> Tuple[jax.Array, jax.Array]:
         """One width slab's all-gathered (Q, k·D) partial, scoring only
         ``slots`` — each device gathers the candidate slots resident in
@@ -831,6 +1036,7 @@ class SketchEngine:
         counts share jit traces. Per-device slots ascend, so the gathered
         sub-slab keeps the slab's id-ascending tie-break order."""
         measure, backend = self.measure, self.backend
+        t0 = time.perf_counter() if tr is not None else 0.0
         dev = slots // slab.n_local
         loc = slots % slab.n_local
         counts = np.bincount(dev, minlength=n_devices)
@@ -841,6 +1047,8 @@ class SketchEngine:
             ld = loc[dev == d]  # ascending: slots are globally sorted
             idx[d, : len(ld)] = ld
             msk[d, : len(ld)] = 1
+        if tr is not None:
+            tr.add_stage("candidate_gather", time.perf_counter() - t0)
 
         def local(q_rep, sl, fills, ids, idx_loc, idx_valid, nb=slab.n_bins):
             sub = jnp.take(sl, idx_loc, axis=0)
@@ -864,10 +1072,14 @@ class SketchEngine:
             out_specs=(P(), P()),
             check_vma=False,
         )
-        return fn(
+        t0 = time.perf_counter() if tr is not None else 0.0
+        got = fn(
             q_w, slab.sketches, slab.fills, slab.ids,
             jnp.asarray(idx.reshape(-1)), jnp.asarray(msk.reshape(-1)),
         )
+        if tr is not None:
+            tr.add_stage("kernel_score", time.perf_counter() - t0)
+        return got
 
     def _query_placed(
         self,
@@ -878,6 +1090,7 @@ class SketchEngine:
         *,
         now: Optional[float] = None,
         prefilter: bool = False,
+        tr=None,
     ) -> Tuple[jax.Array, jax.Array]:
         """Segment-placed sharded query body (see :meth:`query_sharded`).
 
@@ -906,11 +1119,18 @@ class SketchEngine:
         """
         store: SegmentedStore = self.store
         placement = self._ensure_placement(mesh, axis)
+        t0 = time.perf_counter() if tr is not None else 0.0
         qs = self._sketch_queries(query_idx)
+        if tr is not None:
+            tr.add_stage("rebucket", time.perf_counter() - t0)
         hv = store.head_view(now)
         if not placement.slabs:
             # no sealed rows anywhere: the head is the whole corpus
-            return self._views_topk(qs, [hv] if hv is not None else [], k)
+            if hv is not None:
+                store.head_hits += 1
+            return self._views_topk(
+                qs, [hv] if hv is not None else [], k, tr=tr
+            )
         measure, backend = self.measure, self.backend
         cache: dict = {}
         qkeys_cache: dict = {}
@@ -918,21 +1138,29 @@ class SketchEngine:
         parts_s, parts_i = [], []
         for slab in placement.slabs:
             q_w = self._rebucket_queries(qs, slab.n_bins, cache)
+            if tr is not None:
+                tr.note_width(slab.n_bins)
             slots = None
             if prefilter:
+                t0 = time.perf_counter() if tr is not None else 0.0
                 qkeys = self._query_band_keys(
                     qs, slab.n_bins, qs.shape[0], cache, qkeys_cache
                 )
-                slots = self._slab_candidates(slab, qkeys, now, stats)
+                slots = self._slab_candidates(slab, qkeys, now, stats, tr=tr)
+                if tr is not None:
+                    tr.add_stage("band_lookup", time.perf_counter() - t0)
                 if slots is not None:
                     if len(slots) == 0:
                         continue
+                    self._count_slab_hits(slab.n_bins)
                     sc_all, ids_all = self._prefiltered_slab_topk(
-                        q_w, slab, slots, k, mesh, axis, placement.n_devices
+                        q_w, slab, slots, k, mesh, axis, placement.n_devices,
+                        tr=tr,
                     )
                     parts_s.append(sc_all)
                     parts_i.append(ids_all)
                     continue
+            self._count_slab_hits(slab.n_bins)
             valid = slab.valid_mask(store, now=now)
 
             def local(q_rep, sl, fills, ids, vmask, nb=slab.n_bins):
@@ -951,11 +1179,16 @@ class SketchEngine:
                 out_specs=(P(), P()),
                 check_vma=False,
             )
+            t0 = time.perf_counter() if tr is not None else 0.0
             sc_all, ids_all = fn(q_w, slab.sketches, slab.fills, slab.ids, valid)
+            if tr is not None:
+                tr.add_stage("kernel_score", time.perf_counter() - t0)
             parts_s.append(sc_all)
             parts_i.append(ids_all)
         if hv is not None:  # replicated head: scored once, counted once
-            h_sc, h_ids = self._views_topk(qs, [hv], k, width_cache=cache)
+            store.head_hits += 1
+            h_sc, h_ids = self._views_topk(qs, [hv], k, width_cache=cache,
+                                           tr=tr)
             parts_s.append(h_sc)
             parts_i.append(h_ids)
         if prefilter:
@@ -964,7 +1197,11 @@ class SketchEngine:
             return (jnp.full((qs.shape[0], k), -jnp.inf, jnp.float32),
                     jnp.full((qs.shape[0], k), -1, jnp.int32))
         # always merge: slab partials are (Q, k·D) all-gathers, crop to k
-        return merge_segment_topk(parts_s, parts_i, k)
+        t0 = time.perf_counter() if tr is not None else 0.0
+        got = merge_segment_topk(parts_s, parts_i, k)
+        if tr is not None:
+            tr.add_stage("merge", time.perf_counter() - t0)
+        return got
 
     def _sharded_view_topk(
         self, mesh: Mesh, axis: str, qs: jax.Array, view: SegmentView, k: int,

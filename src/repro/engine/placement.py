@@ -57,6 +57,7 @@ import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
 from .. import faults
+from ..obs import metrics as obs_metrics
 from ..parallel.sharding import shard_put
 
 __all__ = ["SegmentPlacement", "SegmentPlacer", "WidthSlab"]
@@ -122,6 +123,7 @@ class WidthSlab:
         key = (store._valid_epoch, now if ttl is not None else None)
         if self._valid_key == key and self._valid_dev is not None:
             return self._valid_dev
+        obs_metrics.inc("placement.mask_refreshes")
         eff = np.zeros(self.n_slots, bool)
         for seg_i in {int(s) for s in np.unique(self.src_seg) if s >= 0}:
             sel = self.src_seg == seg_i
@@ -193,6 +195,9 @@ class SegmentPlacer:
             self._build_slab(store, mesh, axis, assign, w_s)
             for w_s in widths
         ]
+        obs_metrics.inc("placement.builds")
+        obs_metrics.inc("placement.rows_placed",
+                        sum(seg.n_rows for _, seg in segs))
         return SegmentPlacement(
             mesh=mesh,
             axis=axis,

@@ -78,7 +78,7 @@ and restores from cold without re-sketching anything.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -87,6 +87,7 @@ import numpy as np
 from .. import faults
 from ..core import binsketch, counting
 from ..core import packed as pk
+from ..obs import metrics as obs_metrics
 from .banding import BandIndex, BandPolicy
 from .store import SegmentView, _grow
 from .supervision import JobSupervisor, SupervisedJob
@@ -230,6 +231,15 @@ class SealedSegment:
     # lifecycle rewrite (compact/distill) produces a *new* segment with a
     # fresh index, so stale buckets cannot outlive their rows
     band_index: Optional[BandIndex] = None
+    # telemetry (DESIGN.md §14): number of query passes that *scored* this
+    # segment (one per planner chunk that scanned it; a banded pass whose
+    # candidate set came up empty does not count). Always-on — a host int
+    # increment is nothing next to a kernel dispatch — and deliberately
+    # outside the metrics registry: it is the per-segment access-rate
+    # signal the ROADMAP's hot/cold tiering will read, and it must not
+    # reset when a registry is swapped. Rewrites (compact/distill) start
+    # the new segment at 0 — access history belongs to the dead layout.
+    hits: int = 0
 
     def __post_init__(self):
         self._ids_dev: Optional[jax.Array] = None
@@ -490,6 +500,14 @@ class SegmentedStore:
     # at seal/compact/distill time and the engine's query paths scan only
     # colliding buckets (head rows stay unbanded — always scored)
     band_policy: Optional[BandPolicy] = None
+    # shared obs.Clock (None = caller passes explicit `now` everywhere, the
+    # pre-§14 convention): when set, lazy-TTL query masking and segment
+    # ages resolve against it so one fake clock drives store + supervisor
+    clock: Optional[Callable[[], float]] = None
+    # query passes that scored the mutable head (head twin of
+    # SealedSegment.hits; the head survives seals by identity, so this
+    # accumulates across the store's whole life)
+    head_hits: int = 0
     _loc: Dict[int, Tuple[int, int]] = dataclasses.field(default_factory=dict)
     _n_live: int = 0
     # epochs drive the placement caches (engine/placement.py): the layout
@@ -520,11 +538,15 @@ class SegmentedStore:
         ttl: Optional[float] = None,
         band_policy: Optional[BandPolicy] = None,
         supervisor: Optional[JobSupervisor] = None,
+        clock: Optional[Callable[[], float]] = None,
     ) -> "SegmentedStore":
         return cls(
             cfg, mapping, [], _Head.create(cfg.n_bins, cfg.n_words, capacity),
             seal_rows=seal_rows, ttl=ttl, band_policy=band_policy,
-            supervisor=supervisor or JobSupervisor(),
+            # the store's clock also becomes the default supervisor's, so
+            # one injected fake drives TTL + backoff/probation together
+            supervisor=supervisor or JobSupervisor(clock=clock),
+            clock=clock,
         )
 
     @classmethod
@@ -541,11 +563,12 @@ class SegmentedStore:
         ttl: Optional[float] = None,
         band_policy: Optional[BandPolicy] = None,
         supervisor: Optional[JobSupervisor] = None,
+        clock: Optional[Callable[[], float]] = None,
     ) -> "SegmentedStore":
         store = cls.create(
             cfg, mapping, capacity=max(int(corpus_idx.shape[0]), 1),
             seal_rows=seal_rows, ttl=ttl, band_policy=band_policy,
-            supervisor=supervisor,
+            supervisor=supervisor, clock=clock,
         )
         store.add(corpus_idx, backend=backend, batch=batch, now=now)
         return store
@@ -555,6 +578,13 @@ class SegmentedStore:
     def size(self) -> int:
         """Number of *live* (retrievable) documents."""
         return self._n_live
+
+    def resolve_now(self, now: Optional[float] = None) -> Optional[float]:
+        """Explicit ``now`` wins; else the injected clock; else None (the
+        pre-clock convention: no TTL masking, ages unreported)."""
+        if now is not None:
+            return float(now)
+        return float(self.clock()) if self.clock is not None else None
 
     @property
     def sketches(self) -> jax.Array:
@@ -644,6 +674,60 @@ class SegmentedStore:
                     h._ttl_cache = ((now, self.ttl), mask)
                 valid_dev = h._ttl_cache[1]
         return SegmentView(h.packed[: h.size], h.fills[: h.size], ids_dev, valid_dev)
+
+    # ------------------------------------------------------------- telemetry
+    def lifecycle_snapshot(self, now: Optional[float] = None) -> dict:
+        """JSON-safe lifecycle gauges (DESIGN.md §14) — the signal surface
+        the ROADMAP's autonomous controller reads. Computed on demand from
+        store state (nothing here is sampled or registry-dependent):
+        per-segment live/tombstone/width/age/hits/banded, the width mix
+        (live rows per sketch width), and the store-wide tombstone
+        density that triggers size-tiered merges."""
+        now = self.resolve_now(now)
+        base = int(self.cfg.n_bins)
+        segs: List[dict] = []
+        rows_total = live_total = 0
+        width_mix: Dict[str, int] = {}
+        for i, s in enumerate(self.sealed):
+            w = int(s.n_bins) if s.n_bins is not None else base
+            live = s.n_live
+            ent = {
+                "segment": i,
+                "rows": int(s.n_rows),
+                "live": int(live),
+                "tombstones": int(s.n_rows - live),
+                "width": w,
+                "hits": int(s.hits),
+                "banded": s.band_index is not None,
+            }
+            if now is not None and s.n_rows:
+                ent["age_min"] = float(now - s.born.max())
+                ent["age_max"] = float(now - s.born.min())
+            segs.append(ent)
+            rows_total += s.n_rows
+            live_total += live
+            width_mix[str(w)] = width_mix.get(str(w), 0) + int(live)
+        h = self.head
+        head_live = int(h.valid[: h.size].sum())
+        if h.size:
+            width_mix[str(base)] = width_mix.get(str(base), 0) + head_live
+        rows_total += h.size
+        live_total += head_live
+        return {
+            "segments": segs,
+            "head": {
+                "rows": int(h.size),
+                "live": head_live,
+                "capacity": int(h.capacity),
+                "hits": int(self.head_hits),
+            },
+            "live_docs": int(self.size),
+            "next_id": int(self.next_id),
+            "tombstone_density": float(rows_total - live_total)
+            / float(max(rows_total, 1)),
+            "width_mix": width_mix,
+            "compaction_running": self._compaction is not None,
+        }
 
     # ---------------------------------------------------------------- ingest
     def _count_rows(self, idx: jax.Array, backend) -> jax.Array:
@@ -974,6 +1058,8 @@ class SegmentedStore:
             seg_i = len(self.sealed) - 1
             for row, gid in enumerate(seg.ids):
                 self._loc[int(gid)] = (seg_i, row)
+            obs_metrics.inc("lifecycle.seal.runs")
+            obs_metrics.inc("lifecycle.seal.rows", seg.n_rows)
         self.head = _Head.create(self.cfg.n_bins, self.cfg.n_words, h.capacity)
         self._layout_epoch += 1
         return seg
@@ -1016,6 +1102,8 @@ class SegmentedStore:
         )
         self._n_live += b
         self._layout_epoch += 1
+        obs_metrics.inc("lifecycle.seal.runs")
+        obs_metrics.inc("lifecycle.seal.rows", b)
         return range(int(ids[0]), int(ids[-1]) + 1)
 
     def _widths_present(self) -> List[Optional[int]]:
@@ -1063,6 +1151,9 @@ class SegmentedStore:
             for row, gid in enumerate(seg.ids):
                 self._loc[int(gid)] = (seg_i, row)
             stats["rows_out"] += seg.n_rows
+        obs_metrics.inc("lifecycle.compact.runs")
+        obs_metrics.inc("lifecycle.compact.rows_in", stats["rows_in"])
+        obs_metrics.inc("lifecycle.compact.rows_out", stats["rows_out"])
         return stats
 
     # ------------------------------------------------- background compaction
@@ -1412,6 +1503,12 @@ class SegmentedStore:
             )
         self._layout_epoch += 1
         self._valid_epoch += 1
+        # background swaps carry their op ("compact" | "distill") on the
+        # supervised job — the throughput counters split on it
+        op = job.job.op
+        obs_metrics.inc(f"lifecycle.{op}.runs")
+        obs_metrics.inc(f"lifecycle.{op}.rows_in", stats["rows_in"])
+        obs_metrics.inc(f"lifecycle.{op}.rows_out", stats["rows_out"])
         return stats
 
     def expire(self, ttl: float, now: float) -> int:
@@ -1428,6 +1525,7 @@ class SegmentedStore:
             dead.extend(int(g) for g in seg.ids[hits])
         if dead:
             self.delete(dead)
+            obs_metrics.inc("lifecycle.expired", len(dead))
         return len(dead)
 
     # ------------------------------------------------------------ checkpoint

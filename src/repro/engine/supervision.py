@@ -51,6 +51,8 @@ import traceback
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 from ..checkpoint.manager import BackgroundJob
+from ..obs import metrics as obs_metrics
+from ..obs.clock import Clock, ensure_clock
 
 __all__ = [
     "DegradedMode",
@@ -167,17 +169,19 @@ class JobSupervisor:
     def __init__(
         self,
         policy: Optional[SupervisionPolicy] = None,
-        clock: Callable[[], float] = time.monotonic,
+        clock: Optional[Callable[[], float]] = None,
     ):
         self.policy = policy or SupervisionPolicy()
-        self._clock = clock
+        # obs.Clock unification: None -> the shared monotonic clock; a
+        # bare callable (the old time.monotonic convention) still works
+        self._clock: Clock = ensure_clock(clock)
         self._lock = threading.Lock()
         # (op, key) -> consecutive exhausted-launch count
         self._consec: Dict[Tuple[str, Tuple], int] = {}
         # (op, key) -> (quarantined_at, probing: bool)
         self._quarantine: Dict[Tuple[str, Tuple], List] = {}
         self._counters: Dict[str, Dict[str, int]] = {}
-        self._latency: Dict[str, Dict[str, float]] = {}
+        self._latency: Dict[str, "obs_metrics.Histogram"] = {}
         self._last_error: Optional[dict] = None
         self._degraded: Dict[str, DegradedMode] = {}
 
@@ -205,15 +209,18 @@ class JobSupervisor:
         }
 
     def _record_latency(self, job: SupervisedJob) -> None:
+        # log-bucketed histogram (not a running mean): one watchdog-
+        # abandoned outlier used to drag the reported mean_s for the
+        # rest of the process lifetime; p50/p99 are robust to it.
+        # Caller holds self._lock (Histogram itself is not thread-safe).
         lat = job.latency
         if lat is None:
             return
-        ent = self._latency.setdefault(
-            job.op, {"count": 0.0, "total_s": 0.0, "max_s": 0.0}
-        )
-        ent["count"] += 1
-        ent["total_s"] += lat
-        ent["max_s"] = max(ent["max_s"], lat)
+        h = self._latency.get(job.op)
+        if h is None:
+            h = self._latency[job.op] = obs_metrics.Histogram()
+        h.observe(lat)
+        obs_metrics.observe(f"jobs.{job.op}.latency_s", lat)
 
     def _record_failure(self, job: SupervisedJob) -> None:
         """Terminal failure of one launch: consecutive-failure accounting
@@ -362,6 +369,7 @@ class JobSupervisor:
     # ------------------------------------------------------- degraded modes
     def record_degraded(self, component: str, reason: str) -> None:
         """A query-path accelerator failed and its fallback engaged."""
+        obs_metrics.inc(f"degraded.{component}")
         with self._lock:
             ent = self._degraded.get(component)
             if ent is None:
@@ -387,11 +395,13 @@ class JobSupervisor:
             now = self._clock()
             lat = {
                 op: {
-                    "count": int(e["count"]),
-                    "mean_s": e["total_s"] / e["count"] if e["count"] else 0.0,
-                    "max_s": e["max_s"],
+                    "count": int(h.count),
+                    "mean_s": h.mean,
+                    "max_s": float(h.max) if h.count else 0.0,
+                    "p50_s": h.quantile(0.50),
+                    "p99_s": h.quantile(0.99),
                 }
-                for op, e in self._latency.items()
+                for op, h in self._latency.items()
             }
             return {
                 "jobs": {op: dict(c) for op, c in self._counters.items()},

@@ -29,39 +29,11 @@ import jax.numpy as jnp
 import numpy as np
 
 
-def exact_topk_jaccard(corpus_idx, query_idx, k):
-    """Host-side exact Jaccard top-k (ground truth; small query sets).
-
-    Vectorized membership-matrix formulation: |q ∩ c| is a (Q, d) x (d, C)
-    matmul over {0,1} membership rows and |q ∪ c| follows by
-    inclusion-exclusion — no per-pair Python set loop (which dominated
-    serve-demo wall time at a few thousand docs). The corpus membership
-    matrix is built per column-chunk so peak memory stays ~64 MB however
-    large C·d grows (nytimes: C=5000, d=102660 would be a 2 GB dense
-    matrix otherwise); only the (Q, C) sims matrix is held whole.
-    """
-    corpus_idx = np.asarray(corpus_idx)
-    query_idx = np.asarray(query_idx)
-    d = int(max(corpus_idx.max(initial=0), query_idx.max(initial=0))) + 1
-
-    def member(idx):
-        m = np.zeros((idx.shape[0], d), np.float32)
-        rows = np.repeat(np.arange(idx.shape[0]), idx.shape[1])
-        flat = idx.ravel()
-        keep = flat >= 0
-        m[rows[keep], flat[keep]] = 1.0
-        return m
-
-    qm = member(query_idx)
-    q_sizes = qm.sum(axis=1)[:, None]
-    c_chunk = max(1, (1 << 24) // d)  # ~64 MB of float32 membership per chunk
-    sims = np.empty((len(query_idx), len(corpus_idx)), np.float32)
-    for lo in range(0, len(corpus_idx), c_chunk):
-        cm = member(corpus_idx[lo : lo + c_chunk])
-        inter = qm @ cm.T  # float32 matmul is exact for counts << 2^24
-        union = q_sizes + cm.sum(axis=1)[None, :] - inter
-        sims[:, lo : lo + cm.shape[0]] = inter / np.maximum(union, 1.0)
-    return np.argsort(-sims, axis=1, kind="stable")[:, :k]
+# Ground truth lives with the telemetry plane now (repro.obs.probe) so the
+# online recall probe and this driver's final report share one
+# implementation; the old name stays as a re-export for callers
+# (bench_engine imports it).
+from repro.obs.probe import exact_topk as exact_topk_jaccard  # noqa: E402
 
 
 def main(argv=None):
@@ -126,6 +98,24 @@ def main(argv=None):
                     help="FaultPlan seed for --chaos (CI pins this so a "
                          "failure reproduces locally from the seed alone)")
     ap.add_argument("--check-recall", action="store_true", default=True)
+    ap.add_argument("--metrics-json", default=None, metavar="PATH",
+                    help="write the final SketchEngine.metrics() snapshot "
+                         "(DESIGN.md §14) to this file as JSON")
+    ap.add_argument("--stats-every", type=int, default=0, metavar="N",
+                    help="print a one-line telemetry summary every N query "
+                         "batches during the serve loop (0 = off)")
+    ap.add_argument("--probe", type=int, default=0, metavar="Q",
+                    help="after serving, run the online recall probe "
+                         "(repro.obs.probe) over up to Q of the serve "
+                         "queries on a supervised background job and report "
+                         "the probe.recall gauge (0 = off)")
+    ap.add_argument("--probe-baseline", type=float, default=None,
+                    help="expected probe recall; with --probe-tol this "
+                         "turns the probe into a gate (nonzero exit on "
+                         "violation) — CI pins the fault-free baseline here")
+    ap.add_argument("--probe-tol", type=float, default=0.02,
+                    help="allowed |probe recall - baseline| for "
+                         "--probe-baseline")
     args = ap.parse_args(argv)
 
     chaos = args.chaos is not None and args.chaos > 0.0
@@ -175,6 +165,12 @@ def main(argv=None):
                      if args.prefilter else None),
         supervisor=supervisor,
     )
+    # arm the telemetry plane (module-global registry + sampled traces,
+    # DESIGN.md §14): every query below lands in the stage histograms and
+    # the final report / --metrics-json read from one snapshot
+    from repro import obs
+
+    engine.enable_metrics()
     if args.prefilter:
         pol = engine.store.band_policy
         print(f"prefilter: {pol.n_bands} bands, escape hatch at "
@@ -340,7 +336,7 @@ def main(argv=None):
 
     t0 = time.time()
     all_ids = []
-    for s in range(0, args.queries, args.batch):
+    for bi, s in enumerate(range(0, args.queries, args.batch)):
         if chaos:
             # the maintenance heartbeat a real server would run: drive the
             # supervised compaction (retries/backoff land here; never
@@ -357,12 +353,28 @@ def main(argv=None):
         else:
             scores, ids = engine.query(qb, args.topk, now=serve_now)
         all_ids.append(np.asarray(ids))
+        if args.stats_every and (bi + 1) % args.stats_every == 0:
+            snap = obs.metrics.active().snapshot()
+            qh = snap["histograms"].get(
+                "query.query_sharded_s" if mesh is not None
+                else "query.query_s", {})
+            deg = sum(v for k_, v in snap["counters"].items()
+                      if k_.startswith("degraded."))
+            cf = snap["histograms"].get("query.candidate_frac", {})
+            print(f"stats: batch {bi + 1}: "
+                  f"calls={snap['counters'].get('query.calls', 0)} "
+                  f"rows={snap['counters'].get('query.rows', 0)} "
+                  f"p50={qh.get('p50', 0.0) * 1e3:.1f}ms "
+                  f"p99={qh.get('p99', 0.0) * 1e3:.1f}ms "
+                  f"cand_frac={cf.get('mean', float('nan')):.3f} "
+                  f"degraded={deg}")
     ids = np.concatenate(all_ids)
     t_serve = time.time() - t0
     print(f"serve: {args.queries} queries in {t_serve:.2f}s "
           f"({args.queries / t_serve:.0f} q/s, batch={args.batch})")
-    if args.prefilter and engine.last_prefilter_stats is not None:
-        st = engine.last_prefilter_stats
+    metrics_snap = engine.metrics(now=serve_now)  # one §14 snapshot feeds
+    if args.prefilter and metrics_snap.get("prefilter") is not None:
+        st = metrics_snap["prefilter"]  # ... the whole report below
         frac = st["cand_rows"] / max(st["seg_rows"], 1)
         print(f"prefilter: {st['banded_segments']} banded / "
               f"{st['exhaustive_segments']} escape-hatch / "
@@ -379,7 +391,8 @@ def main(argv=None):
         stats = engine.wait_compaction()  # supervised: never raises
         chaos_mgr.wait()  # drain the last async save (ditto)
         faults.clear()
-        h = engine.health()
+        metrics_snap = engine.metrics(now=serve_now)  # refresh post-wait
+        h = metrics_snap["health"]
         c = chaos_plan.counters()
         fired = {p: k for p, k in sorted(c["fired"].items()) if k}
         jobs = h["jobs"]
@@ -413,6 +426,33 @@ def main(argv=None):
               f"back to step {good} ({restored.size} live docs)")
         shutil.rmtree(chaos_dir, ignore_errors=True)
 
+    probe_ok = True
+    if args.probe:
+        from repro.obs.probe import RecallProbe
+
+        pr = RecallProbe(engine, k=args.topk, sample=args.probe, seed=0)
+        if pr.launch(surv_ids, surv_rows, queries=queries):
+            got = pr.wait(now=serve_now)
+            if got is None:
+                print("probe: ground-truth job failed — no reading")
+                probe_ok = args.probe_baseline is None
+            else:
+                print(f"probe: recall@{pr.k} = {got:.3f} over "
+                      f"{min(args.probe, len(queries))} queries "
+                      f"(ground truth on a supervised background job; "
+                      f"gauge probe.recall)")
+                if args.probe_baseline is not None:
+                    delta = abs(got - args.probe_baseline)
+                    probe_ok = delta <= args.probe_tol
+                    print(f"probe: |reading - baseline "
+                          f"{args.probe_baseline:.3f}| = {delta:.3f} "
+                          f"{'<=' if probe_ok else '>'} tol {args.probe_tol}"
+                          + ("" if probe_ok else " — GATE FAILED"))
+        else:
+            print("probe: launch refused (op quarantined) — no reading")
+            probe_ok = args.probe_baseline is None
+
+    recall = None
     if args.check_recall:
         truth = exact_topk_jaccard(surv_rows, queries, args.topk)
         truth_ids = surv_ids[truth]  # positions -> global doc ids
@@ -422,8 +462,20 @@ def main(argv=None):
         )
         recall = hits / (args.queries * args.topk)
         print(f"recall@{args.topk} vs exact Jaccard over survivors: {recall:.3f}")
-        return recall
-    return None
+
+    if args.metrics_json:
+        import json
+
+        snap = engine.metrics(now=serve_now)  # includes the probe gauges
+        with open(args.metrics_json, "w") as f:
+            json.dump(snap, f, indent=2, sort_keys=True)
+        print(f"metrics: snapshot written to {args.metrics_json} "
+              f"({len(snap['counters'])} counters, "
+              f"{len(snap['histograms'])} histograms, "
+              f"{len(snap['lifecycle']['segments'])} segment(s))")
+    if not probe_ok:
+        raise SystemExit("probe recall gate failed (see 'probe:' lines above)")
+    return recall
 
 
 if __name__ == "__main__":

@@ -1,0 +1,84 @@
+"""One clock to drive every time-dependent behavior (DESIGN.md §14).
+
+Before this module, time entered the engine through three unrelated
+doors: `JobSupervisor(clock=...)` took a bare callable for backoff /
+watchdog / probation arithmetic, the store's lazy TTL took an explicit
+``now=`` on every call, and benchmarks used `time.perf_counter`
+directly. A chaos test that wanted "jobs time out AND rows expire AND
+the probe timestamps agree" had to thread three fake times and keep
+them consistent by hand.
+
+`Clock` is a zero-dependency callable: ``clock()`` returns seconds as a
+float. Because it is a plain callable, every existing ``clock=`` /
+``now=`` site accepts one unchanged. `SystemClock` wraps
+``time.monotonic`` (the supervisor's historical default); `ManualClock`
+is the test/chaos double — construct one, hand it to
+`SketchEngine.build(clock=...)`, and `advance()` moves supervision
+backoff, TTL expiry, quarantine probation, and metrics timestamps in
+lockstep.
+"""
+
+from __future__ import annotations
+
+import time
+
+__all__ = ["Clock", "ManualClock", "SystemClock", "MONOTONIC", "ensure_clock"]
+
+
+class Clock:
+    """Callable time source: ``clock()`` -> seconds (float, monotonic)."""
+
+    def now(self) -> float:
+        raise NotImplementedError
+
+    def __call__(self) -> float:
+        return self.now()
+
+
+class SystemClock(Clock):
+    """Real monotonic time — the production default everywhere."""
+
+    def now(self) -> float:
+        return time.monotonic()
+
+
+class ManualClock(Clock):
+    """Hand-cranked time for tests: starts at ``start``, moves only via
+    `advance`/`set`. One instance shared across supervisor, store TTL,
+    and metrics makes every timeout/expiry/timestamp deterministic."""
+
+    def __init__(self, start: float = 0.0):
+        self._t = float(start)
+
+    def now(self) -> float:
+        return self._t
+
+    def advance(self, dt: float) -> float:
+        self._t += float(dt)
+        return self._t
+
+    def set(self, t: float) -> float:
+        self._t = float(t)
+        return self._t
+
+
+#: Shared production clock; modules use this as their default so that a
+#: plain ``clock=None`` everywhere still means "real monotonic time".
+MONOTONIC = SystemClock()
+
+
+class _CallableClock(Clock):
+    def __init__(self, fn):
+        self._fn = fn
+
+    def now(self) -> float:
+        return float(self._fn())
+
+
+def ensure_clock(clock) -> Clock:
+    """Coerce ``None`` / a bare callable / a `Clock` into a `Clock`."""
+    if clock is None:
+        return MONOTONIC
+    if isinstance(clock, Clock):
+        return clock
+    return _CallableClock(clock)

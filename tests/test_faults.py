@@ -452,3 +452,38 @@ def test_full_chaos_cycle_zero_query_exceptions(tmp_path):
     assert step is not None and mgr.verify_step(step)
     back = SegmentedStore.restore(mgr)
     assert back.size == len(surv)
+
+
+def test_injected_faults_show_as_metric_deltas():
+    """Telemetry x chaos (DESIGN.md §14): injected faults must be visible
+    as counter deltas in the armed metrics registry — a band.build failure
+    at seal lands as ``degraded.band_index``, and a band.lookup failure on
+    the query path lands as ``degraded.band_lookup`` plus the trace-side
+    ``query.degraded.band_lookup`` twin."""
+    from repro import obs
+    from repro.obs import trace as obs_trace
+
+    cfg, mapping, idx = _fixture()
+    eng = _multi_segment_engine(
+        cfg, mapping, idx, n=48, seal_rows=48,
+        band_policy=BandPolicy(n_bands=4, min_rows=8),
+    )
+    reg = obs.enable()
+    try:
+        before = reg.counter("degraded.band_index")
+        with faults.scoped(faults.FaultPlan(
+            {"band.build": faults.FaultSpec("raise")}
+        )):
+            eng.add(jnp.asarray(idx[48:96]))
+            eng.seal()  # index build fails -> unindexed segment, recorded
+        assert reg.counter("degraded.band_index") == before + 1
+        before_q = reg.counter("degraded.band_lookup")
+        with faults.scoped(faults.FaultPlan(
+            {"band.lookup": faults.FaultSpec("raise")}
+        )):
+            eng.query(jnp.asarray(idx[:4]), 5)  # degrades; must not raise
+        assert reg.counter("degraded.band_lookup") > before_q
+        assert reg.counter("query.degraded.band_lookup") >= 1
+        assert "band_lookup" in obs_trace.active().last()["degraded"]
+    finally:
+        obs.disable()
