@@ -106,14 +106,14 @@ def run(dataset="kos", n_list=(256, 512, 1024, 2048), thresholds=(0.9, 0.5), n_p
 
 
 def main(argv=None):
-    t0 = time.time()
+    t0 = time.perf_counter()
     rows = run()
     print("algo,N,J,mse_ip,neglog_mse_js,neglog_mse_cos")
     for r in rows:
         nl = lambda v: f"{-np.log(max(v, 1e-12)):.2f}" if v is not None else ""
         ip = f"{r['mse_ip']:.3f}" if r["mse_ip"] is not None else ""
         print(f"{r['algo']},{r['N']},{r['J']},{ip},{nl(r['mse_js'])},{nl(r['mse_cos'])}")
-    print(f"# bench_mse done in {time.time()-t0:.1f}s")
+    print(f"# bench_mse done in {time.perf_counter()-t0:.1f}s")
     return rows
 
 

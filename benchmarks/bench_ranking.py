@@ -94,13 +94,13 @@ def run(dataset="tiny", n_bins=512, thresholds=(0.8, 0.5, 0.2), seed=5):
 
 
 def main(argv=None):
-    t0 = time.time()
+    t0 = time.perf_counter()
     rows = run()
     print("algo,N,threshold,accuracy,precision,recall,f1")
     for r in rows:
         print(f"{r['algo']},{r['N']},{r['threshold']},{r['accuracy']:.3f},"
               f"{r['precision']:.3f},{r['recall']:.3f},{r['f1']:.3f}")
-    print(f"# bench_ranking done in {time.time()-t0:.1f}s")
+    print(f"# bench_ranking done in {time.perf_counter()-t0:.1f}s")
     return rows
 
 

@@ -1,0 +1,29 @@
+"""repro.analysis — dependency-free static-analysis & invariant
+verification for the repo's own conventions (DESIGN.md §15).
+
+Three analyzer families behind one CLI
+(``python -m repro.analysis [--json] [--baseline FILE] [paths...]``):
+
+  1. **AST convention rules** (``rules/``) — backend-registry
+     discipline, clock injection, seeded RNGs, the telemetry arming
+     idiom, no swallowed exceptions in engine/checkpoint, lazy-TTL
+     ``now`` threading, and the committed-bytecode gate. Pure ``ast``;
+     run on a bare Python.
+  2. **Trace-level JAX analyzers** (``jaxcheck``) — recompilation
+     guard across QueryPlanner buckets, host-sync detector over the hot
+     query jaxprs, and the Pallas VMEM-budget checker priced from the
+     kernels' actual BlockSpecs.
+  3. **Concurrency ownership checker** (``ownership``) — the
+     snapshot → merge-off-thread → swap-on-caller protocol, flagging
+     attribute writes to captured state from off-thread code.
+
+The committed ``baseline.json`` holds the (justified, near-empty)
+suppression set; the CI gate is *zero new findings*. Exit codes:
+0 clean, 1 new findings, 2 internal analyzer error.
+"""
+
+from .findings import Baseline, Finding
+from .runner import Report, run
+from .rules import RULES
+
+__all__ = ["Baseline", "Finding", "RULES", "Report", "run"]

@@ -1,0 +1,107 @@
+"""CLI: ``python -m repro.analysis [--json] [--baseline FILE] [paths...]``.
+
+Runs all three analyzer families over the repo (default: ``src``,
+``benchmarks``, ``examples``) and gates on *new* findings — exit 0
+clean, 1 new findings, 2 internal analyzer error. ``--explain RULE_ID``
+prints a rule's full documentation.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import textwrap
+from typing import List, Optional
+
+from . import jaxcheck, runner
+from .rules import RULES
+
+
+def _explain(rule_id: str) -> int:
+    rule = RULES.get(rule_id)
+    if rule is None:
+        print(f"unknown rule id {rule_id!r}. Known rules:", file=sys.stderr)
+        for rid, r in sorted(RULES.items()):
+            print(f"  {rid:22s} [{r.kind}] {r.summary}", file=sys.stderr)
+        return 2
+    print(f"{rule.id} [{rule.kind}]: {rule.summary}\n")
+    print(textwrap.dedent(rule.doc).strip())
+    return 0
+
+
+def _find_root(start: str) -> str:
+    """Walk up until the directory that contains ``src/repro`` — lets the
+    CLI run from a subdirectory of the checkout."""
+    cur = os.path.abspath(start)
+    while True:
+        if os.path.isdir(os.path.join(cur, "src", "repro")):
+            return cur
+        parent = os.path.dirname(cur)
+        if parent == cur:
+            return os.path.abspath(start)
+        cur = parent
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="static-analysis & invariant-verification pass "
+                    "(DESIGN.md §15)")
+    ap.add_argument("paths", nargs="*",
+                    help="files/directories to scan (default: src "
+                         "benchmarks examples)")
+    ap.add_argument("--json", action="store_true", dest="as_json",
+                    help="emit the full report as JSON on stdout")
+    ap.add_argument("--baseline", default=None, metavar="FILE",
+                    help="suppression file (default: the committed "
+                         "analysis/baseline.json)")
+    ap.add_argument("--root", default=None,
+                    help="repo root (default: auto-detected from cwd)")
+    ap.add_argument("--explain", default=None, metavar="RULE_ID",
+                    help="print a rule's documentation and exit")
+    ap.add_argument("--no-trace", action="store_true",
+                    help="skip the jax trace-level checks "
+                         "(recompile-guard/host-sync/vmem-budget)")
+    ap.add_argument("--vmem-limit", type=int,
+                    default=jaxcheck.DEFAULT_VMEM_LIMIT,
+                    help="per-kernel VMEM budget in bytes "
+                         "(default: %(default)s)")
+    args = ap.parse_args(argv)
+
+    if args.explain:
+        return _explain(args.explain)
+
+    root = args.root or _find_root(os.getcwd())
+    try:
+        report = runner.run(
+            root,
+            paths=args.paths or None,
+            baseline_path=args.baseline,
+            trace=not args.no_trace,
+            vmem_limit=args.vmem_limit,
+        )
+    except Exception as e:  # a runner bug must not exit 0
+        print(f"internal analyzer error: {e!r}", file=sys.stderr)
+        return 2
+
+    if args.as_json:
+        print(json.dumps(report.to_json(), indent=2))
+    else:
+        for f in report.new:
+            print(f.format())
+        if report.trace_skipped:
+            print(f"note: {report.trace_skipped}", file=sys.stderr)
+        for err in report.errors:
+            print(f"ERROR: {err}", file=sys.stderr)
+        print(
+            f"{len(report.new)} new finding(s), "
+            f"{len(report.suppressed)} suppressed, "
+            f"{report.files_scanned} file(s) scanned",
+            file=sys.stderr)
+    return report.exit_code
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,102 @@
+"""Finding + baseline substrate for the static-analysis pass (DESIGN.md §15).
+
+A :class:`Finding` is one rule violation pinned to ``path:line``; the
+committed ``baseline.json`` holds the (intentionally tiny) set of
+suppressions, so the CI gate is *zero new findings*, not zero findings.
+Everything here is stdlib-only — the AST rule families must run on a
+bare Python with no jax installed.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Dict, List, Optional, Sequence
+
+__all__ = ["Baseline", "Finding"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation: ``rule`` id, repo-relative ``path``, 1-based
+    ``line`` (0 for file-level findings), the defect ``message``, and a
+    one-line ``hint`` saying how the convention is normally satisfied."""
+
+    rule: str
+    path: str
+    line: int
+    message: str
+    hint: str = ""
+
+    def format(self) -> str:
+        loc = f"{self.path}:{self.line}" if self.line else self.path
+        out = f"{self.rule}: {loc}: {self.message}"
+        if self.hint:
+            out += f"\n    hint: {self.hint}"
+        return out
+
+    def to_json(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass(frozen=True)
+class Suppression:
+    """One baseline entry. ``rule`` and ``path`` must match a finding
+    exactly; ``line`` is optional (omitted = any line in the file — edits
+    above a justified site must not un-suppress it). ``note`` is the
+    human justification and is *required*: an unexplained suppression is
+    itself a finding."""
+
+    rule: str
+    path: str
+    note: str
+    line: Optional[int] = None
+
+    def matches(self, f: Finding) -> bool:
+        return (
+            self.rule == f.rule
+            and self.path == f.path
+            and (self.line is None or self.line == f.line)
+        )
+
+
+class Baseline:
+    """The committed suppression set (``analysis/baseline.json``).
+
+    Schema::
+
+        {"comment": "...", "suppressions": [
+            {"rule": "...", "path": "...", "line": 12, "note": "why"}]}
+    """
+
+    def __init__(self, suppressions: Sequence[Suppression] = ()):
+        self.suppressions: List[Suppression] = list(suppressions)
+
+    @classmethod
+    def load(cls, path: str) -> "Baseline":
+        with open(path, "r", encoding="utf-8") as fh:
+            raw = json.load(fh)
+        ents = []
+        for ent in raw.get("suppressions", []):
+            if not ent.get("note"):
+                raise ValueError(
+                    f"baseline entry {ent!r} has no 'note' — every "
+                    "suppression must carry its justification"
+                )
+            ents.append(Suppression(
+                rule=str(ent["rule"]), path=str(ent["path"]),
+                note=str(ent["note"]),
+                line=int(ent["line"]) if ent.get("line") is not None else None,
+            ))
+        return cls(ents)
+
+    def split(self, findings: Sequence[Finding]):
+        """(new, suppressed) partition of ``findings``."""
+        new: List[Finding] = []
+        suppressed: List[Finding] = []
+        for f in findings:
+            if any(s.matches(f) for s in self.suppressions):
+                suppressed.append(f)
+            else:
+                new.append(f)
+        return new, suppressed

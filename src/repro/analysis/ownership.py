@@ -1,0 +1,233 @@
+"""Concurrency ownership checker: the snapshot → merge-off-thread →
+swap-on-caller protocol, machine-checked (rule id ``ownership``).
+
+The engine's entire threading story (DESIGN §10/§13) is one rule:
+off-thread code — worker closures handed to ``BackgroundJob``,
+``JobSupervisor.submit`` or ``threading.Thread`` — operates on a host
+snapshot taken by the caller, builds *new* state, and **returns** it.
+The caller adopts the result on its own thread (``poll_compaction`` /
+``wait_compaction`` / ``CheckpointManager.wait``). No locks exist
+anywhere, so any attribute write to captured live state from the worker
+side is a data race against serving.
+
+This pass finds the worker roots, follows same-file calls out of them
+(``helper(...)`` and ``self.method(...)``), and flags every attribute
+write whose base object the worker did not create itself. The one
+legitimate exception is the handoff cell — ``BackgroundJob.__init__``'s
+``run`` writing ``self._result`` / ``self._error``, which the caller
+only reads after ``done()`` — and is allowlisted below rather than
+special-cased, so the allowlist *is* the protocol's documented escape
+hatch.
+"""
+
+from __future__ import annotations
+
+import ast
+import os
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+from .findings import Finding
+from .rules import repo_rule
+
+__all__ = ["DEFAULT_FILES", "SWAP_ALLOWLIST", "check_ownership", "check_file"]
+
+#: the concurrency-bearing modules the ISSUE names; anything else with a
+#: thread in it should be added here when it grows one.
+DEFAULT_FILES = (
+    "src/repro/engine/segments.py",
+    "src/repro/engine/placement.py",
+    "src/repro/engine/supervision.py",
+    "src/repro/checkpoint/manager.py",
+)
+
+#: (repo-relative path, dotted function qualname) pairs allowed to write
+#: captured attributes off-thread. Each entry needs a justification here:
+#:   * BackgroundJob.__init__.run — the job's result/error handoff cell;
+#:     the caller reads it only after done() (thread-join ordering), so
+#:     the write is published, not raced.
+SWAP_ALLOWLIST: Set[Tuple[str, str]] = {
+    ("src/repro/checkpoint/manager.py", "BackgroundJob.__init__.run"),
+}
+
+_HINT = ("off-thread work must build and return new state; adopt it on the "
+         "caller's thread (poll_compaction/_apply_swap pattern) or add a "
+         "justified SWAP_ALLOWLIST entry")
+
+
+class _Index(ast.NodeVisitor):
+    """All function defs in one module, by bare name and by qualname."""
+
+    def __init__(self) -> None:
+        self.by_name: Dict[str, List[ast.FunctionDef]] = {}
+        self.qualname: Dict[int, str] = {}
+        self._stack: List[str] = []
+
+    def _visit_scope(self, node, name: str) -> None:
+        self._stack.append(name)
+        self.generic_visit(node)
+        self._stack.pop()
+
+    def visit_ClassDef(self, node: ast.ClassDef) -> None:
+        self._visit_scope(node, node.name)
+
+    def visit_FunctionDef(self, node: ast.FunctionDef) -> None:
+        self.qualname[id(node)] = ".".join(self._stack + [node.name])
+        self.by_name.setdefault(node.name, []).append(node)
+        self._visit_scope(node, node.name)
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+
+
+def _local_names(fn: ast.FunctionDef) -> Set[str]:
+    """Names the function binds itself — params, assignments, loop/with
+    targets, comprehension vars, nested defs. Writes through anything
+    else touch captured (shared) state."""
+    out: Set[str] = set()
+    a = fn.args
+    for arg in [*a.posonlyargs, *a.args, *a.kwonlyargs]:
+        out.add(arg.arg)
+    if a.vararg:
+        out.add(a.vararg.arg)
+    if a.kwarg:
+        out.add(a.kwarg.arg)
+    for node in ast.walk(fn):
+        if node is fn:
+            continue
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)):
+            out.add(node.name)
+        elif isinstance(node, (ast.Name,)) and isinstance(node.ctx, ast.Store):
+            out.add(node.id)
+        elif isinstance(node, ast.comprehension):
+            for t in ast.walk(node.target):
+                if isinstance(t, ast.Name):
+                    out.add(t.id)
+    return out
+
+
+def _attr_base(node: ast.AST) -> Optional[ast.Name]:
+    cur = node
+    while isinstance(cur, (ast.Attribute, ast.Subscript)):
+        cur = cur.value
+    return cur if isinstance(cur, ast.Name) else None
+
+
+def _fn_arg(call: ast.Call) -> Optional[str]:
+    """The worker-callable argument of a root-spawning call, as a bare
+    name (``BackgroundJob(work)`` / ``sup.submit(op, key, work)`` /
+    ``Thread(target=run)``)."""
+    func = call.func
+    name = func.attr if isinstance(func, ast.Attribute) else (
+        func.id if isinstance(func, ast.Name) else None)
+    cand: Optional[ast.AST] = None
+    if name == "BackgroundJob" and call.args:
+        cand = call.args[0]
+    elif name == "submit":
+        if len(call.args) >= 3:
+            cand = call.args[2]
+        else:
+            cand = next((k.value for k in call.keywords if k.arg == "fn"), None)
+    elif name == "Thread":
+        cand = next((k.value for k in call.keywords if k.arg == "target"), None)
+    return cand.id if isinstance(cand, ast.Name) else None
+
+
+def check_file(path: str, rel: str, tree: Optional[ast.AST] = None,
+               allowlist: Set[Tuple[str, str]] = SWAP_ALLOWLIST,
+               ) -> List[Finding]:
+    if tree is None:
+        with open(path, "r", encoding="utf-8") as fh:
+            tree = ast.parse(fh.read(), filename=path)
+    index = _Index()
+    index.visit(tree)
+
+    # roots: every function handed to a thread-spawning call
+    roots: List[ast.FunctionDef] = []
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call):
+            fn_name = _fn_arg(node)
+            if fn_name:
+                roots.extend(index.by_name.get(fn_name, ()))
+
+    findings: List[Finding] = []
+    seen: Set[int] = set()
+    # worklist entries: (fn node, extra tainted names) — a method reached
+    # via `self.m()` has its own `self` param, but that self is still the
+    # captured live object, so it is tainted explicitly.
+    work: List[Tuple[ast.FunctionDef, Tuple[str, ...]]] = [(r, ()) for r in roots]
+    while work:
+        fn, tainted = work.pop()
+        if id(fn) in seen:
+            continue
+        seen.add(id(fn))
+        qual = index.qualname.get(id(fn), fn.name)
+        local = _local_names(fn)
+        allowed = (rel, qual) in allowlist
+        for node in ast.walk(fn):
+            targets: List[ast.AST] = []
+            if isinstance(node, ast.Assign):
+                targets = node.targets
+            elif isinstance(node, (ast.AugAssign, ast.AnnAssign)):
+                targets = [node.target]
+            for t in targets:
+                if not isinstance(t, (ast.Attribute, ast.Subscript)):
+                    continue
+                base = _attr_base(t)
+                if base is None:
+                    continue
+                if base.id in local and base.id not in tainted:
+                    continue  # worker-built object — owned, writable
+                if allowed:
+                    continue
+                findings.append(Finding(
+                    "ownership", rel, node.lineno,
+                    f"off-thread function {qual}() writes captured state "
+                    f"through `{base.id}`",
+                    _HINT))
+            # follow same-file calls: helper(...) and self.method(...) —
+            # receivers other than self/cls are not followed (a bare-name
+            # match like `np.save` vs a `save` method would alias)
+            if isinstance(node, ast.Call):
+                f = node.func
+                if isinstance(f, ast.Name) and f.id in index.by_name:
+                    for callee in index.by_name[f.id]:
+                        work.append((callee, ()))
+                elif (isinstance(f, ast.Attribute)
+                      and isinstance(f.value, ast.Name)
+                      and f.value.id in ("self", "cls")
+                      and f.attr in index.by_name):
+                    for callee in index.by_name[f.attr]:
+                        self_name = (callee.args.args[0].arg
+                                     if callee.args.args else None)
+                        work.append(
+                            (callee, (self_name,) if self_name else ()))
+    return findings
+
+
+def check_ownership(root: str, files: Iterable[str] = DEFAULT_FILES,
+                    ) -> List[Finding]:
+    """Run the ownership pass over the concurrency-bearing modules."""
+    out: List[Finding] = []
+    for rel in files:
+        path = os.path.join(root, rel)
+        if not os.path.exists(path):
+            continue
+        out.extend(check_file(path, rel))
+    return out
+
+
+@repo_rule("ownership", "off-thread code never writes captured state")
+def _ownership_rule(root: str, files: List[str]) -> List[Finding]:
+    """Off-thread functions (closures handed to ``BackgroundJob`` /
+    ``JobSupervisor.submit`` / ``threading.Thread``) must not write
+    attributes of captured objects.
+
+    The no-locks concurrency model (DESIGN §10): workers read a host
+    snapshot, build new state, and *return* it; the caller swaps it in
+    on its own thread. An off-thread attribute write races with serving
+    reads — the kind of bug that passes every single-threaded test.
+    Fix: return the built state and adopt it in the poll/wait path; a
+    genuinely safe handoff cell needs a justified
+    ``ownership.SWAP_ALLOWLIST`` entry instead.
+    """
+    scoped = [f for f in files if f in DEFAULT_FILES]
+    return check_ownership(root, scoped or DEFAULT_FILES)

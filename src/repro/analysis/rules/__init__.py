@@ -1,0 +1,149 @@
+"""Rule registry for the AST convention family (DESIGN.md §15).
+
+A rule is a documented checker with a stable id. Two kinds exist:
+
+  * **file rules** — ``check(ctx: FileContext) -> Iterable[Finding]``, run
+    once per parsed Python file;
+  * **repo rules** — ``check(root: str, files: List[str]) -> Iterable[Finding]``,
+    run once per analysis pass (e.g. the committed-bytecode gate).
+
+``--explain RULE_ID`` prints a rule's ``doc``; the runner iterates
+:data:`RULES` so adding a rule is one decorated function, no wiring.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Callable, Dict, Iterable, List, Optional
+
+__all__ = ["FileContext", "Rule", "RULES", "file_rule", "repo_rule",
+           "qualify_module", "resolve_call_path"]
+
+
+@dataclasses.dataclass
+class FileContext:
+    """One parsed source file handed to every file rule."""
+
+    path: str  # absolute
+    rel: str  # repo-relative, posix separators
+    tree: ast.AST
+    source: str
+
+    @property
+    def is_test(self) -> bool:
+        return self.rel.startswith("tests/") or "/tests/" in self.rel
+
+    @property
+    def module(self) -> str:
+        """Dotted module name under the src/ layout (best effort)."""
+        rel = self.rel
+        if rel.startswith("src/"):
+            rel = rel[len("src/"):]
+        if rel.endswith(".py"):
+            rel = rel[: -len(".py")]
+        if rel.endswith("/__init__"):
+            rel = rel[: -len("/__init__")]
+        return rel.replace("/", ".")
+
+
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    id: str
+    kind: str  # "file" | "repo"
+    summary: str
+    doc: str
+    check: Callable
+
+
+RULES: Dict[str, Rule] = {}
+
+
+def _register(rule: Rule) -> None:
+    if rule.id in RULES:
+        raise ValueError(f"duplicate rule id {rule.id!r}")
+    RULES[rule.id] = rule
+
+
+def file_rule(id: str, summary: str):
+    def deco(fn):
+        _register(Rule(id, "file", summary, fn.__doc__ or summary, fn))
+        return fn
+    return deco
+
+
+def repo_rule(id: str, summary: str):
+    def deco(fn):
+        _register(Rule(id, "repo", summary, fn.__doc__ or summary, fn))
+        return fn
+    return deco
+
+
+def trace_rule(id: str, summary: str):
+    """Trace-level analyzers (jaxcheck) register here for ``--explain``
+    and the rule catalog; the runner invokes them through
+    ``jaxcheck.run_trace_checks``, not per-file."""
+    def deco(fn):
+        _register(Rule(id, "trace", summary, fn.__doc__ or summary, fn))
+        return fn
+    return deco
+
+
+# ------------------------------------------------------------------ helpers
+def qualify_module(ctx: FileContext, node: ast.ImportFrom) -> str:
+    """Absolute dotted module of a (possibly relative) ``from X import Y``."""
+    if not node.level:
+        return node.module or ""
+    parts = ctx.module.split(".")
+    # `from . import x` inside pkg/__init__ keeps all parts; inside a
+    # plain module the module's own name is dropped first
+    if not ctx.rel.endswith("__init__.py"):
+        parts = parts[:-1]
+    if node.level > 1:
+        parts = parts[: -(node.level - 1)] if node.level - 1 <= len(parts) else []
+    base = ".".join(parts)
+    if node.module:
+        base = f"{base}.{node.module}" if base else node.module
+    return base
+
+
+def import_aliases(ctx: FileContext) -> Dict[str, str]:
+    """Local name -> absolute dotted path, for every import in the file.
+
+    ``import numpy as np`` -> {"np": "numpy"}; ``from time import
+    monotonic as mono`` -> {"mono": "time.monotonic"}; relative imports
+    resolve against the file's own module path.
+    """
+    out: Dict[str, str] = {}
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                out[a.asname or a.name.split(".")[0]] = (
+                    a.name if a.asname else a.name.split(".")[0]
+                )
+        elif isinstance(node, ast.ImportFrom):
+            mod = qualify_module(ctx, node)
+            for a in node.names:
+                if a.name == "*":
+                    continue
+                out[a.asname or a.name] = f"{mod}.{a.name}" if mod else a.name
+    return out
+
+
+def resolve_call_path(node: ast.AST, aliases: Dict[str, str]) -> Optional[str]:
+    """Dotted path of an expression like ``np.random.default_rng``, with
+    the root name substituted through the import aliases; None when the
+    root is not a plain (imported) name."""
+    parts: List[str] = []
+    cur = node
+    while isinstance(cur, ast.Attribute):
+        parts.append(cur.attr)
+        cur = cur.value
+    if not isinstance(cur, ast.Name):
+        return None
+    root = aliases.get(cur.id, cur.id)
+    return ".".join([root] + list(reversed(parts)))
+
+
+# importing the rule modules registers them
+from . import bytecode, conventions  # noqa: E402,F401  (registration import)

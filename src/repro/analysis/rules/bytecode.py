@@ -1,0 +1,43 @@
+"""committed-bytecode: the CI bytecode gate as an analyzer rule.
+
+Previously a standalone ``git ls-files | grep`` step in ci.yml; folded
+in here so CI has exactly one lint entry point.
+"""
+
+from __future__ import annotations
+
+import re
+import subprocess
+from typing import Iterable, List
+
+from ..findings import Finding
+from . import repo_rule
+
+_BYTECODE_RE = re.compile(r"(^|/)__pycache__(/|$)|\.py[cod]$")
+
+
+@repo_rule("committed-bytecode", "no compiled Python artifacts in git")
+def check_committed_bytecode(root: str, files: List[str]) -> Iterable[Finding]:
+    """No ``__pycache__/`` directories or ``.pyc/.pyo/.pyd`` files may be
+    tracked by git.
+
+    Committed bytecode is platform/interpreter-specific noise that
+    shadows source edits (stale ``.pyc`` imported over the changed
+    ``.py``) and bloats diffs. The rule asks git, not the filesystem, so
+    a local ``__pycache__`` from running the suite is fine — only
+    *tracked* artifacts fail. Fix: ``git rm -r --cached`` the paths (a
+    ``.gitignore`` entry already covers them).
+    """
+    try:
+        out = subprocess.run(
+            ["git", "ls-files"], cwd=root, capture_output=True,
+            text=True, timeout=30, check=True,
+        ).stdout
+    except (OSError, subprocess.SubprocessError):
+        return  # not a git checkout (e.g. exported tree) — nothing to gate
+    for path in out.splitlines():
+        if _BYTECODE_RE.search(path):
+            yield Finding(
+                "committed-bytecode", path, 0,
+                "compiled Python artifact tracked by git",
+                "git rm -r --cached the path; .gitignore already excludes it")

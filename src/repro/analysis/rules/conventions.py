@@ -1,0 +1,313 @@
+"""The six AST convention rules (DESIGN.md §15 catalog, `repro.*` ids).
+
+Each rule turns one convention the repo already lives by into a
+machine-checked invariant. They are pure ``ast`` passes — no imports of
+the checked code, no jax — so this family runs anywhere Python runs.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterable, List, Optional, Set
+
+from ..findings import Finding
+from . import FileContext, file_rule, import_aliases, qualify_module
+
+# --------------------------------------------------------------------------
+# ops-outside-registry
+# --------------------------------------------------------------------------
+
+_OPS_ALLOWED_PREFIXES = ("src/repro/kernels/", "src/repro/analysis/")
+_OPS_ALLOWED_FILES = ("src/repro/engine/backends.py",)
+
+
+@file_rule("ops-outside-registry",
+           "kernel dispatch must go through the Backend registry")
+def check_ops_outside_registry(ctx: FileContext) -> Iterable[Finding]:
+    """No raw ``repro.kernels`` / ``jax.experimental.pallas`` imports
+    outside ``engine/backends.py`` and ``kernels/``.
+
+    All kernel dispatch goes through the ``Backend`` registry
+    (``repro.engine.get_backend``): backends own the interpret-mode
+    resolution, block-size defaults and the oracle/pallas split, so a
+    direct ``ops.*`` call silently loses all three (PR 3 had to retrofit
+    ``data/dedup.py`` for exactly this). ``src/repro/analysis/`` is
+    allowed — the trace-level analyzers must introspect the kernels —
+    and tests may exercise ``ops`` directly against ``kernels/ref.py``.
+    """
+    if ctx.is_test:
+        return
+    if ctx.rel in _OPS_ALLOWED_FILES or ctx.rel.startswith(_OPS_ALLOWED_PREFIXES):
+        return
+    hint = ("use repro.engine.get_backend(...)/Backend methods instead of "
+            "raw kernel entry points")
+    for node in ast.walk(ctx.tree):
+        mods: List[str] = []
+        if isinstance(node, ast.Import):
+            mods = [a.name for a in node.names]
+        elif isinstance(node, ast.ImportFrom):
+            mod = qualify_module(ctx, node)
+            mods = [f"{mod}.{a.name}" if mod else a.name for a in node.names]
+        for m in mods:
+            if (m.startswith("repro.kernels") or ".kernels." in f".{m}."
+                    or m.startswith("jax.experimental.pallas")):
+                yield Finding(
+                    "ops-outside-registry", ctx.rel, node.lineno,
+                    f"raw kernel import {m!r} outside the Backend registry",
+                    hint)
+                break
+
+
+# --------------------------------------------------------------------------
+# wall-clock
+# --------------------------------------------------------------------------
+
+_BANNED_CLOCKS = {
+    "time.time", "time.time_ns", "time.monotonic", "time.monotonic_ns",
+    "datetime.datetime.now", "datetime.datetime.utcnow",
+    "datetime.date.today",
+}
+_CLOCK_HOME = "src/repro/obs/clock.py"
+
+
+@file_rule("wall-clock", "all time flows through the injected Clock")
+def check_wall_clock(ctx: FileContext) -> Iterable[Finding]:
+    """No ``time.time()`` / ``time.monotonic()`` / ``datetime.now()``
+    outside ``obs/clock.py``.
+
+    Engine timestamps (TTL, seal age, probe cadence) must come from the
+    injected ``Clock`` so ``ManualClock`` tests stay deterministic and a
+    frozen replay reproduces byte-identical lifecycle decisions; raw
+    wall-clock reads fork the timeline. ``time.perf_counter`` is *not*
+    banned — measuring a duration (benchmarks, trace stage timing) is
+    not reading the timeline. Fix: take ``clock`` / ``now`` as input, or
+    use ``repro.obs.clock.MONOTONIC`` when real time is genuinely meant
+    (e.g. waiting on a hardware deadline); durations use
+    ``time.perf_counter``.
+    """
+    if ctx.is_test or ctx.rel == _CLOCK_HOME:
+        return
+    aliases = import_aliases(ctx)
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        path = _dotted(node.func, aliases)
+        if path in _BANNED_CLOCKS:
+            yield Finding(
+                "wall-clock", ctx.rel, node.lineno,
+                f"raw wall-clock read {path}() outside obs/clock.py",
+                "thread a Clock/now in, or use obs.clock.MONOTONIC; "
+                "durations use time.perf_counter")
+
+
+# --------------------------------------------------------------------------
+# unseeded-rng
+# --------------------------------------------------------------------------
+
+_GLOBAL_RANDOM_FNS = {
+    "random", "randint", "randrange", "choice", "choices", "shuffle",
+    "sample", "uniform", "gauss", "getrandbits", "seed", "betavariate",
+}
+_NP_RANDOM_OK = {"default_rng", "Generator", "PCG64", "SeedSequence"}
+
+
+@file_rule("unseeded-rng", "all randomness is explicitly seeded")
+def check_unseeded_rng(ctx: FileContext) -> Iterable[Finding]:
+    """No unseeded ``random.Random()``, global ``random.*`` draws, or
+    legacy ``np.random.*`` global-state calls outside tests.
+
+    Fault injection, synthetic corpora and the recall probe are only
+    reproducible (and CI-gateable at fixed seeds) when every RNG is
+    constructed with an explicit seed: ``random.Random(seed)`` or
+    ``np.random.default_rng(seed)``. The module-global RNGs are shared
+    mutable state — any new call site shifts every downstream draw.
+    """
+    if ctx.is_test:
+        return
+    aliases = import_aliases(ctx)
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        path = _dotted(node.func, aliases)
+        if path is None:
+            continue
+        if path == "random.Random" and not node.args and not node.keywords:
+            yield Finding(
+                "unseeded-rng", ctx.rel, node.lineno,
+                "random.Random() constructed without a seed",
+                "pass an explicit seed: random.Random(seed)")
+        elif path.startswith("random.") and path.split(".", 1)[1] in _GLOBAL_RANDOM_FNS:
+            yield Finding(
+                "unseeded-rng", ctx.rel, node.lineno,
+                f"{path}() draws from the shared module-global RNG",
+                "use a local random.Random(seed) instance")
+        elif (path.startswith("numpy.random.")
+              and path.split(".")[2] not in _NP_RANDOM_OK):
+            yield Finding(
+                "unseeded-rng", ctx.rel, node.lineno,
+                f"legacy global-state call {path}()",
+                "use np.random.default_rng(seed)")
+
+
+# --------------------------------------------------------------------------
+# arming-idiom
+# --------------------------------------------------------------------------
+
+@file_rule("arming-idiom",
+           "telemetry/fault helpers guard the module-global registry")
+def check_arming_idiom(ctx: FileContext) -> Iterable[Finding]:
+    """Telemetry/fault sites must match the module-global arming idiom.
+
+    The repo's observability contract (DESIGN §14): a module exposes an
+    armable ``_ACTIVE`` global plus free helpers whose *disarmed* cost is
+    one None check — ``reg = _ACTIVE; if reg is None: return;
+    reg.inc(...)``. Two ways to break it, both flagged: (a) a helper in
+    the defining module that calls through ``_ACTIVE`` with no
+    ``is None`` guard on the read value (disarmed path now raises); (b)
+    any *other* module reaching for ``<mod>._ACTIVE`` directly instead of
+    the free helpers (bypasses the guard and the install/scoped
+    lifecycle).
+    """
+    if ctx.is_test:
+        return
+    defines = any(
+        isinstance(n, ast.Assign)
+        and any(isinstance(t, ast.Name) and t.id == "_ACTIVE" for t in n.targets)
+        for n in ast.iter_child_nodes(ctx.tree)
+    ) or any(
+        isinstance(n, ast.AnnAssign) and isinstance(n.target, ast.Name)
+        and n.target.id == "_ACTIVE"
+        for n in ast.iter_child_nodes(ctx.tree)
+    )
+    # (b) foreign access: Attribute ending in `._ACTIVE`
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, ast.Attribute) and node.attr == "_ACTIVE":
+            yield Finding(
+                "arming-idiom", ctx.rel, node.lineno,
+                "direct access to another module's _ACTIVE registry",
+                "call that module's free helpers / install / scoped instead")
+    if not defines:
+        return
+    # (a) unguarded call-through in the defining module
+    for fn in ast.walk(ctx.tree):
+        if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        names: Set[str] = {"_ACTIVE"}
+        for stmt in ast.walk(fn):
+            if (isinstance(stmt, ast.Assign)
+                    and isinstance(stmt.value, ast.Name)
+                    and stmt.value.id == "_ACTIVE"):
+                names |= {t.id for t in stmt.targets if isinstance(t, ast.Name)}
+        calls_through = any(
+            isinstance(n, ast.Attribute) and isinstance(n.value, ast.Name)
+            and n.value.id in names
+            for n in ast.walk(fn)
+        )
+        if not calls_through:
+            continue
+        guarded = any(
+            isinstance(n, ast.Compare)
+            and any(isinstance(op, (ast.Is, ast.IsNot)) for op in n.ops)
+            and any(isinstance(v, ast.Name) and v.id in names
+                    for v in [n.left, *n.comparators])
+            for n in ast.walk(fn)
+        )
+        if not guarded:
+            yield Finding(
+                "arming-idiom", ctx.rel, fn.lineno,
+                f"{fn.name}() calls through _ACTIVE without an "
+                "`is None` guard",
+                "read into a local and guard: reg = _ACTIVE; "
+                "if reg is None: return")
+
+
+# --------------------------------------------------------------------------
+# swallowed-exception
+# --------------------------------------------------------------------------
+
+_EXC_SCOPES = ("src/repro/engine/", "src/repro/checkpoint/")
+
+
+@file_rule("swallowed-exception",
+           "engine/checkpoint never silently swallow exceptions")
+def check_swallowed_exception(ctx: FileContext) -> Iterable[Finding]:
+    """No bare ``except:`` and no ``except ...: pass`` in ``engine/``
+    and ``checkpoint/``.
+
+    Maintenance errors must surface through the supervised-job channel
+    (``record_degraded``, quarantine, ``health()``) — a silent swallow
+    in the engine or the checkpoint writer turns a real fault into
+    corrupt state discovered queries later. Handlers must re-raise, log,
+    or route to the degradation path; a ``pass`` body hides the fault.
+    """
+    if ctx.is_test or not ctx.rel.startswith(_EXC_SCOPES):
+        return
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.ExceptHandler):
+            continue
+        if node.type is None:
+            yield Finding(
+                "swallowed-exception", ctx.rel, node.lineno,
+                "bare `except:` catches SystemExit/KeyboardInterrupt too",
+                "catch Exception (or narrower) and route to the "
+                "degradation path")
+            continue
+        if all(_is_noop_stmt(s) for s in node.body):
+            yield Finding(
+                "swallowed-exception", ctx.rel, node.lineno,
+                "exception handler swallows the error (`pass` body)",
+                "re-raise, record_degraded(...), or log before continuing")
+
+
+def _is_noop_stmt(s: ast.stmt) -> bool:
+    if isinstance(s, (ast.Pass, ast.Continue)):
+        return True
+    return (isinstance(s, ast.Expr)
+            and isinstance(s.value, ast.Constant))  # docstring / `...`
+
+
+# --------------------------------------------------------------------------
+# now-threading
+# --------------------------------------------------------------------------
+
+_VIEW_METHODS = {"segment_views", "head_view"}
+
+
+@file_rule("now-threading", "segment views always receive an explicit now")
+def check_now_threading(ctx: FileContext) -> Iterable[Finding]:
+    """Every ``segment_views(...)`` / ``head_view(...)`` call outside the
+    store itself must pass ``now`` explicitly.
+
+    TTL expiry is *lazy* (DESIGN §8): a view's validity mask is computed
+    from the ``now`` the caller threads in, so two views built for the
+    same query must share one timestamp. A call that omits ``now``
+    silently disables expiry for that view — rows past their TTL come
+    back from one segment and not another, and results stop being
+    reproducible under ManualClock. Public engine functions that touch
+    segments take ``now`` as a parameter and pass it down.
+    """
+    if ctx.is_test:
+        return
+    if not ctx.rel.startswith("src/repro/"):
+        return
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        fname = None
+        if isinstance(node.func, ast.Attribute):
+            fname = node.func.attr
+        if fname not in _VIEW_METHODS:
+            continue
+        has_now = bool(node.args) or any(k.arg == "now" for k in node.keywords)
+        if not has_now:
+            yield Finding(
+                "now-threading", ctx.rel, node.lineno,
+                f"{fname}() called without threading `now`",
+                "pass now= from the enclosing query/maintenance entry "
+                "point (lazy-TTL invariant)")
+
+
+# --------------------------------------------------------------------------
+def _dotted(node: ast.AST, aliases) -> Optional[str]:
+    from . import resolve_call_path
+    return resolve_call_path(node, aliases)

@@ -1,0 +1,149 @@
+"""Analysis runner: collect files, run the three analyzer families,
+apply the baseline, and package a report the CLI / CI can act on.
+
+Exit-code contract (enforced in ``__main__``):
+
+  * 0 — clean (no findings outside the baseline)
+  * 1 — new findings
+  * 2 — internal analyzer error (a rule crashed, a scanned file failed
+        to parse, or the baseline is malformed) — a broken rule must
+        *fail* CI, never silently pass it green
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+import traceback
+from typing import Dict, List, Optional, Sequence
+
+from . import jaxcheck, ownership  # noqa: F401  (rule registration)
+from .findings import Baseline, Finding
+from .rules import RULES, FileContext
+
+__all__ = ["DEFAULT_PATHS", "Report", "collect_files", "default_baseline_path",
+           "run"]
+
+DEFAULT_PATHS = ("src", "benchmarks", "examples")
+
+_SKIP_DIRS = {"__pycache__", ".git", ".github", "node_modules"}
+
+
+@dataclasses.dataclass
+class Report:
+    """One full analysis pass, already split against the baseline."""
+
+    new: List[Finding]
+    suppressed: List[Finding]
+    errors: List[str]
+    files_scanned: int
+    trace_skipped: Optional[str] = None  # reason, when jax was unavailable
+
+    @property
+    def exit_code(self) -> int:
+        if self.errors:
+            return 2
+        return 1 if self.new else 0
+
+    def to_json(self) -> Dict:
+        return {
+            "new": [f.to_json() for f in self.new],
+            "suppressed": [f.to_json() for f in self.suppressed],
+            "errors": self.errors,
+            "files_scanned": self.files_scanned,
+            "trace_skipped": self.trace_skipped,
+            "exit_code": self.exit_code,
+        }
+
+
+def collect_files(root: str, paths: Sequence[str]) -> List[str]:
+    """Repo-relative (posix) paths of every ``.py`` under ``paths``."""
+    out: List[str] = []
+    for p in paths:
+        full = os.path.join(root, p)
+        if os.path.isfile(full):
+            out.append(os.path.relpath(full, root).replace(os.sep, "/"))
+            continue
+        for dirpath, dirnames, filenames in os.walk(full):
+            dirnames[:] = [d for d in dirnames if d not in _SKIP_DIRS]
+            for name in sorted(filenames):
+                if name.endswith(".py"):
+                    rel = os.path.relpath(os.path.join(dirpath, name), root)
+                    out.append(rel.replace(os.sep, "/"))
+    return sorted(set(out))
+
+
+def default_baseline_path() -> str:
+    return os.path.join(os.path.dirname(__file__), "baseline.json")
+
+
+def run(
+    root: str,
+    paths: Optional[Sequence[str]] = None,
+    baseline_path: Optional[str] = None,
+    *,
+    trace: bool = True,
+    vmem_limit: int = jaxcheck.DEFAULT_VMEM_LIMIT,
+) -> Report:
+    """Run every registered rule plus the trace checks; never raises —
+    analyzer crashes land in ``Report.errors`` (exit 2)."""
+    errors: List[str] = []
+    findings: List[Finding] = []
+    files = collect_files(root, paths or DEFAULT_PATHS)
+
+    file_rules = [r for r in RULES.values() if r.kind == "file"]
+    repo_rules = [r for r in RULES.values() if r.kind == "repo"]
+
+    for rel in files:
+        full = os.path.join(root, rel)
+        try:
+            with open(full, "r", encoding="utf-8") as fh:
+                source = fh.read()
+            tree = ast.parse(source, filename=full)
+        except (OSError, SyntaxError) as e:
+            errors.append(f"parse: {rel}: {e}")
+            continue
+        ctx = FileContext(path=full, rel=rel, tree=tree, source=source)
+        for rule in file_rules:
+            try:
+                findings.extend(rule.check(ctx) or ())
+            except Exception:
+                errors.append(
+                    f"rule {rule.id} crashed on {rel}:\n"
+                    + traceback.format_exc(limit=4))
+
+    for rule in repo_rules:
+        try:
+            findings.extend(rule.check(root, files) or ())
+        except Exception:
+            errors.append(
+                f"rule {rule.id} crashed:\n" + traceback.format_exc(limit=4))
+
+    trace_skipped = None
+    if trace:
+        try:
+            import jax  # noqa: F401
+        except Exception as e:
+            trace_skipped = f"jax unavailable ({e!r}) — trace checks skipped"
+        else:
+            try:
+                findings.extend(jaxcheck.run_trace_checks(vmem_limit))
+            except Exception:
+                errors.append(
+                    "trace checks crashed:\n" + traceback.format_exc(limit=6))
+    else:
+        trace_skipped = "disabled (--no-trace)"
+
+    baseline = Baseline()
+    bl_path = baseline_path or default_baseline_path()
+    if os.path.exists(bl_path):
+        try:
+            baseline = Baseline.load(bl_path)
+        except (OSError, ValueError) as e:
+            errors.append(f"baseline: {bl_path}: {e}")
+
+    findings.sort(key=lambda f: (f.path, f.line, f.rule))
+    new, suppressed = baseline.split(findings)
+    return Report(new=new, suppressed=suppressed, errors=errors,
+                  files_scanned=len(files), trace_skipped=trace_skipped)

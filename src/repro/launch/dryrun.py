@@ -109,7 +109,7 @@ def run_cell(
     mesh_name = ("pod2x16x16" if multi_pod else "pod16x16") + (f"+{tag}" if tag else "")
     n_dev = 512 if multi_pod else 256
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     bundle = spec.build(mesh, shape_name=shape, rules=rules)
     sketch_variant = shape.endswith("_sketch")
     if sketch_variant:
@@ -127,9 +127,9 @@ def run_cell(
 
     with mesh:
         lowered = jax.jit(step).lower(*args)
-        t_lower = time.time() - t0
+        t_lower = time.perf_counter() - t0
         compiled = lowered.compile()
-        t_compile = time.time() - t0 - t_lower
+        t_compile = time.perf_counter() - t0 - t_lower
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis() or {}

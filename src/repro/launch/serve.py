@@ -176,7 +176,7 @@ def main(argv=None):
         print(f"prefilter: {pol.n_bands} bands, escape hatch at "
               f"{pol.max_candidate_frac:.0%} candidates, segments under "
               f"{pol.min_rows} rows stay unindexed")
-    t0 = time.time()
+    t0 = time.perf_counter()
     idx_dev = jnp.asarray(idx)
     # the lifecycle clock ticks once per ingest batch: born stamps, the
     # mutation phase, and lazy TTL expiry all measure age in these ticks
@@ -191,7 +191,7 @@ def main(argv=None):
     # store would run a full live() gather and bill it to the build time
     jax.block_until_ready(engine.store.head.packed if mutable
                           else engine.store.sketches)
-    t_build = time.time() - t0
+    t_build = time.perf_counter() - t0
     print(f"build: {t_build:.2f}s ({n / t_build:.0f} docs/s, "
           f"backend={engine.backend.name}, fill cache primed at ingest)")
 
@@ -206,7 +206,7 @@ def main(argv=None):
         dele, upd = victims[: n_mut // 2], victims[n_mut // 2 :]
         fresh_idx, _ = generate_corpus(spec, seed=1)
 
-        t0 = time.time()
+        t0 = time.perf_counter()
         engine.seal()  # freeze the build; deletions hit tombstone bitmaps
         if len(dele):
             engine.delete(dele.tolist())
@@ -230,7 +230,7 @@ def main(argv=None):
             stats = engine.compact()
             if engine.store.sealed:
                 jax.block_until_ready(engine.store.sealed[0].sketches)
-        t_mut = time.time() - t0
+        t_mut = time.perf_counter() - t0
         for g in dele:
             contents.pop(int(g))
             born.pop(int(g))
@@ -251,13 +251,13 @@ def main(argv=None):
 
             widths = tuple(int(w) for w in args.distill.split(",") if w)
             policy = DistillPolicy(widths=widths, min_age=args.distill_age)
-            t0 = time.time()
+            t0 = time.perf_counter()
             n_tiers = 0  # one pass per tier: segments walk down the ladder;
             # distill() returns swap stats (truthy) per pass, False once
             # nothing is eligible anymore
             while engine.distill(policy, now=float(tick), background=False):
                 n_tiers += 1
-            t_dist = time.time() - t0
+            t_dist = time.perf_counter() - t0
             store = engine.store
             by_w = {}
             live_bytes = sealed_live = 0
@@ -334,7 +334,7 @@ def main(argv=None):
               f"deferred compaction launched under faults; checkpoints in "
               f"{chaos_dir}")
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     all_ids = []
     for bi, s in enumerate(range(0, args.queries, args.batch)):
         if chaos:
@@ -369,7 +369,7 @@ def main(argv=None):
                   f"cand_frac={cf.get('mean', float('nan')):.3f} "
                   f"degraded={deg}")
     ids = np.concatenate(all_ids)
-    t_serve = time.time() - t0
+    t_serve = time.perf_counter() - t0
     print(f"serve: {args.queries} queries in {t_serve:.2f}s "
           f"({args.queries / t_serve:.0f} q/s, batch={args.batch})")
     metrics_snap = engine.metrics(now=serve_now)  # one §14 snapshot feeds

@@ -116,11 +116,11 @@ def main(argv=None):
 
     step = start_step
     for step in range(start_step, args.steps):
-        t0 = time.time()
+        t0 = time.perf_counter()
         batch = gen(step)
         params, opt_state, metrics = train_step(params, opt_state, batch)
         loss = float(metrics["loss"])
-        dt = time.time() - t0
+        dt = time.perf_counter() - t0
         if detector.observe(step, dt):
             print(f"[straggler] step {step} took {dt:.3f}s (ewma {detector.mean:.3f}s) — "
                   f"host 0 flagged for re-dispatch", flush=True)

@@ -186,11 +186,19 @@ class RecallProbe:
              timeout: float = 60.0) -> Optional[float]:
         """Block (politely — supervisor-driven) until the in-flight probe
         completes or ``timeout`` real seconds pass. Returns the reading,
-        or the last one if nothing was in flight."""
+        or the last one if nothing was in flight.
+
+        The deadline is *real* time on purpose — it bounds how long the
+        caller physically blocks on the worker thread, so it reads
+        ``MONOTONIC`` (the system clock singleton) rather than the
+        injected probe clock: under ``ManualClock`` an injected deadline
+        would never advance and this would hang forever."""
         import time as _time
 
-        deadline = _time.monotonic() + timeout
-        while self._queries is not None and _time.monotonic() < deadline:
+        from .clock import MONOTONIC
+
+        deadline = MONOTONIC() + timeout
+        while self._queries is not None and MONOTONIC() < deadline:
             got = self.poll(now=now)
             if got is not None:
                 return got

@@ -1,0 +1,450 @@
+"""repro.analysis — golden fixtures per rule (positive + negative), the
+ownership checker against seeded off-thread writes, the trace-level
+analyzers against seeded violations, the baseline machinery, the CLI
+error contract, and the repo's own self-run (clean modulo baseline)."""
+
+import ast
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+from repro.analysis import Baseline, Finding, ownership, runner
+from repro.analysis.findings import Suppression
+from repro.analysis.rules import RULES, FileContext
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def findings_for(rule_id, src, rel="src/repro/data/fake.py"):
+    src = textwrap.dedent(src)
+    ctx = FileContext(path="/x/" + rel, rel=rel, tree=ast.parse(src), source=src)
+    return list(RULES[rule_id].check(ctx) or ())
+
+
+# ================================================================ AST rules
+def test_ops_outside_registry_positive():
+    for src in (
+        "from repro.kernels import ops",
+        "from ..kernels import ops",  # relative from src/repro/data/fake.py
+        "import repro.kernels.ops",
+        "from jax.experimental import pallas as pl",
+    ):
+        got = findings_for("ops-outside-registry", src)
+        assert len(got) == 1 and got[0].rule == "ops-outside-registry", src
+        assert got[0].line == 1 and got[0].hint
+
+
+def test_ops_outside_registry_negative():
+    src = "from repro.kernels import ops"
+    assert not findings_for("ops-outside-registry", src,
+                            rel="src/repro/engine/backends.py")
+    assert not findings_for("ops-outside-registry", src,
+                            rel="src/repro/kernels/ops.py")
+    assert not findings_for("ops-outside-registry", src,
+                            rel="tests/test_fake.py")
+    assert not findings_for(
+        "ops-outside-registry", "from repro.engine import get_backend")
+
+
+def test_wall_clock_positive():
+    for src in (
+        "import time\nt = time.time()",
+        "import time as _t\nd = _t.monotonic() + 5",
+        "from datetime import datetime\nx = datetime.now()",
+        "from time import monotonic as mono\nd = mono()",
+    ):
+        got = findings_for("wall-clock", src)
+        assert len(got) == 1 and got[0].rule == "wall-clock", src
+
+
+def test_wall_clock_negative():
+    # perf_counter measures a duration, not the timeline — allowed
+    assert not findings_for("wall-clock", "import time\nt = time.perf_counter()")
+    assert not findings_for("wall-clock", "import time\nt = time.time()",
+                            rel="src/repro/obs/clock.py")
+    assert not findings_for("wall-clock", "import time\nt = time.time()",
+                            rel="tests/test_fake.py")
+
+
+def test_unseeded_rng_positive():
+    for src in (
+        "import random\nr = random.Random()",
+        "import random\nx = random.random()",
+        "import numpy as np\nx = np.random.rand(3)",
+        "import numpy as np\nnp.random.seed(0)",
+    ):
+        got = findings_for("unseeded-rng", src)
+        assert len(got) == 1 and got[0].rule == "unseeded-rng", src
+
+
+def test_unseeded_rng_negative():
+    assert not findings_for("unseeded-rng", "import random\nr = random.Random(7)")
+    assert not findings_for(
+        "unseeded-rng", "import numpy as np\nr = np.random.default_rng(7)")
+    assert not findings_for("unseeded-rng", "import numpy as np\nx = np.random.rand()",
+                            rel="tests/test_fake.py")
+
+
+_UNGUARDED = """
+    _ACTIVE = None
+
+    def inc(name):
+        reg = _ACTIVE
+        reg.inc(name)
+"""
+
+_GUARDED = """
+    _ACTIVE = None
+
+    def inc(name):
+        reg = _ACTIVE
+        if reg is None:
+            return
+        reg.inc(name)
+"""
+
+
+def test_arming_idiom_positive():
+    got = findings_for("arming-idiom", _UNGUARDED)
+    assert len(got) == 1 and "inc" in got[0].message
+    # reaching into another module's registry bypasses the guard
+    got = findings_for(
+        "arming-idiom",
+        "from repro.obs import metrics\nmetrics._ACTIVE.inc('x')")
+    assert len(got) == 1 and "_ACTIVE" in got[0].message
+
+
+def test_arming_idiom_negative():
+    assert not findings_for("arming-idiom", _GUARDED)
+    # install/clear/active read or rebind without calling through — fine
+    assert not findings_for("arming-idiom", """
+        _ACTIVE = None
+
+        def install(reg):
+            global _ACTIVE
+            _ACTIVE = reg
+
+        def active():
+            return _ACTIVE
+    """)
+
+
+def test_swallowed_exception_positive():
+    got = findings_for("swallowed-exception", """
+        try:
+            x = 1
+        except:
+            pass
+    """, rel="src/repro/engine/fake.py")
+    # bare except is the primary finding (the pass body is subsumed)
+    assert len(got) == 1 and "bare" in got[0].message
+    got = findings_for("swallowed-exception", """
+        try:
+            x = 1
+        except Exception:
+            pass
+    """, rel="src/repro/checkpoint/fake.py")
+    assert len(got) == 1
+
+
+def test_swallowed_exception_negative():
+    handled = """
+        try:
+            x = 1
+        except Exception as e:
+            sup.record_degraded("x", str(e))
+    """
+    assert not findings_for("swallowed-exception", handled,
+                            rel="src/repro/engine/fake.py")
+    # outside engine//checkpoint/ the rule does not apply
+    assert not findings_for("swallowed-exception",
+                            "try:\n    x = 1\nexcept Exception:\n    pass\n",
+                            rel="src/repro/launch/fake.py")
+
+
+def test_now_threading_positive():
+    got = findings_for("now-threading",
+                       "views = store.segment_views()",
+                       rel="src/repro/engine/fake.py")
+    assert len(got) == 1 and "now" in got[0].message
+    got = findings_for("now-threading", "hv = store.head_view()",
+                       rel="src/repro/engine/fake.py")
+    assert len(got) == 1
+
+
+def test_now_threading_negative():
+    for src in ("views = store.segment_views(now=now)",
+                "hv = store.head_view(now)"):
+        assert not findings_for("now-threading", src,
+                                rel="src/repro/engine/fake.py")
+    assert not findings_for("now-threading", "views = store.segment_views()",
+                            rel="tests/test_fake.py")
+
+
+def test_committed_bytecode_rule(tmp_path):
+    subprocess.run(["git", "init", "-q"], cwd=tmp_path, check=True)
+    (tmp_path / "ok.py").write_text("x = 1\n")
+    pyc = tmp_path / "__pycache__"
+    pyc.mkdir()
+    (pyc / "ok.cpython-311.pyc").write_bytes(b"\x00")
+    subprocess.run(["git", "add", "-f", "."], cwd=tmp_path, check=True)
+    got = list(RULES["committed-bytecode"].check(str(tmp_path), []))
+    assert len(got) == 1 and "__pycache__" in got[0].path
+    # untracked bytecode (the normal state after running the suite) is fine
+    subprocess.run(["git", "rm", "-q", "-r", "--cached", "__pycache__"],
+                   cwd=tmp_path, check=True)
+    assert not list(RULES["committed-bytecode"].check(str(tmp_path), []))
+
+
+# ========================================================== ownership checker
+_OFFTHREAD_WRITE = """
+class Store:
+    def compact(self):
+        snap = list(self.segments)
+
+        def work():
+            merged = [s for s in snap if s]
+            self.segments = merged  # BUG: swap on the worker thread
+            return merged
+
+        self.job = BackgroundJob(work)
+"""
+
+_OFFTHREAD_CLEAN = """
+class Store:
+    def compact(self):
+        snap = list(self.segments)
+
+        def work():
+            merged = [s for s in snap if s]
+            out = {"segments": merged}
+            out["n"] = len(merged)  # writes to worker-built state: fine
+            return out
+
+        self.job = BackgroundJob(work)
+
+    def poll(self):
+        if self.job.done():
+            self.segments = self.job.value["segments"]  # caller thread
+"""
+
+
+def _ownership_on(tmp_path, src, allowlist=frozenset()):
+    p = tmp_path / "fake.py"
+    p.write_text(textwrap.dedent(src))
+    return ownership.check_file(str(p), "src/repro/engine/fake.py",
+                                allowlist=set(allowlist))
+
+
+def test_ownership_flags_offthread_write(tmp_path):
+    got = _ownership_on(tmp_path, _OFFTHREAD_WRITE)
+    assert len(got) == 1
+    assert got[0].rule == "ownership" and "`self`" in got[0].message
+    assert "Store.compact.work" in got[0].message
+
+
+def test_ownership_clean_snapshot_swap_protocol(tmp_path):
+    assert not _ownership_on(tmp_path, _OFFTHREAD_CLEAN)
+
+
+def test_ownership_allowlist(tmp_path):
+    got = _ownership_on(
+        tmp_path, _OFFTHREAD_WRITE,
+        allowlist={("src/repro/engine/fake.py", "Store.compact.work")})
+    assert not got
+
+
+def test_ownership_follows_self_methods(tmp_path):
+    src = """
+    class Store:
+        def _adopt(self, merged):
+            self.segments = merged  # reached off-thread via work()
+
+        def compact(self):
+            def work():
+                self._adopt([1])
+
+            self.job = sup.submit("compact", (0,), work)
+    """
+    got = _ownership_on(tmp_path, src)
+    assert len(got) == 1 and "Store._adopt" in got[0].message
+
+
+def test_ownership_thread_target_root(tmp_path):
+    src = """
+    import threading
+
+    class Job:
+        def start(self):
+            def run():
+                self.state = "done"
+
+            threading.Thread(target=run, daemon=True).start()
+    """
+    got = _ownership_on(tmp_path, src)
+    assert len(got) == 1 and "Job.start.run" in got[0].message
+
+
+def test_ownership_repo_modules_clean():
+    got = ownership.check_ownership(REPO_ROOT)
+    assert got == [], [f.format() for f in got]
+
+
+# ======================================================= trace-level checks
+def test_recompile_guard_clean():
+    from repro.analysis import jaxcheck
+
+    assert jaxcheck.check_recompilation() == []
+
+
+def test_recompile_guard_detects_leaked_shape():
+    from repro.analysis import jaxcheck
+
+    def leak():
+        import numpy as np
+
+        from repro.kernels import ops
+
+        # a raw, unplanned batch shape straight into the kernels —
+        # exactly what the QueryPlanner exists to prevent
+        ops.build_sketch(np.full((3, 7), -1, np.int32), 64)
+
+    got = jaxcheck.check_recompilation(_leak=leak)
+    assert got and all(f.rule == "recompile-guard" for f in got)
+    assert any("build_sketch" in f.message for f in got)
+
+
+def test_host_sync_clean_and_seeded():
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.analysis import jaxcheck
+
+    assert jaxcheck.check_host_sync() == []
+
+    def bad(x):
+        return jax.pure_callback(
+            lambda v: np.asarray(v), jax.ShapeDtypeStruct(x.shape, x.dtype), x)
+
+    got = jaxcheck.check_host_sync(
+        [("bad", bad, (jax.ShapeDtypeStruct((4,), jnp.float32),))])
+    assert len(got) == 1 and got[0].rule == "host-sync"
+    assert "pure_callback" in got[0].message
+
+
+def test_vmem_budget_all_kernels_within_limit():
+    from repro.analysis import jaxcheck
+
+    records = []
+    with jaxcheck.capture_pallas_calls(records):
+        jaxcheck.trace_default_kernels(records)
+    assert len(records) >= 7  # every ops entry point launched a kernel
+    assert jaxcheck.check_vmem_budget(records=records) == []
+
+
+def test_vmem_budget_flags_oversized_blockspec():
+    import jax.numpy as jnp
+    from jax.experimental import pallas as pl
+
+    from repro.analysis import jaxcheck
+
+    big = jaxcheck.KernelCall(
+        name="huge_kernel", module="repro.kernels.fake",
+        in_specs=[pl.BlockSpec((4096, 4096), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((4096, 4096), lambda i: (0, 0)),
+        out_shape=jnp.zeros((1,), jnp.float32),
+        scratch_shapes=[], arg_dtypes=[jnp.dtype(jnp.float32)])
+    got = jaxcheck.check_vmem_budget(records=[big])
+    assert len(got) == 1 and got[0].rule == "vmem-budget"
+    assert "huge_kernel" in got[0].message
+    # the same record passes a big-enough budget
+    assert not jaxcheck.check_vmem_budget(limit_bytes=1 << 30, records=[big])
+
+
+# ====================================================== baseline & suppression
+def test_baseline_requires_note(tmp_path):
+    p = tmp_path / "baseline.json"
+    p.write_text(json.dumps({"suppressions": [
+        {"rule": "wall-clock", "path": "src/x.py"}]}))
+    with pytest.raises(ValueError, match="note"):
+        Baseline.load(str(p))
+
+
+def test_baseline_split():
+    f1 = Finding("wall-clock", "src/a.py", 3, "m")
+    f2 = Finding("wall-clock", "src/b.py", 9, "m")
+    f3 = Finding("ownership", "src/a.py", 3, "m")
+    bl = Baseline([Suppression("wall-clock", "src/a.py", note="why")])
+    new, supp = bl.split([f1, f2, f3])
+    assert supp == [f1] and new == [f2, f3]
+    # a line-pinned suppression only matches that line
+    bl = Baseline([Suppression("wall-clock", "src/b.py", note="why", line=8)])
+    new, supp = bl.split([f2])
+    assert new == [f2] and supp == []
+
+
+# ================================================================ runner/CLI
+def test_self_run_repo_clean_modulo_baseline():
+    report = runner.run(REPO_ROOT, trace=False)
+    assert report.errors == [], report.errors
+    assert report.new == [], [f.format() for f in report.new]
+    assert report.files_scanned > 50
+    assert report.exit_code == 0
+
+
+def test_runner_internal_error_exits_nonzero(tmp_path):
+    from repro.analysis.rules import Rule
+
+    (tmp_path / "src" / "repro").mkdir(parents=True)
+    (tmp_path / "src" / "repro" / "a.py").write_text("x = 1\n")
+
+    def broken(ctx):
+        raise RuntimeError("rule bug")
+
+    RULES["_test-broken"] = Rule("_test-broken", "file", "s", "d", broken)
+    try:
+        report = runner.run(str(tmp_path), paths=["src"], trace=False)
+    finally:
+        del RULES["_test-broken"]
+    assert report.exit_code == 2
+    assert any("_test-broken" in e and "rule bug" in e for e in report.errors)
+
+
+def test_runner_reports_unparseable_file(tmp_path):
+    (tmp_path / "bad.py").write_text("def broken(:\n")
+    report = runner.run(str(tmp_path), paths=["bad.py"], trace=False)
+    assert report.exit_code == 2
+    assert any("parse" in e for e in report.errors)
+
+
+def test_cli_explain_and_exit_codes():
+    from repro.analysis.__main__ import main
+
+    assert main(["--explain", "wall-clock"]) == 0
+    assert main(["--explain", "no-such-rule"]) == 2
+
+
+def test_cli_json_self_run(capsys):
+    from repro.analysis.__main__ import main
+
+    code = main(["--json", "--no-trace", "--root", REPO_ROOT])
+    out = json.loads(capsys.readouterr().out)
+    assert code == 0
+    assert out["new"] == [] and out["errors"] == []
+    assert out["files_scanned"] > 50
+
+
+def test_every_rule_family_registered():
+    kinds = {r.kind for r in RULES.values()}
+    assert kinds == {"file", "repo", "trace"}
+    for rid in ("ops-outside-registry", "wall-clock", "unseeded-rng",
+                "arming-idiom", "swallowed-exception", "now-threading",
+                "committed-bytecode", "ownership", "recompile-guard",
+                "host-sync", "vmem-budget"):
+        assert rid in RULES, rid
+        assert RULES[rid].doc.strip() and RULES[rid].summary
