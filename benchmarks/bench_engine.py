@@ -670,6 +670,107 @@ def run_metrics_overhead(dataset="tiny", backend="oracle", queries=32,
     }
 
 
+def run_autopilot(dataset="tiny", backend="oracle", queries=32, topk=10,
+                  repeats=5, seed=0, churn_docs=16, churn_deletes=8):
+    """Hands-off serving cost under sustained churn (DESIGN.md §16).
+
+    Two identical mutable engines run the same seeded churn schedule —
+    ingest a batch, delete random live docs, answer a query batch — one
+    with a :class:`~repro.engine.lifecycle.LifecycleController` ticking
+    every round (merges launch in the background as tiers fill), the
+    other with the pre-controller operator idiom: a blocking
+    ``compact()`` every 4th round. The claim is that closing the loop
+    costs nothing on serving throughput: the tick itself is a host-side
+    poll over lifecycle gauges, and the merges it launches run on the
+    background slot serving already tolerates. Interleaved
+    min-of-repeats; ``autopilot_qps_ratio`` is controller-arm QPS over
+    explicit-arm QPS (>= 0.9 gated in smoke)."""
+    from repro.core import BinSketchConfig, make_mapping
+    from repro.data.synthetic import DATASETS, generate_corpus
+    from repro.engine import (
+        ControllerPolicy,
+        LifecycleController,
+        QueryPlanner,
+        SketchEngine,
+    )
+    from repro.obs.clock import ManualClock
+
+    spec = DATASETS[dataset]
+    idx, lens = generate_corpus(spec, seed=seed)
+    n = idx.shape[0]
+    cfg = BinSketchConfig.from_sparsity(spec.d, int(lens.max()), 0.05)
+    mapping = make_mapping(cfg, jax.random.PRNGKey(0))
+    planner = QueryPlanner(min_batch=8, max_batch=max(queries, 8))
+    seal = 24
+    rng = np.random.default_rng(seed + 2)
+    q = jnp.asarray(idx[rng.choice(n, queries, replace=False)])
+
+    def build():
+        clk = ManualClock()
+        eng = SketchEngine.build(cfg, mapping, jnp.asarray(idx),
+                                 backend=backend, planner=planner,
+                                 mutable=True, seal_rows=seal, clock=clk)
+        eng.seal()
+        return eng, clk
+
+    eng_on, clk_on = build()
+    ctl = LifecycleController(
+        eng_on,
+        ControllerPolicy(tier_min_rows=seal, tier_fanout=4,
+                         tombstone_density=0.5),
+        clock=clk_on)
+    eng_off, clk_off = build()
+
+    window = 4  # rounds per timed closure == the explicit compact cadence,
+    # so min-of-repeats amortizes each arm's maintenance identically — a
+    # per-round closure would let the explicit arm's min be a
+    # maintenance-free round while every controller round pays its tick
+
+    def mk_window(eng, clk, maintain):
+        # per-arm rng with one shared seed: both arms replay the same
+        # mutation schedule, so the paired timing compares like for like
+        arm_rng = np.random.default_rng(seed + 5)
+        state = {"cursor": 0, "round": 0}
+
+        def one_window():
+            for _ in range(window):
+                s = state["cursor"] % (n - churn_docs)
+                state["cursor"] += churn_docs
+                eng.add(jnp.asarray(idx[s : s + churn_docs]), now=clk())
+                live = np.asarray(eng.store.live_ids)
+                kill = min(churn_deletes, max(len(live) - queries, 0))
+                if kill:
+                    victims = arm_rng.choice(live, size=kill, replace=False)
+                    eng.delete([int(g) for g in victims])
+                out = eng.query(q, topk)[1]
+                clk.advance(1.0)
+                maintain(state["round"])
+                state["round"] += 1
+            return out
+
+        return one_window
+
+    on = mk_window(eng_on, clk_on, lambda r: ctl.tick(now=clk_on()))
+    off = mk_window(eng_off, clk_off,
+                    lambda r: eng_off.compact() if r % window == window - 1
+                    else None)
+    t_on, t_off = _timeit_pair(on, off, repeats)
+    eng_on.store.wait_compaction()
+    return {
+        "corpus_docs": int(n),
+        "churn_docs_per_round": int(churn_docs),
+        "churn_deletes_per_round": int(churn_deletes),
+        "rounds_per_window": int(window),
+        "query_qps_controller": queries * window / t_on,
+        "query_qps_explicit": queries * window / t_off,
+        "autopilot_qps_ratio": t_off / t_on,
+        "segments_controller": len(eng_on.store.sealed),
+        "segments_explicit": len(eng_off.store.sealed),
+        "controller_merges": int(ctl.merges),
+        "controller_ticks": int(ctl.ticks),
+    }
+
+
 def run_analysis_time(paths=("src",), repeats=1):
     """Wall time of a full `repro.analysis` pass (all three analyzer
     families, trace checks included) over ``paths`` — the DESIGN §15 CI
@@ -778,6 +879,10 @@ def run(dataset="tiny", backend="oracle", queries=64, topk=10, repeats=5,
         dataset, backend=backend, queries=min(queries, 32), topk=topk,
         repeats=max(repeats, 5), seed=seed,
     )
+    result["autopilot"] = run_autopilot(
+        dataset, backend=backend, queries=min(queries, 32), topk=topk,
+        repeats=max(repeats, 5), seed=seed,
+    )
     result["analysis"] = run_analysis_time()
     if prefilter_docs:
         result["prefilter"] = run_prefilter(
@@ -829,6 +934,7 @@ def smoke() -> dict:
     _smoke_prefilter()
     _smoke_supervision()
     _smoke_metrics_overhead()
+    _smoke_autopilot()
     _smoke_analysis()
     return {"smoke": "ok"}
 
@@ -925,6 +1031,27 @@ def _smoke_metrics_overhead():
     print(f"smoke ok: metrics overhead disarmed "
           f"{mo['metrics_overhead_disarmed']:.3f}x / armed "
           f"{mo['metrics_overhead_armed']:.3f}x @ {mo['corpus_docs']} docs")
+
+
+def _smoke_autopilot():
+    """CI gate for hands-off serving (DESIGN.md §16): under the paired
+    churn schedule, the controller-driven arm must hold >= 0.9x the QPS
+    of the explicit-maintenance baseline (the tick is a host-side poll;
+    its merges ride the background slot), and its ticks must actually
+    have engaged — a controller that never merges isn't exercising the
+    claim. Min-of-repeats over interleaved arms; the margin absorbs
+    dispatch jitter at smoke shapes."""
+    ap = run_autopilot(queries=16, repeats=5)
+    assert ap["autopilot_qps_ratio"] >= 0.9, (
+        f"controller-on serving at {ap['autopilot_qps_ratio']:.3f}x the "
+        f"explicit-maintenance baseline @ {ap['corpus_docs']} docs"
+    )
+    assert ap["controller_merges"] >= 1, "controller never merged under churn"
+    print(f"smoke ok: autopilot qps ratio {ap['autopilot_qps_ratio']:.3f} "
+          f"({ap['controller_merges']} merge(s) over "
+          f"{ap['controller_ticks']} ticks, "
+          f"{ap['segments_controller']} segments vs "
+          f"{ap['segments_explicit']} explicit)")
 
 
 def _smoke_mutate_cycle():
@@ -1046,6 +1173,12 @@ def main(argv=None):
                 "supervision_overhead"):
         if key in sv:
             print(f"supervision_{key},{sv[key]:.4f}")
+    ap = result.get("autopilot", {})
+    for key in ("query_qps_controller", "query_qps_explicit",
+                "autopilot_qps_ratio", "segments_controller",
+                "segments_explicit", "controller_merges"):
+        if key in ap:
+            print(f"autopilot_{key},{ap[key]:.4f}")
     dst = result.get("distill", {})
     for tier in dst.get("tiers", ()):
         print(f"distill_bytes_reduction@N={tier['n_bins']},"

@@ -10,6 +10,7 @@
 | Backend registry | backends.py | oracle / pallas / pallas-interpret behind one name |
 | QueryPlanner | planner.py | ragged batches -> bounded set of jit shapes |
 | JobSupervisor | supervision.py | retries / watchdog / quarantine / health() for background jobs; maintenance errors never reach queries |
+| LifecycleController | lifecycle.py | autonomous maintenance: size-tiered merges, distill ladder, recall guardrail — telemetry in, supervised jobs out |
 | SketchEngine | engine.py | build + query + sharded query (mixed-width) on the pieces above |
 
 The telemetry plane — metrics registry, sampled query traces, the online
@@ -30,6 +31,7 @@ from .backends import (
     register_backend,
 )
 from .engine import SketchEngine, merge_segment_topk, shard_topk
+from .lifecycle import ControllerPolicy, LifecycleController
 from .placement import SegmentPlacement, SegmentPlacer, WidthSlab
 from .planner import QueryChunk, QueryPlanner
 from .segments import DistillPolicy, SealedSegment, SegmentedStore
@@ -45,9 +47,11 @@ __all__ = [
     "Backend",
     "BandIndex",
     "BandPolicy",
+    "ControllerPolicy",
     "DegradedMode",
     "DistillPolicy",
     "JobSupervisor",
+    "LifecycleController",
     "QueryChunk",
     "QueryPlanner",
     "SealedSegment",

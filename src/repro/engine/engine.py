@@ -158,6 +158,12 @@ class SketchEngine:
     _own_supervisor: Optional[JobSupervisor] = dataclasses.field(
         default=None, init=False, repr=False
     )
+    # the attached LifecycleController (engine/lifecycle.py); set by the
+    # controller's own __init__ so ``metrics()`` can expose its state —
+    # the engine never calls into it
+    controller: Optional[object] = dataclasses.field(
+        default=None, init=False, repr=False
+    )
 
     # ------------------------------------------------------------ construct
     @classmethod
@@ -253,8 +259,8 @@ class SketchEngine:
 
     def metrics(self, now: Optional[float] = None) -> dict:
         """One JSON-safe telemetry snapshot (DESIGN.md §14) — the surface
-        the future lifecycle controller (and ``serve.py --metrics-json``)
-        reads. Composes:
+        the lifecycle controller (``engine/lifecycle.py``) consumes and
+        ``serve.py --metrics-json`` dumps. Composes:
 
         * the armed registry's counters / gauges / histograms (query-stage
           latencies, lifecycle throughput, degraded-mode counts; empty
@@ -265,6 +271,8 @@ class SketchEngine:
         * ``health``: the §13 supervision snapshot,
         * ``probe``: the latest online recall reading (gauges
           ``probe.recall`` / ``probe.at``; None until a probe lands),
+        * ``controller``: the attached lifecycle controller's state
+          machine + action counters (§16; absent when none is attached),
         * ``prefilter`` / ``last_trace`` when available.
         """
         now = self._auto_now(now)
@@ -294,6 +302,8 @@ class SketchEngine:
                 "tombstone_density": 0.0,
                 "width_mix": {str(self.cfg.n_bins): n} if n else {},
             }
+        if self.controller is not None:
+            out["controller"] = self.controller.controller_state()
         if self.last_prefilter_stats is not None:
             out["prefilter"] = dict(self.last_prefilter_stats)
         col = obs_trace.active()

@@ -1,0 +1,430 @@
+"""LifecycleController — the autonomous maintenance loop (DESIGN.md §16).
+
+Every maintenance lever in this repo used to be operator-pulled:
+``compact_async`` when someone noticed tombstones piling up,
+``distill_async`` when someone decided a tier was cold, a fixed
+``seal_rows`` threshold. The paper's regime — unbounded mutation streams,
+nobody babysitting — needs those calls to come from *observed signals*
+instead. This module closes that loop:
+
+  signal (PR 8 telemetry)            policy                  action
+  ───────────────────────            ──────                  ──────
+  per-segment live/width gauges   →  size-tiered merge    →  compact_async
+  tombstone density per tier      →  (LSM-style buckets)     over one tier
+  per-segment hits deltas + age   →  cold-set distill     →  distill_async
+  sealed-slab byte footprint      →  ladder under budget     (only=cold)
+  probe.recall gauge              →  recall guardrail     →  halt distills,
+                                                             abandon in-flight
+
+Design constraints, in order:
+
+  1. **Never touch the query path.** Every action goes through the
+     existing snapshot→work→swap jobs (``compact_async`` /
+     ``distill_async``); the tick itself runs on the *caller's* thread
+     (the serving loop's heartbeat slot) and only ever launches or polls
+     — it never blocks on a worker. At most one background job is in
+     flight at a time (the store's single ``_compaction`` slot), so a
+     tick that finds one running does nothing but poll.
+  2. **Supervised like everything else.** The tick body runs under
+     :meth:`JobSupervisor.run_inline`: a tick that raises is recorded
+     (never propagated into serving), consecutive failures quarantine the
+     ``("lifecycle", "tick")`` pair, and the "retry" of a failed tick is
+     simply the next tick.
+  3. **Deterministic under test.** All time comes from the unified
+     ``Clock`` (or an explicit ``now``); no wall-clock reads, no RNG —
+     the whole controller is a pure function of (store state, telemetry,
+     policy, now), which is what lets ``tests/test_lifecycle.py`` script
+     hours of simulated traffic on a ``ManualClock`` in milliseconds.
+
+The **recall guardrail** is the one stateful piece: a
+:class:`~repro.obs.probe.RecallProbe` reading below
+``probe_baseline - probe_tol`` flips the controller to ``"halted"`` —
+distillation stops, an in-flight distill job is abandoned via the
+supervisor (its result can never be swapped in), the halt is recorded as
+a degraded mode (``lifecycle_distill``) and counted
+(``controller.guardrail_trips``). Merges keep running while halted (they
+are lossless); a recovered reading clears the halt.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import logging
+import math
+from typing import Callable, Dict, List, Optional, Tuple
+
+from ..obs import metrics as obs_metrics
+from ..obs.clock import Clock, ensure_clock
+from .segments import DistillPolicy, SegmentedStore
+
+__all__ = ["ControllerPolicy", "LifecycleController"]
+
+log = logging.getLogger("repro.lifecycle")
+
+# Controller states (strings, not an enum — they go straight into
+# controller_state() snapshots and log lines, like supervision's).
+STEADY = "steady"
+HALTED = "halted"
+
+
+@dataclasses.dataclass(frozen=True)
+class ControllerPolicy:
+    """The controller's knobs (DESIGN.md §16).
+
+    **Tier math** (size-tiered merges, LSM-style): a sealed segment with
+    ``live`` rows sits in tier ``0`` while ``live <= tier_min_rows`` and
+    tier ``floor(log_factor(live / tier_min_rows)) + 1`` above. A
+    ``(width, tier)`` bucket merges when it holds ``tier_fanout``
+    segments (occupancy) or its pooled tombstone density crosses
+    ``tombstone_density`` — one bucket per tick, never a full
+    compaction. With fanout F, churn that seals S segments total leaves
+    at most ``F · ceil(log_F S)`` segments per width — bounded, and the
+    bound is what the simulation suite asserts.
+
+    **Distillation pressure**: the ladder (``distill_widths``) engages
+    only while the sealed slabs' byte footprint exceeds
+    ``memory_budget`` (None = unconditional pressure — the ladder runs
+    on coldness alone; ``()`` disables distillation entirely). Within
+    pressure, only **cold** segments fold: per-tick ``hits`` delta at
+    most ``cold_hits`` AND youngest live row at least ``cold_age`` old.
+
+    **Guardrail**: with ``probe_baseline`` set, a probe reading below
+    ``baseline - probe_tol`` halts distillation (see module docstring).
+    ``probe_interval`` spaces automatic probe launches (None = never
+    launch; an externally-driven probe is still polled and honoured).
+    """
+
+    tier_min_rows: int = 16
+    tier_factor: float = 4.0
+    tier_fanout: int = 4
+    tombstone_density: float = 0.25
+    distill_widths: Tuple[int, ...] = ()
+    memory_budget: Optional[int] = None
+    cold_age: float = 60.0
+    cold_hits: int = 0
+    probe_baseline: Optional[float] = None
+    probe_tol: float = 0.05
+    probe_interval: Optional[float] = None
+
+    def __post_init__(self):
+        if self.tier_min_rows < 1:
+            raise ValueError(f"tier_min_rows must be >= 1, got {self.tier_min_rows}")
+        if self.tier_factor <= 1.0:
+            raise ValueError(f"tier_factor must be > 1, got {self.tier_factor}")
+        if self.tier_fanout < 2:
+            raise ValueError(f"tier_fanout must be >= 2, got {self.tier_fanout}")
+        if not 0.0 < self.tombstone_density <= 1.0:
+            raise ValueError(
+                f"tombstone_density must be in (0, 1], got {self.tombstone_density}")
+        object.__setattr__(
+            self, "distill_widths",
+            tuple(sorted((int(w) for w in self.distill_widths), reverse=True)),
+        )
+
+    def tier(self, live: int) -> int:
+        """Size tier of a segment with ``live`` rows (0 = smallest)."""
+        if live <= self.tier_min_rows:
+            return 0
+        return int(math.log(live / self.tier_min_rows, self.tier_factor)) + 1
+
+    def snapshot(self) -> dict:
+        return {
+            "tier_min_rows": int(self.tier_min_rows),
+            "tier_factor": float(self.tier_factor),
+            "tier_fanout": int(self.tier_fanout),
+            "tombstone_density": float(self.tombstone_density),
+            "distill_widths": [int(w) for w in self.distill_widths],
+            "memory_budget": (int(self.memory_budget)
+                              if self.memory_budget is not None else None),
+            "cold_age": float(self.cold_age),
+            "cold_hits": int(self.cold_hits),
+            "probe_baseline": (float(self.probe_baseline)
+                               if self.probe_baseline is not None else None),
+            "probe_tol": float(self.probe_tol),
+            "probe_interval": (float(self.probe_interval)
+                               if self.probe_interval is not None else None),
+        }
+
+
+class LifecycleController:
+    """Closes the loop from telemetry to maintenance on one engine.
+
+    ::
+
+        ctl = LifecycleController(engine, ControllerPolicy(...),
+                                  probe=RecallProbe(engine),
+                                  probe_feed=lambda: (surv_ids, surv_rows))
+        ...serve loop...
+            ctl.tick(now=serve_now)      # cheap; launches at most one job
+
+    ``probe_feed`` supplies the raw catalog (aligned global ids + index
+    rows) a probe launch needs — the store keeps sketches, not documents,
+    so ground truth must come from whoever still has the rows (serve.py
+    keeps its corpus; tests keep their contents dict). Without a feed the
+    guardrail still works off externally-launched probe readings.
+
+    Attaching sets ``engine.controller`` so
+    :meth:`~repro.engine.engine.SketchEngine.metrics` exposes
+    :meth:`controller_state`; the engine itself never calls into the
+    controller.
+    """
+
+    def __init__(
+        self,
+        engine,
+        policy: Optional[ControllerPolicy] = None,
+        *,
+        probe=None,
+        probe_feed: Optional[Callable[[], tuple]] = None,
+        clock: Optional[Callable[[], float]] = None,
+    ):
+        if not isinstance(engine.store, SegmentedStore):
+            raise TypeError(
+                "LifecycleController needs a mutable engine (SegmentedStore): "
+                "an append-only SketchStore has no lifecycle to control")
+        self.engine = engine
+        self.policy = policy or ControllerPolicy()
+        self.probe = probe
+        self.probe_feed = probe_feed
+        self.clock: Clock = ensure_clock(
+            clock if clock is not None
+            else (engine.clock if engine.clock is not None
+                  else getattr(engine.store, "clock", None)))
+        self.state = STEADY
+        self.ticks = 0
+        self.failed_ticks = 0
+        self.merges = 0
+        self.distills = 0
+        self.probes = 0
+        self.guardrail_trips = 0
+        self.abandoned_distills = 0
+        self.halted_since: Optional[float] = None
+        self.last_action: Optional[dict] = None
+        self.last_tick_at: Optional[float] = None
+        # per-segment hits baseline for the cold test, valid only within
+        # one layout epoch (segment indices shift at every swap; rewrites
+        # start new segments at hits=0, so cross-epoch deltas would lie)
+        self._prev_hits: Dict[int, int] = {}
+        self._prev_epoch: Optional[int] = None
+        self._last_probe_launch: Optional[float] = None
+        engine.controller = self
+
+    # ------------------------------------------------------------------ tick
+    def tick(self, now: Optional[float] = None) -> Optional[dict]:
+        """One supervised control step; never raises, never blocks on
+        background work. Returns the tick report, or None when the tick
+        failed or the supervisor has ticks quarantined (serving is
+        unaffected either way — the next tick is the retry)."""
+        t = float(now) if now is not None else self.clock()
+        report = self.engine.supervisor.run_inline(
+            "lifecycle", ("tick",), lambda: self._tick(t))
+        if report is None:
+            self.failed_ticks += 1
+            obs_metrics.inc("controller.failed_ticks")
+        return report
+
+    def _tick(self, now: float) -> dict:
+        st = self.engine.store
+        self.ticks += 1
+        self.last_tick_at = now
+        obs_metrics.inc("controller.ticks")
+
+        # 1. heartbeat: adopt any finished background work (non-blocking;
+        #    a failed/abandoned job is dropped by the store, not by us)
+        swapped = st.poll_compaction()
+
+        # 2. observe — the PR 8 signal surface, one consistent snapshot
+        snap = st.lifecycle_snapshot(now=now)
+        hits_delta = self._hits_deltas(st, snap)
+
+        # 3. guardrail: recall dips halt distillation before anything else
+        #    gets to launch more of it
+        self._probe_step(now)
+        self._guardrail_step(now, st)
+
+        # 4. act — at most one launch per tick, and only when the single
+        #    background slot is free (compact_async/distill_async would
+        #    otherwise block on wait_compaction, stalling the caller)
+        action = None
+        if not snap["compaction_running"] and st._compaction is None:
+            action = self._maybe_merge(st, snap)
+            if action is None and self.state != HALTED:
+                action = self._maybe_distill(st, snap, hits_delta, now)
+        if action is not None:
+            self.last_action = dict(action, at=now)
+
+        # 5. re-baseline hits for the next tick's cold test
+        self._prev_epoch = st._layout_epoch
+        self._prev_hits = {
+            ent["segment"]: ent["hits"] for ent in snap["segments"]
+        }
+        return {
+            "at": now,
+            "state": self.state,
+            "swapped": bool(swapped),
+            "action": action,
+            "segments": len(snap["segments"]),
+            "tombstone_density": snap["tombstone_density"],
+        }
+
+    # --------------------------------------------------------------- signals
+    def _hits_deltas(self, st, snap) -> Dict[int, Optional[int]]:
+        """Per-segment hits since the previous tick; None = unknown (first
+        tick, or the layout changed underneath the baseline — treated as
+        hot, so a fresh swap never gets insta-distilled)."""
+        same_epoch = self._prev_epoch == st._layout_epoch
+        out: Dict[int, Optional[int]] = {}
+        for ent in snap["segments"]:
+            i = ent["segment"]
+            prev = self._prev_hits.get(i) if same_epoch else None
+            out[i] = (ent["hits"] - prev) if prev is not None else None
+        return out
+
+    def _probe_step(self, now: float) -> None:
+        """Drive the recall probe: poll for a landed reading, launch a new
+        round when due. Launch failures (refused, empty catalog, a raising
+        feed) surface through run_inline's bookkeeping, not serving."""
+        probe = self.probe
+        if probe is None:
+            return
+        probe.poll(now=now)
+        p = self.policy
+        if (p.probe_interval is None or self.probe_feed is None
+                or probe.running):
+            return
+        if (self._last_probe_launch is not None
+                and now - self._last_probe_launch < p.probe_interval):
+            return
+        surv_ids, surv_rows = self.probe_feed()
+        if len(surv_ids) and probe.launch(surv_ids, surv_rows):
+            self._last_probe_launch = now
+            self.probes += 1
+            obs_metrics.inc("controller.probes")
+
+    # ------------------------------------------------------------- guardrail
+    def _guardrail_step(self, now: float, st) -> None:
+        p = self.policy
+        if p.probe_baseline is None or self.probe is None:
+            return
+        recall = self.probe.last_recall
+        if recall is None:
+            return
+        floor = p.probe_baseline - p.probe_tol
+        if recall < floor:
+            if self.state != HALTED:
+                self.state = HALTED
+                self.halted_since = now
+                self.guardrail_trips += 1
+                obs_metrics.inc("controller.guardrail_trips")
+                self.engine.supervisor.record_degraded(
+                    "lifecycle_distill",
+                    f"probe recall {recall:.3f} below floor {floor:.3f} "
+                    f"(baseline {p.probe_baseline:.3f} - tol {p.probe_tol:.3f})",
+                )
+                log.warning("guardrail tripped: recall %.3f < %.3f — "
+                            "distillation halted", recall, floor)
+            # kill any in-flight distill — its fold is presumed tainted;
+            # the supervisor drops the result so it can never swap in.
+            # A running *merge* is left alone (lossless).
+            if st.abandon_compaction(op="distill"):
+                self.abandoned_distills += 1
+                obs_metrics.inc("controller.abandoned_distills")
+        elif self.state == HALTED:
+            self.state = STEADY
+            self.halted_since = None
+            self.engine.supervisor.clear_degraded("lifecycle_distill")
+            obs_metrics.inc("controller.guardrail_recoveries")
+            log.info("guardrail cleared: recall %.3f back above %.3f",
+                     recall, floor)
+
+    # --------------------------------------------------------------- actions
+    def _maybe_merge(self, st, snap) -> Optional[dict]:
+        """Size-tiered merge selection: bucket sealed segments by
+        ``(width, tier)``; launch one bucket's merge when occupancy or
+        pooled tombstone density crosses its threshold. Smallest tier
+        first — small merges are cheap and unblock the cascade."""
+        p = self.policy
+        buckets: Dict[Tuple[int, int], List[dict]] = {}
+        for ent in snap["segments"]:
+            buckets.setdefault(
+                (ent["width"], p.tier(ent["live"])), []).append(ent)
+        for (width, tier), members in sorted(buckets.items(),
+                                             key=lambda kv: (kv[0][1], kv[0][0])):
+            rows = sum(e["rows"] for e in members)
+            tomb = sum(e["tombstones"] for e in members)
+            over_occupancy = len(members) >= p.tier_fanout
+            over_density = rows > 0 and tomb / rows >= p.tombstone_density
+            if not (over_occupancy or over_density):
+                continue
+            group = [e["segment"] for e in members]
+            # False = nothing to reclaim (e.g. one clean singleton after
+            # the width split) — fall through to the next bucket
+            if st.compact_async(groups=[group]):
+                self.merges += 1
+                obs_metrics.inc("controller.merges")
+                return {
+                    "kind": "merge", "width": int(width), "tier": int(tier),
+                    "segments": [int(i) for i in group],
+                    "trigger": "occupancy" if over_occupancy else "tombstones",
+                }
+        return None
+
+    def _maybe_distill(self, st, snap, hits_delta, now) -> Optional[dict]:
+        """Distill ladder under memory pressure: fold the cold set one
+        tier down. Hot segments (recent hits) never fold, however old."""
+        p = self.policy
+        if not p.distill_widths:
+            return None
+        if p.memory_budget is not None:
+            if self._sealed_bytes(snap) <= p.memory_budget:
+                return None
+        floor_w = p.distill_widths[-1]
+        cold = [
+            ent["segment"] for ent in snap["segments"]
+            if ent["live"] > 0
+            and ent["width"] > floor_w
+            and ent.get("age_min", 0.0) >= p.cold_age
+            and hits_delta.get(ent["segment"]) is not None
+            and hits_delta[ent["segment"]] <= p.cold_hits
+        ]
+        if not cold:
+            return None
+        dp = DistillPolicy(widths=p.distill_widths, min_age=p.cold_age)
+        if not st.distill_async(dp, now=now, only=cold):
+            return None
+        self.distills += 1
+        obs_metrics.inc("controller.distills")
+        return {"kind": "distill", "segments": [int(i) for i in cold],
+                "widths": [int(w) for w in p.distill_widths]}
+
+    @staticmethod
+    def _sealed_bytes(snap) -> int:
+        """Byte footprint of the sealed sketch slabs (live rows × packed
+        words × 4B) — the quantity the memory budget bounds. Tombstoned
+        rows still occupy slab memory until merged out, so they count."""
+        return sum(
+            ent["rows"] * ((ent["width"] + 31) // 32) * 4
+            for ent in snap["segments"]
+        )
+
+    # ----------------------------------------------------------------- state
+    def controller_state(self) -> dict:
+        """JSON-safe controller snapshot — one section of
+        ``SketchEngine.metrics()`` and serve.py's ``--metrics-json``."""
+        return {
+            "state": self.state,
+            "ticks": int(self.ticks),
+            "failed_ticks": int(self.failed_ticks),
+            "merges": int(self.merges),
+            "distills": int(self.distills),
+            "probes": int(self.probes),
+            "guardrail_trips": int(self.guardrail_trips),
+            "abandoned_distills": int(self.abandoned_distills),
+            "halted_since": (float(self.halted_since)
+                             if self.halted_since is not None else None),
+            "last_tick_at": (float(self.last_tick_at)
+                             if self.last_tick_at is not None else None),
+            "last_action": (dict(self.last_action)
+                            if self.last_action is not None else None),
+            "policy": self.policy.snapshot(),
+        }

@@ -1306,6 +1306,7 @@ class SegmentedStore:
         policy: DistillPolicy,
         *,
         now: float = 0.0,
+        only: Optional[Sequence[int]] = None,
         _hold=None,
     ) -> bool:
         """Re-sketch policy-eligible sealed segments to their next smaller
@@ -1324,12 +1325,18 @@ class SegmentedStore:
         reconcile exactly like mid-merge deletes, and the swap bumps the
         layout epoch so placements rebuild with the new widths. Returns
         False when no segment is eligible.
+
+        ``only`` restricts eligibility to the given sealed-segment indices
+        (the lifecycle controller passes its cold set, so a hot segment
+        never folds however old it is); None keeps the policy-only
+        behaviour.
         """
         self.wait_compaction()  # one background job over the slabs at a time
         base = self.cfg.n_bins
+        allow = None if only is None else {int(i) for i in only}
         plan: List[Tuple[int, int]] = []
         for i, seg in enumerate(self.sealed):
-            if seg.n_live == 0:
+            if seg.n_live == 0 or (allow is not None and i not in allow):
                 continue
             cur = seg.n_bins if seg.n_bins is not None else base
             age = float(now) - float(seg.born[seg.valid].max())
@@ -1357,6 +1364,12 @@ class SegmentedStore:
             for i, cur, tgt, sk, ids, valid, born in snap:
                 keep = np.nonzero(valid)[0]  # ids ascend within one segment:
                 folded, fills = _fold_packed_host(sk[keep], cur, tgt)
+                if faults.fire("distill.corrupt"):
+                    # silent corruption: the fold "succeeds" but its output
+                    # is garbage — no error for the supervisor to catch;
+                    # only the recall probe can see it (guardrail tests)
+                    folded = np.zeros_like(folded)
+                    fills = np.zeros_like(fills)
                 # the folded rows are a *different* signature space (N'
                 # bins, fewer words): the tier gets its own index, re-
                 # derived from the folded slab — base-width buckets must
@@ -1433,6 +1446,27 @@ class SegmentedStore:
         if state != "succeeded":
             return None
         return self._apply_swap(job)
+
+    def abandon_compaction(self, op: Optional[str] = None) -> bool:
+        """Abandon the in-flight background job *now* (no swap, no wait).
+
+        ``op`` filters by operation name (``"distill"`` lets the recall
+        guardrail kill a distillation without touching a running merge);
+        None abandons whatever is pending. The supervisor drops every
+        reference to the worker's future result, so even a fold that
+        completes after this call can never be swapped in — the store
+        keeps serving the consistent pre-swap state. Returns True iff a
+        pending job was discarded (a worker that already finished is
+        discarded unswapped; the supervisor's ``abandoned`` counter bumps
+        only for still-running attempts)."""
+        pending = self._compaction
+        if pending is None:
+            return False
+        if op is not None and pending.job.op != op:
+            return False
+        self._compaction = None
+        self.supervisor.abandon(pending.job)
+        return True
 
     def _apply_swap(self, job: "_CompactionJob") -> Optional[Dict[str, int]]:
         """Final guard between a succeeded worker and the query path: a

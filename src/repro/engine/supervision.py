@@ -350,6 +350,76 @@ class JobSupervisor:
                     job.op, job.key, job.attempts, err)
         return FAILED
 
+    def abandon(self, job: Optional[SupervisedJob]) -> bool:
+        """Terminally abandon an in-flight job *now* — the controller's
+        guardrail uses this to kill distillation mid-fold. Same contract
+        as the watchdog branch of :meth:`poll`: every reference to the
+        worker's (future) result is dropped, so even if the daemon thread
+        finishes later its output can never be swapped in. Returns True
+        if the job was running and is now abandoned; False for None or
+        already-terminal jobs (idempotent, never raises)."""
+        if job is None or job.state != RUNNING:
+            return False
+        job.state = FAILED
+        job.abandoned = True
+        job.error = RuntimeError(f"{job.op} abandoned by caller")
+        job.finished_at = self._clock()
+        job._job = None
+        job._next_retry = None
+        with self._lock:
+            self._count(job.op, "abandoned")
+            self._note_error(job, job.error)
+            self._record_failure(job)
+        log.warning("abandoned %s %s on caller request", job.op, job.key)
+        return True
+
+    def run_inline(self, op: str, key, fn: Callable[[], Any]) -> Optional[Any]:
+        """Run ``fn`` on the *caller's* thread under the supervisor's
+        failure bookkeeping — quarantine refusal, consecutive-failure
+        accounting, last-error capture — without spawning a worker.
+
+        This is how the lifecycle controller's tick runs: the tick must
+        stay on the serving thread (it owns the store per the threading
+        contract), but its exceptions must be recorded and repeated
+        failures quarantined exactly like background work. There is no
+        backoff loop — the "retry" of a failed tick is simply the next
+        tick. Returns ``fn()``'s value, or None when the pair is
+        quarantined or ``fn`` raised (the error is recorded, never
+        propagated)."""
+        nkey = self._norm_key(key)
+        with self._lock:
+            ent = self._quarantine.get((op, nkey))
+            if ent is not None:
+                at, probing = ent
+                if probing or self._clock() - at < self.policy.probation:
+                    self._count(op, "refused")
+                    return None
+                ent[1] = True  # probation over: admit exactly one probe
+            self._count(op, "launched")
+        started = self._clock()
+        try:
+            result = fn()
+        except Exception as err:  # recorded, never propagated (§13)
+            shim = SupervisedJob.__new__(SupervisedJob)
+            shim.op, shim.key = op, nkey
+            shim.launched_at = started
+            shim.finished_at = self._clock()
+            with self._lock:
+                self._note_error(shim, err)
+                self._record_failure(shim)
+                self._record_latency(shim)
+            log.warning("inline %s %s failed: %s\n%s", op, nkey, err,
+                        traceback.format_exc())
+            return None
+        shim = SupervisedJob.__new__(SupervisedJob)
+        shim.op, shim.key = op, nkey
+        shim.launched_at = started
+        shim.finished_at = self._clock()
+        with self._lock:
+            self._record_success(shim)
+            self._record_latency(shim)
+        return result
+
     def wait(self, job: Optional[SupervisedJob], poll_s: float = 0.005) -> str:
         """Drive ``job`` to a terminal state (joining threads, sleeping
         through backoff windows); returns it. Never raises."""

@@ -53,6 +53,7 @@ __all__ = [
     "FaultSpec",
     "active",
     "clear",
+    "fire",
     "inject",
     "install",
     "scoped",
@@ -64,6 +65,7 @@ __all__ = [
 POINTS = frozenset({
     "compact.work",        # background compaction merge (worker thread)
     "distill.work",        # background distillation fold (worker thread)
+    "distill.corrupt",     # silently zero a distilled fold (recall-dip target)
     "band.build",          # BandIndex construction (seal / worker / restore)
     "band.lookup",         # BandIndex.candidates (query thread)
     "placement.build",     # SegmentPlacer.place (slab upload)
@@ -212,6 +214,20 @@ def inject(point: str) -> None:
         time.sleep(spec.delay_s)
         return
     raise FaultError(f"injected fault at {point!r}")
+
+
+def fire(point: str) -> bool:
+    """Non-raising injection point: True iff an armed plan fires here.
+
+    For faults whose *effect* lives in the instrumented code itself —
+    e.g. ``distill.corrupt`` zeroes the fold it just computed so the swap
+    installs garbage without any error surfacing. The supervisor cannot
+    see this class of failure; only downstream verification (the recall
+    probe) can — which is exactly what the guardrail tests need."""
+    plan = _ACTIVE
+    if plan is None:
+        return False
+    return plan.decide(point) is not None
 
 
 def torn_write(point: str, path: str) -> bool:

@@ -97,6 +97,33 @@ def main(argv=None):
     ap.add_argument("--chaos-seed", type=int, default=1234,
                     help="FaultPlan seed for --chaos (CI pins this so a "
                          "failure reproduces locally from the seed alone)")
+    ap.add_argument("--autopilot", action="store_true",
+                    help="hands-off mode (DESIGN.md §16): attach a "
+                         "LifecycleController and tick it once per query "
+                         "batch — size-tiered merges, the distill ladder "
+                         "and the recall guardrail run from observed "
+                         "telemetry, no explicit compact/distill calls. "
+                         "Implies a mutable store; per-batch mutation churn "
+                         "(--churn-docs) exercises the loop")
+    ap.add_argument("--churn-docs", type=int, default=8, metavar="K",
+                    help="--autopilot: per query batch, delete K/2 live "
+                         "docs and ingest K fresh ones (sustained churn "
+                         "the controller must absorb; 0 = no churn)")
+    ap.add_argument("--autopilot-fanout", type=int, default=4,
+                    help="--autopilot: segments per size tier before that "
+                         "tier merges (ControllerPolicy.tier_fanout)")
+    ap.add_argument("--autopilot-distill", default=None, metavar="N1,N2,...",
+                    help="--autopilot: width ladder for controller-driven "
+                         "distillation (default: distillation off)")
+    ap.add_argument("--autopilot-budget", type=int, default=None,
+                    metavar="BYTES",
+                    help="--autopilot: sealed-slab memory budget gating the "
+                         "distill ladder (default: pressure unconditional "
+                         "once a ladder is given)")
+    ap.add_argument("--autopilot-max-segments", type=int, default=None,
+                    help="gate: nonzero exit if the sealed segment count "
+                         "ends above this (the bounded-segment-count claim, "
+                         "CI-checked)")
     ap.add_argument("--check-recall", action="store_true", default=True)
     ap.add_argument("--metrics-json", default=None, metavar="PATH",
                     help="write the final SketchEngine.metrics() snapshot "
@@ -131,8 +158,13 @@ def main(argv=None):
     spec = DATASETS[args.dataset]
     idx, lens = generate_corpus(spec, seed=0)
     n = idx.shape[0]
+    if args.autopilot and args.seal_rows is None:
+        # hands-off mode needs segments to manage; a never-sealing head
+        # would give the controller nothing to do
+        args.seal_rows = max(n // 16, 64)
     mutable = (args.mutate_rate > 0.0 or args.ttl is not None
-               or args.distill is not None or args.prefilter)
+               or args.distill is not None or args.prefilter
+               or args.autopilot)
     print(f"corpus: {n} docs, d={spec.d}, psi={spec.max_nnz}"
           + (f", mutate-rate={args.mutate_rate}" if mutable else ""))
 
@@ -285,6 +317,43 @@ def main(argv=None):
     else:  # no mutation phase: the catalog is the corpus, verbatim
         surv_ids, surv_rows = np.arange(n), idx
 
+    controller = None
+    churn_rng = churn_pool = None
+    churn_cursor = 0
+    if args.autopilot:
+        from repro.engine import ControllerPolicy, LifecycleController
+        from repro.obs.probe import RecallProbe
+
+        ap_widths = (tuple(int(w) for w in args.autopilot_distill.split(",") if w)
+                     if args.autopilot_distill else ())
+        cpolicy = ControllerPolicy(
+            tier_min_rows=max(args.seal_rows, 1),
+            tier_fanout=args.autopilot_fanout,
+            distill_widths=ap_widths,
+            memory_budget=args.autopilot_budget,
+            # ages are measured in ingest/batch ticks here, like TTL
+            cold_age=4.0,
+            probe_baseline=args.probe_baseline,
+            probe_tol=args.probe_tol,
+            probe_interval=4.0 if args.probe else None,
+        )
+        probe = (RecallProbe(engine, k=args.topk, sample=args.probe, seed=0)
+                 if args.probe else None)
+
+        def _catalog():
+            ids_ = np.asarray(sorted(contents))
+            return ids_, np.stack([contents[int(g)] for g in ids_])
+
+        controller = LifecycleController(engine, cpolicy, probe=probe,
+                                         probe_feed=_catalog)
+        churn_rng = np.random.default_rng(5)
+        churn_pool, _ = generate_corpus(spec, seed=2)
+        print(f"autopilot: controller armed (tier_min_rows="
+              f"{cpolicy.tier_min_rows}, fanout={cpolicy.tier_fanout}, "
+              f"distill={list(ap_widths) or 'off'}, "
+              f"churn={args.churn_docs} docs/batch, "
+              f"probe={'on' if probe else 'off'})")
+
     rng = np.random.default_rng(1)
     n_queries = min(args.queries, len(surv_ids))
     if n_queries < args.queries:
@@ -346,6 +415,28 @@ def main(argv=None):
                 chaos_saves += 1
                 engine.store.save(chaos_mgr, step=chaos_saves,
                                   blocking=False)
+        if controller is not None:
+            now_bi = float(serve_now + bi)
+            if args.churn_docs:
+                # sustained churn: the mutation stream the controller must
+                # absorb without segment count growing unboundedly
+                live = sorted(contents)
+                k_del = min(args.churn_docs // 2,
+                            max(len(live) - args.topk, 0))
+                if k_del > 0:
+                    dead = churn_rng.choice(live, k_del, replace=False)
+                    engine.delete([int(g) for g in dead])
+                    for g in dead:
+                        contents.pop(int(g))
+                        born.pop(int(g), None)
+                take = churn_pool[churn_cursor : churn_cursor + args.churn_docs]
+                if len(take):
+                    new_ids = engine.add(jnp.asarray(take), now=now_bi)
+                    for j, g in enumerate(new_ids):
+                        contents[int(g)] = take[j]
+                        born[int(g)] = now_bi
+                    churn_cursor += len(take)
+            controller.tick(now=now_bi)
         qb = jnp.asarray(queries[s : s + args.batch])
         if mesh is not None:
             scores, ids = engine.query_sharded(mesh, axis, qb, args.topk,
@@ -372,6 +463,33 @@ def main(argv=None):
     t_serve = time.perf_counter() - t0
     print(f"serve: {args.queries} queries in {t_serve:.2f}s "
           f"({args.queries / t_serve:.0f} q/s, batch={args.batch})")
+    autopilot_ok = True
+    if controller is not None:
+        # settle: drain the action cascade (a merge can unblock the next
+        # tier) so the segment-count gate measures steady state, then
+        # refresh the catalog — churn moved it under the probe/recall
+        settle_now = float(serve_now + args.queries / max(args.batch, 1) + 1)
+        for i in range(4):
+            engine.store.wait_compaction()  # supervised: never raises
+            r = controller.tick(now=settle_now + i)
+            if r is None or r["action"] is None:
+                break
+        engine.store.wait_compaction()
+        surv_ids = np.asarray(sorted(contents))
+        surv_rows = np.stack([contents[int(g)] for g in surv_ids])
+        cs = controller.controller_state()
+        nseg = len(engine.store.sealed)
+        print(f"autopilot: {cs['ticks']} tick(s): {cs['merges']} merge(s), "
+              f"{cs['distills']} distill(s), {cs['probes']} probe "
+              f"launch(es), {cs['guardrail_trips']} guardrail trip(s), "
+              f"state={cs['state']}; {nseg} sealed segment(s), "
+              f"live={engine.store.size}")
+        if args.autopilot_max_segments is not None:
+            autopilot_ok = nseg <= args.autopilot_max_segments
+            print(f"autopilot: segment count {nseg} "
+                  f"{'<=' if autopilot_ok else '>'} gate "
+                  f"{args.autopilot_max_segments}"
+                  + ("" if autopilot_ok else " — GATE FAILED"))
     metrics_snap = engine.metrics(now=serve_now)  # one §14 snapshot feeds
     if args.prefilter and metrics_snap.get("prefilter") is not None:
         st = metrics_snap["prefilter"]  # ... the whole report below
@@ -430,8 +548,12 @@ def main(argv=None):
     if args.probe:
         from repro.obs.probe import RecallProbe
 
-        pr = RecallProbe(engine, k=args.topk, sample=args.probe, seed=0)
-        if pr.launch(surv_ids, surv_rows, queries=queries):
+        # reuse the controller's probe when autopilot armed one — the gate
+        # then reads the same gauge the guardrail watched all run
+        pr = (controller.probe
+              if controller is not None and controller.probe is not None
+              else RecallProbe(engine, k=args.topk, sample=args.probe, seed=0))
+        if pr.running or pr.launch(surv_ids, surv_rows, queries=queries):
             got = pr.wait(now=serve_now)
             if got is None:
                 print("probe: ground-truth job failed — no reading")
@@ -475,6 +597,9 @@ def main(argv=None):
               f"{len(snap['lifecycle']['segments'])} segment(s))")
     if not probe_ok:
         raise SystemExit("probe recall gate failed (see 'probe:' lines above)")
+    if not autopilot_ok:
+        raise SystemExit("autopilot segment-count gate failed "
+                         "(see 'autopilot:' lines above)")
     return recall
 
 

@@ -2,6 +2,7 @@ import os
 import subprocess
 import sys
 
+import numpy as np
 import pytest
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
@@ -28,3 +29,90 @@ def run_multidevice(code: str, n_devices: int = 8, timeout: int = 600) -> str:
 @pytest.fixture(scope="session")
 def multidevice():
     return run_multidevice
+
+
+# --------------------------------------------------------- shared builders
+# One seeded corpus walk instead of a copy-pasted _fixture per module:
+# test_segments / test_placement / test_faults / test_lifecycle all build
+# the same (cfg, mapping, idx) triple and the same multi-segment engine.
+
+def corpus(seed=0, rho=0.05, dataset="tiny"):
+    """(cfg, mapping, idx): the tiny synthetic corpus plus a BinSketch
+    config sized from its sparsity and the shared PRNGKey(0) mapping."""
+    import jax
+
+    from repro.core import BinSketchConfig, make_mapping
+    from repro.data.synthetic import DATASETS, generate_corpus
+
+    spec = DATASETS[dataset]
+    idx, lens = generate_corpus(spec, seed=seed)
+    cfg = BinSketchConfig.from_sparsity(spec.d, int(lens.max()), rho)
+    mapping = make_mapping(cfg, jax.random.PRNGKey(0))
+    return cfg, mapping, idx
+
+
+def multi_segment_engine(cfg, mapping, idx, n=96, seal_rows=24,
+                         backend="oracle", supervisor=None, band_policy=None,
+                         clock=None, now=0.0):
+    """A mutable engine whose first ``n`` corpus rows are sealed into
+    ``n // seal_rows`` segments — the setup block formerly hand-rolled in
+    test_placement and test_faults (their two variants merged: either may
+    pass a supervisor, a band policy, a clock, or birth stamps)."""
+    import jax.numpy as jnp
+
+    from repro.engine import SketchEngine
+
+    eng = SketchEngine.build(cfg, mapping, backend=backend, mutable=True,
+                             seal_rows=seal_rows, supervisor=supervisor,
+                             band_policy=band_policy, clock=clock)
+    for s in range(0, n, seal_rows):
+        eng.add(jnp.asarray(idx[s : s + seal_rows]), now=float(now))
+    return eng
+
+
+class Workload:
+    """Seeded workload generator: Zipfian query picks over the live
+    catalog plus a scripted mutation stream, all driven by one
+    ``default_rng`` so a scenario replays identically from its seed.
+
+    ``contents`` throughout is the test-side ground truth: a dict of
+    ``global id -> raw index row`` that mutations keep in sync with the
+    engine, so a fresh rebuild over ``sorted(contents)`` is always the
+    reference answer (the idiom test_segments' ``_shadow_equal`` and the
+    property suite already use)."""
+
+    def __init__(self, idx, seed=0, start=0):
+        self.idx = np.asarray(idx)
+        self.rng = np.random.default_rng(seed)
+        self.cursor = int(start)
+
+    def fresh_rows(self, n):
+        """The next ``n`` unused corpus rows (each global id must carry
+        unique content or rebuild-equivalence checks go blind)."""
+        rows = self.idx[self.cursor : self.cursor + n]
+        if len(rows) < n:
+            raise IndexError(
+                f"workload corpus exhausted at row {self.cursor} "
+                f"(have {len(self.idx)}, asked for {n} more)")
+        self.cursor += n
+        return rows
+
+    def query_picks(self, contents, n, s=1.2):
+        """``n`` Zipfian draws over the live catalog: rank 1 (smallest
+        global id — the oldest survivor) is hottest, the tail is cold.
+        Returns (rows, ids); ids may repeat — that is the point."""
+        ids = sorted(contents)
+        ranks = np.arange(1, len(ids) + 1, dtype=np.float64)
+        p = ranks ** -float(s)
+        p /= p.sum()
+        pick = self.rng.choice(len(ids), size=n, p=p)
+        return (np.stack([contents[ids[i]] for i in pick]),
+                [ids[i] for i in pick])
+
+    def victims(self, contents, n, exclude=()):
+        """``n`` distinct live ids to delete, uniform over the catalog
+        (minus ``exclude`` — e.g. ids a scenario wants kept hot)."""
+        ids = [g for g in sorted(contents) if g not in set(exclude)]
+        n = min(n, len(ids))
+        pick = self.rng.choice(len(ids), size=n, replace=False)
+        return [ids[i] for i in pick]

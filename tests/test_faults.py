@@ -27,13 +27,16 @@ from repro.core import BinSketchConfig, make_mapping
 from repro.data.synthetic import DATASETS, generate_corpus
 from repro.engine import (
     BandPolicy,
+    ControllerPolicy,
     DistillPolicy,
     JobSupervisor,
+    LifecycleController,
     SegmentedStore,
     SketchEngine,
     SupervisionPolicy,
 )
 from repro.engine.testing import assert_topk_equivalent, topk_truth
+from repro.obs.probe import RecallProbe
 
 SPEC = DATASETS["tiny"]
 
@@ -47,21 +50,8 @@ def _disarm():
     faults.clear()
 
 
-def _fixture(seed=0, rho=0.05):
-    idx, lens = generate_corpus(SPEC, seed=seed)
-    cfg = BinSketchConfig.from_sparsity(SPEC.d, int(lens.max()), rho)
-    mapping = make_mapping(cfg, jax.random.PRNGKey(0))
-    return cfg, mapping, idx
-
-
-def _multi_segment_engine(cfg, mapping, idx, n=96, seal_rows=24,
-                          supervisor=None, band_policy=None):
-    eng = SketchEngine.build(cfg, mapping, backend="oracle", mutable=True,
-                             seal_rows=seal_rows, supervisor=supervisor,
-                             band_policy=band_policy)
-    for s in range(0, n, seal_rows):
-        eng.add(jnp.asarray(idx[s : s + seal_rows]))
-    return eng
+from conftest import corpus as _fixture
+from conftest import multi_segment_engine as _multi_segment_engine
 
 
 # ------------------------------------------------------------- fault plans
@@ -487,3 +477,81 @@ def test_injected_faults_show_as_metric_deltas():
         assert "band_lookup" in obs_trace.active().last()["degraded"]
     finally:
         obs.disable()
+
+
+# ----------------------------------------------------- lifecycle controller
+def test_controller_tick_failures_quarantine_without_stalling_serving():
+    """A controller tick that raises (here: the probe-feed callback dies)
+    is recorded by the supervisor and never reaches serving; consecutive
+    failures quarantine the ("lifecycle", ("tick",)) pair — further ticks
+    are refused, not run — and a healthy tick after probation clears it."""
+    cfg, mapping, idx = _fixture()
+    t = [0.0]  # injectable clock: probation windows advance on demand
+    sup = JobSupervisor(
+        SupervisionPolicy(max_retries=0, quarantine_after=2, probation=30.0),
+        clock=lambda: t[0],
+    )
+    eng = _multi_segment_engine(cfg, mapping, idx, supervisor=sup)
+    probe = RecallProbe(eng, clock=lambda: t[0])
+
+    def bad_feed():
+        raise RuntimeError("catalog service down")
+
+    ctl = LifecycleController(
+        eng, ControllerPolicy(probe_interval=1.0),
+        probe=probe, probe_feed=bad_feed, clock=lambda: t[0])
+    q = jnp.asarray(idx[100:104])
+    for _ in range(2):
+        t[0] += 2.0  # past the probe interval: the feed gets consulted
+        assert ctl.tick() is None  # recorded, not raised
+        eng.query(q, 3)  # serving is unaffected between failing ticks
+    assert ctl.failed_ticks == 2
+    h = sup.health()
+    assert h["jobs"]["lifecycle"]["failed"] == 2
+    assert h["quarantined"] and h["quarantined"][0]["op"] == "lifecycle"
+    t[0] += 2.0
+    assert ctl.tick() is None  # refused inside probation, body never runs
+    assert sup.health()["jobs"]["lifecycle"]["refused"] == 1
+    assert ctl.failed_ticks == 3
+    # the feed recovers and probation lapses: the probe tick is admitted,
+    # succeeds, and clears the quarantine — the loop heals itself
+    ctl.probe_feed = lambda: (np.arange(32), idx[:32])
+    t[0] = 60.0
+    r = ctl.tick()
+    assert r is not None and r["state"] == "steady"
+    assert sup.health()["quarantined"] == []
+    assert ctl.ticks >= 1 and eng.metrics()["controller"]["failed_ticks"] == 3
+
+
+def test_controller_hung_merge_abandoned_then_tier_retried():
+    """A merge the controller launched hangs (injected delay past the
+    watchdog deadline): the supervisor abandons it on a later tick's poll,
+    nothing swaps, and the same tick re-launches the still-over-fanout
+    tier — which completes once the transient hang has cleared."""
+    cfg, mapping, idx = _fixture()
+    sup = JobSupervisor(SupervisionPolicy(max_retries=3, deadline=0.05))
+    eng = _multi_segment_engine(cfg, mapping, idx, n=96, seal_rows=24,
+                                supervisor=sup)  # 4 segments == fanout
+    ctl = LifecycleController(eng, ControllerPolicy(tier_min_rows=24))
+    q = jnp.asarray(idx[100:104])
+    with faults.scoped(faults.FaultPlan(
+        {"compact.work": faults.FaultSpec("delay", delay_s=0.5, times=1)}
+    )):
+        r = ctl.tick(now=1.0)
+        assert r["action"]["kind"] == "merge"  # launched into the hang
+        deadline = time.time() + 5.0
+        while time.time() < deadline:
+            time.sleep(0.08)
+            eng.query(q, 3)  # serving never blocks on the hung worker
+            r = ctl.tick(now=2.0)
+            if sup.health()["abandoned"]:
+                break
+        h = sup.health()
+        assert h["abandoned"] == 1
+        assert h["jobs"]["compact"]["retries"] == 0  # hangs are not retried
+        assert r["action"]["kind"] == "merge", \
+            "the abandoning tick must re-launch the over-fanout tier"
+    assert eng.store.wait_compaction() is not None
+    assert len(eng.store.sealed) == 1
+    assert eng.store.sealed[0].n_live == 96
+    assert ctl.merges == 2

@@ -1,0 +1,492 @@
+"""Deterministic simulation suite for the autonomous lifecycle controller
+(engine/lifecycle.py, DESIGN.md §16): hours of simulated traffic scripted
+on a ManualClock in milliseconds. Scenarios: size-tiered merges keep the
+segment count bounded under sustained churn (serving bit-identical to a
+fresh rebuild over survivors at every checkpoint), cold segments distill
+while hot ones stay at full width, an injected recall dip (faults
+corrupting a distill fold) trips the guardrail — halting distillation and
+abandoning the in-flight job — and a recovered reading clears it. Plus a
+hypothesis property test: any interleaving of controller ticks and
+mutations leaves queries equal to a fresh rebuild over survivors."""
+
+import math
+import threading
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import Workload, corpus, multi_segment_engine
+from repro import faults
+from repro.data.synthetic import DATASETS
+from repro.engine import (
+    ControllerPolicy,
+    DistillPolicy,
+    LifecycleController,
+    SketchEngine,
+    SketchStore,
+    get_backend,
+)
+from repro.engine.testing import assert_topk_equivalent, topk_truth
+from repro.obs.clock import ManualClock
+from repro.obs.probe import RecallProbe
+
+SPEC = DATASETS["tiny"]
+CFG, MAPPING, IDX = corpus()
+
+
+@pytest.fixture(autouse=True)
+def _disarm():
+    yield
+    faults.clear()
+
+
+def _rebuild_equal(engine, contents, k=5, n_queries=8, seed=11):
+    """Engine == fresh batch build over the shadow catalog: scores
+    allclose, ids equal except at provable score ties (testing.py)."""
+    surv = np.asarray(sorted(contents))
+    rows = np.stack([contents[int(g)] for g in surv])
+    rng = np.random.default_rng(seed)
+    pick = rng.choice(len(surv), min(n_queries, len(surv)), replace=False)
+    q = jnp.asarray(rows[pick])
+    be = get_backend("oracle")
+    fresh = SketchEngine(
+        SketchStore.from_indices(engine.cfg, engine.store.mapping,
+                                 jnp.asarray(rows), backend=be),
+        be, "jaccard")
+    sc_m, id_m = SketchEngine(engine.store, be, "jaccard").query(q, k)
+    sc_f, id_f = fresh.query(q, k)
+    id_f = np.where(np.asarray(id_f) >= 0,
+                    surv[np.maximum(np.asarray(id_f), 0)], -1)
+    assert_topk_equivalent(
+        (np.asarray(sc_m), np.asarray(id_m)),
+        (np.asarray(sc_f), id_f),
+        truth=topk_truth(fresh, q, id_map=surv),
+        err_msg="controller-managed store vs fresh rebuild",
+    )
+
+
+def _settle(ctl, clk, max_ticks=6):
+    """Tick until the controller finds nothing to do, driving each
+    launched job to completion — the sim's deterministic stand-in for the
+    serve loop's heartbeat cadence."""
+    for _ in range(max_ticks):
+        r = ctl.tick(now=clk())
+        assert r is not None, "tick must not fail in a healthy sim"
+        ctl.engine.store.wait_compaction()
+        if r["action"] is None:
+            return r
+        clk.advance(0.25)
+    raise AssertionError(f"controller did not settle in {max_ticks} ticks")
+
+
+# ------------------------------------------------------------ policy basics
+def test_policy_validation_and_tier_math():
+    with pytest.raises(ValueError, match="tier_min_rows"):
+        ControllerPolicy(tier_min_rows=0)
+    with pytest.raises(ValueError, match="tier_factor"):
+        ControllerPolicy(tier_factor=1.0)
+    with pytest.raises(ValueError, match="tier_fanout"):
+        ControllerPolicy(tier_fanout=1)
+    with pytest.raises(ValueError, match="tombstone_density"):
+        ControllerPolicy(tombstone_density=0.0)
+    p = ControllerPolicy(tier_min_rows=16, tier_factor=4.0,
+                        distill_widths=(64, 256, 128))
+    assert p.distill_widths == (256, 128, 64)  # applied descending
+    assert [p.tier(n) for n in (1, 16, 17, 63, 64, 256, 1024)] == \
+           [0, 0, 1, 1, 2, 3, 4]
+    # tiers are monotone in live count
+    tiers = [p.tier(n) for n in range(1, 2000)]
+    assert tiers == sorted(tiers)
+
+
+def test_controller_requires_mutable_engine():
+    cfg, mapping, idx = corpus()
+    eng = SketchEngine.build(cfg, mapping, jnp.asarray(idx[:8]),
+                             backend="oracle")
+    with pytest.raises(TypeError, match="mutable"):
+        LifecycleController(eng)
+
+
+def test_tick_reports_and_metrics_surface():
+    """A quiet store ticks to no action; controller_state rides along in
+    SketchEngine.metrics() with the policy snapshot embedded."""
+    cfg, mapping, idx = corpus()
+    clk = ManualClock()
+    eng = multi_segment_engine(cfg, mapping, idx, n=32, seal_rows=16,
+                               clock=clk)
+    ctl = LifecycleController(eng, ControllerPolicy(), clock=clk)
+    r = ctl.tick(now=1.0)
+    assert r == {"at": 1.0, "state": "steady", "swapped": False,
+                 "action": None, "segments": 2, "tombstone_density": 0.0}
+    state = eng.metrics()["controller"]
+    assert state["ticks"] == 1 and state["failed_ticks"] == 0
+    assert state["state"] == "steady" and state["last_tick_at"] == 1.0
+    assert state["policy"]["tier_fanout"] == 4
+    assert eng.supervisor.health()["jobs"]["lifecycle"]["succeeded"] == 1
+
+
+# ----------------------------------------------------------- merge triggers
+def test_occupancy_merge_triggers_at_fanout():
+    """tier_fanout clean same-tier segments merge into one; below fanout
+    nothing happens. No tombstones needed — occupancy alone triggers."""
+    cfg, mapping, idx = corpus()
+    clk = ManualClock()
+    eng = multi_segment_engine(cfg, mapping, idx, n=48, seal_rows=16,
+                               clock=clk)
+    ctl = LifecycleController(
+        eng, ControllerPolicy(tier_min_rows=16, tier_fanout=4), clock=clk)
+    assert ctl.tick(now=0.5)["action"] is None  # 3 segments < fanout
+    eng.add(jnp.asarray(idx[48:64]))  # seals the 4th
+    r = ctl.tick(now=1.0)
+    assert r["action"]["kind"] == "merge"
+    assert r["action"]["trigger"] == "occupancy"
+    assert sorted(r["action"]["segments"]) == [0, 1, 2, 3]
+    eng.store.wait_compaction()
+    assert len(eng.store.sealed) == 1
+    assert eng.store.sealed[0].n_live == 64
+    assert ctl.merges == 1
+
+
+def test_tombstone_density_merge_triggers_below_fanout():
+    """A single dense-tombstoned segment merges on the density trigger
+    even though its bucket is nowhere near fanout occupancy."""
+    cfg, mapping, idx = corpus()
+    clk = ManualClock()
+    eng = multi_segment_engine(cfg, mapping, idx, n=16, seal_rows=16,
+                               clock=clk)
+    ctl = LifecycleController(
+        eng, ControllerPolicy(tombstone_density=0.25), clock=clk)
+    eng.delete(list(range(2)))
+    assert ctl.tick(now=1.0)["action"] is None  # 2/16 < 0.25
+    eng.delete(list(range(2, 6)))
+    r = ctl.tick(now=2.0)  # 6/16 >= 0.25
+    assert r["action"]["kind"] == "merge"
+    assert r["action"]["trigger"] == "tombstones"
+    eng.store.wait_compaction()
+    assert eng.store.sealed[0].n_live == 10
+    assert eng.store.lifecycle_snapshot()["tombstone_density"] == 0.0
+
+
+# -------------------------------------------------- the churn simulation
+def test_bounded_segments_under_sustained_churn():
+    """The headline scenario: rounds of ingest + random deletes + Zipfian
+    reads, a controller tick per round. Size-tiered merges must keep the
+    sealed-segment count under the F·ceil(log_F S) bound even though S
+    segments were sealed in total, and at every checkpoint the store
+    answers exactly like a fresh rebuild over the surviving docs."""
+    cfg, mapping, idx = corpus()
+    clk = ManualClock()
+    pol = ControllerPolicy(tier_min_rows=16, tier_factor=4.0, tier_fanout=4,
+                          tombstone_density=0.5)
+    eng = multi_segment_engine(cfg, mapping, idx, n=64, seal_rows=16,
+                               clock=clk)
+    contents = {i: idx[i] for i in range(64)}
+    wl = Workload(idx, seed=7, start=64)
+    ctl = LifecycleController(eng, pol, clock=clk)
+    sealed_total = 4
+    for rnd in range(12):
+        rows = wl.fresh_rows(16)
+        ids = eng.add(jnp.asarray(rows), now=clk())
+        contents.update({int(g): rows[j] for j, g in enumerate(ids)})
+        sealed_total += 1
+        victims = wl.victims(contents, 6)
+        eng.delete(victims)
+        for g in victims:
+            contents.pop(g)
+        q, _ = wl.query_picks(contents, 4)
+        eng.query(jnp.asarray(q), 5)
+        clk.advance(1.0)
+        _settle(ctl, clk)
+        bound = pol.tier_fanout * math.ceil(
+            math.log(sealed_total, pol.tier_fanout))
+        assert len(eng.store.sealed) <= bound, (
+            f"round {rnd}: {len(eng.store.sealed)} sealed segments "
+            f"exceed the size-tier bound {bound} (S={sealed_total})")
+        if rnd % 3 == 2:
+            _rebuild_equal(eng, contents, seed=100 + rnd)
+    assert ctl.merges >= 2, "churn at this rate must have forced merges"
+    assert ctl.ticks >= 12 and ctl.failed_ticks == 0
+    assert eng.store.size == len(contents)
+    state = eng.metrics()["controller"]
+    assert state["state"] == "steady"
+    assert state["last_action"]["kind"] == "merge"
+
+
+# ----------------------------------------------------------- distill ladder
+def test_cold_segments_distill_hot_segments_keep_width():
+    """Coldness is a hits *delta*: a segment nobody queried since the last
+    tick folds down the ladder; one that took reads stays full-width no
+    matter how old. The first tick never distills (no baseline yet)."""
+    cfg, mapping, idx = corpus()
+
+    def build():
+        clk = ManualClock()
+        eng = multi_segment_engine(cfg, mapping, idx, n=32, seal_rows=16,
+                                   clock=clk)
+        ctl = LifecycleController(
+            eng,
+            ControllerPolicy(distill_widths=(128,), cold_age=5.0),
+            clock=clk)
+        return clk, eng, ctl
+
+    # cold path: no reads between ticks -> both segments fold to 128
+    clk, eng, ctl = build()
+    clk.advance(20.0)
+    assert ctl.tick(now=clk())["action"] is None, \
+        "first tick has no hits baseline — everything counts as hot"
+    clk.advance(1.0)
+    r = ctl.tick(now=clk())
+    assert r["action"]["kind"] == "distill"
+    assert sorted(r["action"]["segments"]) == [0, 1]
+    eng.store.wait_compaction()
+    assert {s.n_bins for s in eng.store.sealed} == {128}
+    assert ctl.distills == 1
+
+    # hot path: reads land between ticks -> same age, no distill
+    clk, eng, ctl = build()
+    clk.advance(20.0)
+    ctl.tick(now=clk())
+    eng.query(jnp.asarray(idx[200:204]), 3)  # exhaustive scan hits both
+    clk.advance(1.0)
+    assert ctl.tick(now=clk())["action"] is None
+    assert ctl.distills == 0
+    # n_bins is None while a segment still sits at the base width
+    assert {s.n_bins for s in eng.store.sealed} == {None}
+
+    # young path: cold by hits but under cold_age -> no distill
+    clk, eng, ctl = build()
+    ctl.tick(now=1.0)
+    assert ctl.tick(now=2.0)["action"] is None  # age 2 < cold_age 5
+    assert ctl.distills == 0
+
+
+def test_memory_budget_gates_distill_pressure():
+    """The ladder engages only while sealed slabs exceed the budget; a
+    roomy budget leaves cold segments alone."""
+    cfg, mapping, idx = corpus()
+
+    def build(budget):
+        clk = ManualClock()
+        eng = multi_segment_engine(cfg, mapping, idx, n=32, seal_rows=16,
+                                   clock=clk)
+        ctl = LifecycleController(
+            eng,
+            ControllerPolicy(distill_widths=(128,), cold_age=1.0,
+                             memory_budget=budget),
+            clock=clk)
+        clk.advance(10.0)
+        ctl.tick(now=clk())
+        clk.advance(1.0)
+        return clk, eng, ctl
+
+    clk, eng, ctl = build(budget=1 << 30)
+    assert ctl.tick(now=clk())["action"] is None  # under budget: no action
+    assert ctl.distills == 0
+
+    clk, eng, ctl = build(budget=1)
+    r = ctl.tick(now=clk())  # over budget: cold set folds
+    assert r["action"]["kind"] == "distill"
+    eng.store.wait_compaction()
+    assert {s.n_bins for s in eng.store.sealed} == {128}
+
+
+# -------------------------------------------------------- recall guardrail
+def test_guardrail_halts_distill_abandons_inflight_and_recovers():
+    """The guardrail state machine, driven by scripted probe readings: a
+    dip below baseline - tol flips to halted (degraded mode recorded, the
+    in-flight distill abandoned via the supervisor, further distills
+    refused), merges keep running while halted (lossless), and a
+    recovered reading clears everything."""
+    cfg, mapping, idx = corpus()
+    clk = ManualClock()
+    eng = multi_segment_engine(cfg, mapping, idx, n=32, seal_rows=16,
+                               clock=clk)
+    probe = RecallProbe(eng, clock=clk)
+    ctl = LifecycleController(
+        eng,
+        ControllerPolicy(distill_widths=(128,), cold_age=1.0,
+                         probe_baseline=0.9, probe_tol=0.05),
+        probe=probe, clock=clk)
+    probe.last_recall = 0.92
+    assert ctl.tick(now=1.0)["state"] == "steady"
+
+    # pin a distill in flight, then let the dip land
+    hold = threading.Event()
+    assert eng.store.distill_async(DistillPolicy(widths=(128,)), now=1.0,
+                                   _hold=hold)
+    sealed_before = list(eng.store.sealed)
+    probe.last_recall = 0.80  # < 0.9 - 0.05
+    r = ctl.tick(now=2.0)
+    assert r["state"] == "halted"
+    assert ctl.guardrail_trips == 1 and ctl.abandoned_distills == 1
+    assert eng.store._compaction is None, "in-flight distill must be dropped"
+    h = eng.supervisor.health()
+    assert h["abandoned"] == 1
+    assert [d["component"] for d in h["degraded"]] == ["lifecycle_distill"]
+    hold.set()  # zombie worker finishes; its fold must never swap in
+    time.sleep(0.05)
+    clk.advance(5.0)
+    assert ctl.tick(now=7.0)["action"] is None, "halted: cold set stays put"
+    assert eng.store.sealed == sealed_before
+    assert ctl.distills == 0
+
+    # merges are lossless — still allowed while halted
+    for s in range(32, 64, 16):
+        eng.add(jnp.asarray(idx[s : s + 16]), now=clk())
+    r = ctl.tick(now=8.0)
+    assert r["state"] == "halted" and r["action"]["kind"] == "merge"
+    eng.store.wait_compaction()
+
+    # recovery clears the halt and the degraded record
+    probe.last_recall = 0.91
+    r = ctl.tick(now=9.0)
+    assert r["state"] == "steady"
+    assert eng.supervisor.health()["degraded"] == []
+    state = eng.metrics()["controller"]
+    assert state["guardrail_trips"] == 1 and state["halted_since"] is None
+
+
+def test_guardrail_trips_on_fault_corrupted_distill_end_to_end():
+    """The acceptance dip, end to end: a fault zeroes a distill fold, the
+    corrupted segments swap in, a real probe run measures the recall
+    collapse against exact ground truth, and the next tick halts further
+    distillation while serving keeps answering."""
+    cfg, mapping, idx = corpus()
+    clk = ManualClock()
+    eng = multi_segment_engine(cfg, mapping, idx, n=64, seal_rows=16,
+                               clock=clk)
+    contents = {i: idx[i] for i in range(64)}
+    surv = np.asarray(sorted(contents))
+    rows = np.stack([contents[int(g)] for g in surv])
+    probe = RecallProbe(eng, k=5, sample=32, seed=3, clock=clk)
+    assert probe.launch(surv, rows)
+    baseline = probe.wait(now=clk())
+    assert baseline is not None and baseline > 0.5
+
+    # tier_fanout=8 keeps the 4 fresh segments out of occupancy-merge
+    # range: this scenario is about the distill path alone
+    ctl = LifecycleController(
+        eng,
+        ControllerPolicy(distill_widths=(64,), cold_age=1.0, tier_fanout=8,
+                         probe_baseline=baseline, probe_tol=0.05),
+        probe=probe, probe_feed=lambda: (surv, rows), clock=clk)
+    clk.advance(10.0)
+    ctl.tick(now=clk())
+    clk.advance(1.0)
+    with faults.scoped(faults.FaultPlan(
+        {"distill.corrupt": faults.FaultSpec("raise")}
+    )) as plan:
+        r = ctl.tick(now=clk())  # cold set distills; the fold is zeroed
+        assert r["action"]["kind"] == "distill"
+        eng.store.wait_compaction()
+        assert plan.counters()["fired"]["distill.corrupt"] >= 1
+    assert probe.launch(surv, rows)
+    dipped = probe.wait(now=clk())
+    assert dipped < baseline - 0.05, \
+        f"zeroed sketches must crater recall ({baseline:.3f} -> {dipped:.3f})"
+    clk.advance(1.0)
+    r = ctl.tick(now=clk())
+    assert r["state"] == "halted"
+    assert ctl.guardrail_trips == 1 and ctl.distills == 1
+    # serving never stops: queries still answer over the full catalog
+    sc, ids = eng.query(jnp.asarray(rows[:4]), 5)
+    assert np.asarray(ids).shape == (4, 5)
+    clk.advance(1.0)
+    assert ctl.tick(now=clk())["action"] is None, \
+        "no further distillation while halted"
+
+
+def test_controller_launches_probe_rounds_on_interval():
+    """With probe_interval set and a feed wired, ticks launch probe
+    rounds themselves and the readings land through tick polling."""
+    cfg, mapping, idx = corpus()
+    clk = ManualClock()
+    eng = multi_segment_engine(cfg, mapping, idx, n=32, seal_rows=16,
+                               clock=clk)
+    surv = np.arange(32)
+    rows = idx[:32]
+    probe = RecallProbe(eng, k=5, sample=16, seed=1, clock=clk)
+    ctl = LifecycleController(
+        eng, ControllerPolicy(probe_interval=4.0),
+        probe=probe, probe_feed=lambda: (surv, rows), clock=clk)
+    ctl.tick(now=0.0)
+    assert ctl.probes == 1 and probe.running
+    ctl.tick(now=1.0)
+    assert ctl.probes == 1, "within the interval: no relaunch"
+    deadline = time.time() + 5.0
+    while probe.running and time.time() < deadline:
+        clk.advance(1.0)
+        ctl.tick(now=clk())  # poll drives the truth job to landing
+        time.sleep(0.01)
+    assert probe.last_recall is not None and probe.runs == 1
+    clk.advance(8.0)
+    ctl.tick(now=clk())
+    assert ctl.probes == 2, "past the interval: next round launches"
+
+
+# ------------------------------------------------------ property: identity
+# guarded per-test (not module-level importorskip) so the simulation suite
+# above still runs where hypothesis isn't installed; CI's lifecycle-sim
+# job has it via requirements-dev.txt
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    st = None
+
+
+def _interleaving_scenario(data):
+    """Any interleaving of inserts, deletes, seals, clock advances and
+    controller ticks leaves the store answering exactly like a fresh
+    batch build over the survivors — the controller's merges are
+    invisible to queries (distillation off: widths=() keeps the
+    comparison width-exact)."""
+    clk = ManualClock()
+    eng = SketchEngine.build(CFG, MAPPING, backend="oracle", mutable=True,
+                             seal_rows=8, clock=clk)
+    ctl = LifecycleController(
+        eng,
+        ControllerPolicy(tier_min_rows=8, tier_fanout=3,
+                         tombstone_density=0.3),
+        clock=clk)
+    contents = {}
+    cursor = 0
+    for _ in range(data.draw(st.integers(4, 12))):
+        live = sorted(contents)
+        op = data.draw(st.sampled_from(
+            ["insert", "insert", "delete", "seal", "advance", "tick"]))
+        if op == "insert" or not live:
+            b = data.draw(st.integers(1, 6))
+            rows = IDX[cursor : cursor + b]
+            ids = eng.add(jnp.asarray(rows), now=clk())
+            contents.update({int(g): rows[j] for j, g in enumerate(ids)})
+            cursor += b
+        elif op == "delete":
+            g = data.draw(st.sampled_from(live))
+            eng.delete([g])
+            contents.pop(g)
+        elif op == "seal":
+            eng.seal()
+        elif op == "advance":
+            clk.advance(float(data.draw(st.integers(1, 10))))
+        else:
+            r = ctl.tick(now=clk())
+            assert r is not None
+            eng.store.wait_compaction()
+    _settle(ctl, clk, max_ticks=8)
+    assert ctl.failed_ticks == 0
+    assert eng.store.size == len(contents)
+    if contents:
+        _rebuild_equal(eng, contents, k=4, n_queries=4,
+                       seed=data.draw(st.integers(0, 99)))
+
+
+if st is not None:
+    test_interleaved_ticks_and_mutations_query_identical = settings(
+        max_examples=10, deadline=None
+    )(given(st.data())(_interleaving_scenario))
+else:
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_interleaved_ticks_and_mutations_query_identical():
+        """Visible skip (rather than silent absence) off-CI."""

@@ -22,23 +22,10 @@ from repro.engine import (
 )
 from repro.engine.testing import assert_topk_equivalent, topk_truth
 
+from conftest import corpus as _fixture
+from conftest import multi_segment_engine as _multi_segment_engine
+
 SPEC = DATASETS["tiny"]
-
-
-def _fixture(seed=0, rho=0.05):
-    idx, lens = generate_corpus(SPEC, seed=seed)
-    cfg = BinSketchConfig.from_sparsity(SPEC.d, int(lens.max()), rho)
-    mapping = make_mapping(cfg, jax.random.PRNGKey(0))
-    return cfg, mapping, idx
-
-
-def _multi_segment_engine(cfg, mapping, idx, n=96, seal_rows=24,
-                          backend="oracle"):
-    eng = SketchEngine.build(cfg, mapping, backend=backend, mutable=True,
-                             seal_rows=seal_rows)
-    for s in range(0, n, seal_rows):
-        eng.add(jnp.asarray(idx[s : s + seal_rows]))
-    return eng
 
 
 # ----------------------------------------------------------------- placer

@@ -18,14 +18,9 @@ from repro.core import (
 from repro.data.synthetic import DATASETS, generate_corpus
 from repro.engine import SegmentedStore, SketchEngine, SketchStore, get_backend
 
+from conftest import corpus as _fixture
+
 SPEC = DATASETS["tiny"]
-
-
-def _fixture(seed=0, rho=0.05):
-    idx, lens = generate_corpus(SPEC, seed=seed)
-    cfg = BinSketchConfig.from_sparsity(SPEC.d, int(lens.max()), rho)
-    mapping = make_mapping(cfg, jax.random.PRNGKey(0))
-    return cfg, mapping, idx
 
 
 def _pad_rows(rows, pad=96):
